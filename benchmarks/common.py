@@ -1,0 +1,50 @@
+"""Shared benchmark utilities: CSV emission + ASCII Pareto plots."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """The harness contract: ``name,us_per_call,derived`` CSV rows."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 3):
+    import jax
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats, out
+
+
+def ascii_pareto(points, front, width: int = 60, height: int = 14,
+                 title: str = "") -> str:
+    """Latency (x, s) vs throughput (y) scatter with the front marked."""
+    if not points:
+        return "(no points)"
+    lats = [p.latency_s for p in points]
+    thrs = [p.throughput for p in points]
+    lo_x, hi_x = min(lats), max(lats)
+    lo_y, hi_y = min(thrs), max(thrs)
+    dx = (hi_x - lo_x) or 1.0
+    dy = (hi_y - lo_y) or 1.0
+    grid = [[" "] * width for _ in range(height)]
+    fronts = {id(p) for p in front}
+
+    def put(p, ch):
+        x = int((p.latency_s - lo_x) / dx * (width - 1))
+        y = int((p.throughput - lo_y) / dy * (height - 1))
+        grid[height - 1 - y][x] = ch
+
+    for p in points:
+        put(p, "·")
+    for p in front:
+        put(p, "O")
+    lines = [title, f"thr {hi_y:8.2f} ┐"]
+    lines += ["".join(r) for r in grid]
+    lines.append(f"thr {lo_y:8.2f} ┘  lat {lo_x*1e3:.1f}ms … {hi_x*1e3:.1f}ms"
+                 "   (O = Pareto front)")
+    return "\n".join(lines)

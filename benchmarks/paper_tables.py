@@ -1,0 +1,177 @@
+"""Reproduction of every paper table/figure (one function each).
+
+Model-driven sweeps use the calibrated testbed (core.scenarios); the
+measured benches (fig2 wall-clock, fig7 backends) execute real
+partitioned pipelines on this host.  Each function returns a list of CSV
+rows for ``benchmarks.run`` and prints the human-readable artifact.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (CostTable, best_latency, best_throughput,
+                        hypervolume, pareto_front, sweep_2way)
+from repro.core import scenarios
+from repro.core.profiler import coefficient_of_variation, profile_wallclock
+from repro.models.cnn import zoo
+
+from .common import ascii_pareto, emit, timed
+
+CNNS = ("mobilenetv2", "resnet18", "inceptionv3", "resnet50", "alexnet",
+        "vgg16")
+BATCH = 8          # the paper's operating batch size
+
+
+# --------------------------------------------------------------------------- #
+def table1_models() -> list[str]:
+    """Table I: params / blocks / size."""
+    rows = []
+    print("\n== Table I: models ==")
+    print(f"{'model':14s} {'params':>12s} {'blocks':>7s} {'size MB':>8s}")
+    for name in CNNS:
+        m = zoo.get(name, num_classes=10)
+        g = m.block_graph()
+        n = m.param_count()
+        mb = g.total_weight_bytes / 1e6
+        print(f"{name:14s} {n:>12,} {len(m.blocks):>7d} {mb:>8.1f}")
+        rows.append(f"table1/{name},0.0,params={n};blocks={len(m.blocks)};"
+                    f"mb={mb:.1f}")
+    return rows
+
+
+def fig2_blockwise(measure: bool = True) -> list[str]:
+    """Fig. 2: block-wise execution times are heterogeneous."""
+    rows = []
+    print("\n== Fig 2: block-wise profiling (host CPU, 32x32) ==")
+    for name in ("mobilenetv2", "resnet18"):
+        m = zoo.get(name)
+        params = m.init(jax.random.PRNGKey(0))
+        names, fns = m.block_fns(params)
+        x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, 32, 32, 3))
+        t0 = time.perf_counter()
+        table = profile_wallclock("host", fns, names, lambda _: x, repeats=3)
+        wall = time.perf_counter() - t0
+        times = [table.get("host", n) for n in names]
+        cv = coefficient_of_variation(times)
+        peak = max(times)
+        print(f"{name}: CV of block times = {cv:.2f} "
+              f"(paper's finding: blocks are NOT equal); "
+              f"max block {peak*1e3:.1f} ms")
+        rows.append(f"fig2/{name},{wall/len(names)*1e6:.1f},cv={cv:.2f}")
+    return rows
+
+
+def _pareto_sweep(scen_name: str) -> list[str]:
+    rows = []
+    scen = scenarios.get(scen_name)
+    print(f"\n== Pareto frontiers ({scen_name}) ==")
+    for name in CNNS:
+        g = zoo.get(name).block_graph()
+        t0 = time.perf_counter()
+        pts = sweep_2way(g, scen.devices, scen.links[0], batch=BATCH)
+        dt = time.perf_counter() - t0
+        front = pareto_front(pts)
+        bt, bl = best_throughput(pts), best_latency(pts)
+        hv = hypervolume(pts, ref_latency=max(p.latency_s for p in pts) * 1.1)
+        print(f"{name:14s} front={len(front):2d}/{len(pts):2d} "
+              f"best-thr P{bt.partition[0]:<2d} {bt.throughput:8.2f} img/s | "
+              f"best-lat P{bl.partition[0]:<2d} {bl.latency_s*1e3:9.1f} ms")
+        rows.append(f"pareto/{scen_name}/{name},{dt/len(pts)*1e6:.1f},"
+                    f"front={len(front)};thr={bt.throughput:.2f};"
+                    f"lat_ms={bl.latency_s*1e3:.1f};hv={hv:.3f}")
+    # one visual
+    g = zoo.get("mobilenetv2").block_graph()
+    pts = sweep_2way(g, scen.devices, scen.links[0], batch=BATCH)
+    print(ascii_pareto(pts, pareto_front(pts),
+                       title=f"mobilenetv2 @ {scen_name}"))
+    return rows
+
+
+def fig3_pareto_pi_pi() -> list[str]:
+    return _pareto_sweep("pi_to_pi")
+
+
+def fig4_pareto_pi_gpu() -> list[str]:
+    return _pareto_sweep("pi_to_gpu")
+
+
+def fig56_duress() -> list[str]:
+    """Figs 5/6: 200 ms RTT + 5 Mbit/s shifts the whole frontier."""
+    rows = []
+    print("\n== Figs 5/6: network duress (200ms, 5Mbit/s) ==")
+    for scen_name in ("pi_to_pi", "pi_to_gpu"):
+        base = scenarios.get(scen_name)
+        dur = scenarios.duress(base)
+        for name in CNNS:
+            g = zoo.get(name).block_graph()
+            p_base = sweep_2way(g, base.devices, base.links[0], batch=BATCH)
+            p_dur = sweep_2way(g, dur.devices, dur.links[0], batch=BATCH)
+            bt_b, bt_d = best_throughput(p_base), best_throughput(p_dur)
+            shift = bt_b.throughput / max(bt_d.throughput, 1e-9)
+            moved = bt_b.partition != bt_d.partition
+            print(f"{scen_name:9s} {name:14s} thr {bt_b.throughput:8.2f} → "
+                  f"{bt_d.throughput:6.3f} img/s ({shift:6.1f}x) "
+                  f"opt split P{bt_b.partition[0]}→P{bt_d.partition[0]}"
+                  f"{'  *moved*' if moved else ''}")
+            rows.append(f"fig56/{scen_name}/{name},0.0,"
+                        f"degrade_x={shift:.1f};moved={moved}")
+    return rows
+
+
+def fig7_backends() -> list[str]:
+    """Fig. 7: RPC-like vs lightweight backend, measured on host."""
+    from repro.core.devices import Link
+    from repro.runtime.edge import EdgePipeline
+    rows = []
+    print("\n== Fig 7: communication backends (measured, host) ==")
+    m = zoo.get("mobilenetv2")
+    params = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, 64, 64, 3))
+    link = Link("lan", rtt_s=0.201e-3, bw_bytes_per_s=125e6)
+    res = {}
+    for backend in ("lightweight", "rpc"):
+        pipe = EdgePipeline(m, params, p=3, link=link, backend=backend)
+        r = pipe.measure(lambda: x, n_batches=8)
+        res[backend] = r
+        print(f"{backend:12s} latency {r.latency_s*1e3:7.1f} ms  "
+              f"throughput {r.throughput:6.1f} img/s  "
+              f"stage_exe {tuple(round(s*1e3,1) for s in r.stage_exe_s)} ms")
+        rows.append(f"fig7/{backend},{r.latency_s*1e6:.0f},"
+                    f"thr={r.throughput:.1f}")
+    lat_gain = 1 - res["lightweight"].latency_s / res["rpc"].latency_s
+    thr_gain = res["lightweight"].throughput / res["rpc"].throughput - 1
+    print(f"lightweight vs rpc: latency −{lat_gain*100:.0f}%  "
+          f"throughput +{thr_gain*100:.0f}%   (paper: −76% / +53%)")
+    rows.append(f"fig7/gain,0.0,lat_red={lat_gain:.2f};thr_gain={thr_gain:.2f}")
+    return rows
+
+
+def table23_breakdown() -> list[str]:
+    """Tables II/III: per-stage breakdown at notable Pareto points."""
+    rows = []
+    for scen_name, table in (("pi_to_pi", "II"), ("pi_to_gpu", "III")):
+        scen = scenarios.get(scen_name)
+        print(f"\n== Table {table}: breakdown ({scen_name}) ==")
+        print(f"{'model(split)':22s} {'s1_exe':>8s} {'s2_exe':>8s} "
+              f"{'net':>7s} {'thr':>8s}")
+        for name in CNNS:
+            g = zoo.get(name).block_graph()
+            pts = sweep_2way(g, scen.devices, scen.links[0], batch=BATCH)
+            front = pareto_front(pts)
+            picks = {best_throughput(pts).partition,
+                     best_latency(pts).partition}
+            for m in front:
+                if m.partition not in picks:
+                    continue
+                s1, s2 = m.stages
+                print(f"{name}(P{m.partition[0]:<3d})".ljust(22)
+                      + f" {s1.compute_s:8.3f} {s2.compute_s:8.3f}"
+                      f" {m.net_s:7.3f} {m.throughput:8.2f}")
+                rows.append(
+                    f"table23/{scen_name}/{name}/P{m.partition[0]},0.0,"
+                    f"s1={s1.compute_s:.3f};s2={s2.compute_s:.3f};"
+                    f"net={m.net_s:.3f};thr={m.throughput:.2f}")
+    return rows

@@ -1,0 +1,53 @@
+"""Benchmark harness — one function per paper table/figure, plus the
+beyond-paper pod-scale sweep.  Prints ``name,us_per_call,derived`` CSV
+(after the human-readable artifacts).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the measured (wall-clock) benches")
+    args = ap.parse_args()
+
+    from . import paper_tables as P
+    from . import tpu_pod_pareto as T
+
+    benches = {
+        "table1": P.table1_models,
+        "fig2": P.fig2_blockwise,
+        "fig3": P.fig3_pareto_pi_pi,
+        "fig4": P.fig4_pareto_pi_gpu,
+        "fig56": P.fig56_duress,
+        "fig7": P.fig7_backends,
+        "table23": P.table23_breakdown,
+        "pod_pareto": T.pod_pareto,
+    }
+    measured = {"fig2", "fig7"}
+    rows: list[str] = []
+    for name, fn in benches.items():
+        if args.only and args.only not in name:
+            continue
+        if args.quick and name in measured:
+            continue
+        try:
+            rows.extend(fn())
+        except Exception as e:  # surface but keep the harness going
+            print(f"[bench {name} FAILED] {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            rows.append(f"{name}/FAILED,0.0,{type(e).__name__}")
+
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Beyond-paper: ParetoPipe at pod scale — frontier of pipeline cuts for
+the 10 assigned LM archs on the 2-pod production mesh (DCN links), plus
+the duress analogue (congested DCN), from the same analytic block costs
+the dry-run roofline uses."""
+from __future__ import annotations
+
+import time
+
+import repro.configs as configs
+from repro.core import (best_latency, best_throughput, dp_front_kway,
+                        pareto_front)
+from repro.core import scenarios
+from repro.models.blocks_adapter import arch_block_graph
+
+from .common import emit
+
+
+def pod_pareto(seq: int = 4096, batch: int = 256, train: bool = True,
+               n_pods: int = 2) -> list[str]:
+    rows = []
+    base = scenarios.pods(n_pods)
+    cong = scenarios.pods_congested(n_pods)
+    print(f"\n== Pod-level ParetoPipe (seq={seq}, {n_pods} pods, "
+          f"{'train' if train else 'serve'}) ==")
+    print(f"{'arch':24s} {'cuts(DCN)':>12s} {'bound ms':>9s} "
+          f"{'cuts(congested)':>16s} {'bound ms':>9s} {'moved':>6s}")
+    for name in configs.ARCH_NAMES:
+        cfg = configs.get(name)
+        g = arch_block_graph(cfg, seq, train=train)
+        t0 = time.perf_counter()
+        f1 = dp_front_kway(g, base.devices, base.links, batch=batch)
+        f2 = dp_front_kway(g, cong.devices, cong.links, batch=batch)
+        dt = time.perf_counter() - t0
+        b1, b2 = best_throughput(f1), best_throughput(f2)
+        moved = b1.partition != b2.partition
+        print(f"{name:24s} {str(b1.partition):>12s} "
+              f"{batch/b1.throughput*1e3:>9.1f} {str(b2.partition):>16s} "
+              f"{batch/b2.throughput*1e3:>9.1f} {str(moved):>6s}")
+        rows.append(f"pod_pareto/{name},{dt*1e6/2:.0f},"
+                    f"cuts={b1.partition};cong_cuts={b2.partition};"
+                    f"moved={moved}")
+    print("(cuts are block indices: 0=embed, 1..L=layers, L+1=head)")
+    return rows

@@ -1,0 +1,38 @@
+"""Network-aware adaptive re-splitting (the paper's future work,
+implemented): a link monitor feeds EWMA estimates to the splitter, which
+migrates the partition when the predicted gain clears hysteresis.
+
+    PYTHONPATH=src python examples/adaptive_split.py
+"""
+from repro.core import AdaptiveSplitter, LinkEstimator, scenarios
+from repro.core.devices import DURESS, LAN_PI_PI
+from repro.models.cnn import zoo
+
+graph = zoo.get("mobilenetv2").block_graph()
+scen = scenarios.get("pi_to_pi")
+splitter = AdaptiveSplitter(graph, scen, batch=8, policy="throughput")
+est = LinkEstimator(rtt_s=LAN_PI_PI.rtt_s,
+                    bw_bytes_per_s=LAN_PI_PI.bw_bytes_per_s, alpha=0.5)
+
+print("phase 1: healthy LAN")
+for step in range(3):
+    m, migrated = splitter.step(est)
+    print(f"  step {step}: split P{m.partition[0]} thr={m.throughput:6.2f}"
+          f" img/s {'(migrated)' if migrated else ''}")
+
+print("phase 2: link degrades to 200ms / 5Mbit/s (tc-style)")
+for step in range(12):
+    # monitor observes slow transfers → estimates collapse
+    est.observe(1.0e6, DURESS.transfer_time(1.0e6))
+    est.observe(0, DURESS.rtt_s, is_rtt_probe=True)
+    m, migrated = splitter.step(est)
+    print(f"  step {step}: split P{m.partition[0]} thr={m.throughput:6.2f}"
+          f" img/s {'(migrated)' if migrated else ''}")
+
+print("phase 3: link recovers")
+for step in range(8):
+    est.observe(1.0e6, LAN_PI_PI.transfer_time(1.0e6))
+    est.observe(0, LAN_PI_PI.rtt_s, is_rtt_probe=True)
+    m, migrated = splitter.step(est)
+    print(f"  step {step}: split P{m.partition[0]} thr={m.throughput:6.2f}"
+          f" img/s {'(migrated)' if migrated else ''}")

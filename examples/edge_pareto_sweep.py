@@ -1,0 +1,15 @@
+"""Full edge-inference Pareto study: all six CNNs × {Pi-Pi, Pi-GPU} ×
+{ideal LAN, 200ms/5Mbit duress} — reproduces paper Figs 3-6 with ASCII
+frontier plots.
+
+    PYTHONPATH=src python examples/edge_pareto_sweep.py
+"""
+import sys
+sys.path.insert(0, ".")
+from benchmarks import paper_tables as P
+
+P.table1_models()
+P.fig3_pareto_pi_pi()
+P.fig4_pareto_pi_gpu()
+P.fig56_duress()
+P.table23_breakdown()

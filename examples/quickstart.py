@@ -1,0 +1,22 @@
+"""Quickstart: ParetoPipe in 25 lines — map the latency/throughput
+frontier for MobileNetV2 split across two Raspberry Pis.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import scenarios, sweep_2way, pareto_front, knee_point
+from repro.models.cnn import zoo
+
+model = zoo.get("mobilenetv2")           # the paper's Table-I model
+graph = model.block_graph()              # per-block FLOPs/bytes
+scen = scenarios.get("pi_to_pi")         # calibrated testbed
+
+points = sweep_2way(graph, scen.devices, scen.links[0], batch=8)
+front = pareto_front(points)
+
+print(f"swept {len(points)} split points; {len(front)} on the front:")
+for p in front:
+    print(f"  split after block {p.partition[0]:2d}: "
+          f"latency {p.latency_s*1e3:7.1f} ms, "
+          f"throughput {p.throughput:5.2f} img/s")
+knee = knee_point(points)
+print(f"balanced pick (knee): P{knee.partition[0]}")

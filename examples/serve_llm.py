@@ -1,0 +1,14 @@
+"""Batched LLM serving: prefill a prompt batch, decode new tokens with
+KV caches, report the paper's two metrics (latency & throughput).
+
+    PYTHONPATH=src python examples/serve_llm.py [--arch zamba2-7b]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv = ["--arch", "qwen3-1.7b"] + argv
+    raise SystemExit(main(argv + ["--reduced"]))

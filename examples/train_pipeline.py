@@ -1,0 +1,19 @@
+"""End-to-end training driver: a ~100M-param qwen3-family model for a
+few hundred steps on CPU, with checkpointing and deterministic resume.
+
+    PYTHONPATH=src python examples/train_pipeline.py [--steps 300]
+
+(Pass --pods 2 with REPRO_HOST_DEVICES=8 to train through the pod-level
+GPipe pipeline with ParetoPipe-chosen cuts.)
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    defaults = ["--arch", "qwen3-1.7b", "--reduced",
+                "--d-model", "512", "--n-layers", "8",
+                "--steps", "300", "--batch", "4", "--seq", "256",
+                "--ckpt-dir", "runs/train_100m", "--ckpt-every", "100"]
+    raise SystemExit(main(defaults + argv))

@@ -1,0 +1,2 @@
+from .store import (CheckpointManager, load_checkpoint, save_checkpoint,
+                    reshard_tree)

@@ -1,0 +1,32 @@
+"""ParetoPipe core: multi-objective DNN partitioning (the paper's contribution).
+
+Public API:
+    Block, BlockGraph, chain          — block-level model abstraction
+    DeviceProfile, Link               — hardware/network models
+    CostTable, evaluate_pipeline      — pipeline performance model
+    sweep_2way, sweep_kway,
+    dp_front_kway                     — partition search engines
+    pareto_front, knee_point,
+    hypervolume, dominates            — Pareto machinery
+    Scenario, scenarios.get           — named testbeds (paper + TPU pods)
+    AdaptiveSplitter, LinkEstimator   — network-aware runtime re-splitting
+"""
+from .blocks import Block, BlockGraph, chain
+from .costmodel import CostTable, PipelineMetrics, StageMetrics, evaluate_pipeline
+from .devices import DeviceProfile, Link
+from .pareto import dominates, hypervolume, is_on_front, knee_point, pareto_front
+from .partitioner import (best_latency, best_throughput, dp_front_kway,
+                          sweep_2way, sweep_kway)
+from .autosplit import AdaptiveSplitter, LinkEstimator
+from .scenarios import Scenario
+from . import devices, scenarios, profiler
+
+__all__ = [
+    "Block", "BlockGraph", "chain",
+    "CostTable", "PipelineMetrics", "StageMetrics", "evaluate_pipeline",
+    "DeviceProfile", "Link",
+    "dominates", "hypervolume", "is_on_front", "knee_point", "pareto_front",
+    "best_latency", "best_throughput", "dp_front_kway", "sweep_2way", "sweep_kway",
+    "AdaptiveSplitter", "LinkEstimator", "Scenario",
+    "devices", "scenarios", "profiler",
+]

@@ -1,0 +1,106 @@
+"""Adaptive split selection under changing network conditions.
+
+The paper's headline deployment finding (Sec. V-B): a split chosen under
+lab conditions becomes wrong when the network degrades, so partitioning
+must be *network-aware*.  The paper leaves adaptive selection to future
+work; we implement it:
+
+  * ``LinkEstimator`` — EWMA estimates of RTT and bandwidth from observed
+    transfers (what a runtime actually sees).
+  * ``AdaptiveSplitter`` — re-solves the Pareto front with the estimated
+    link, picks a point for the active policy (min-latency /
+    max-throughput / knee), and migrates only when the predicted gain
+    beats a hysteresis threshold (migration = redeploying weights, which
+    has a real cost the splitter accounts for).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Literal
+
+from .blocks import BlockGraph
+from .costmodel import CostTable, PipelineMetrics
+from .devices import Link
+from .pareto import knee_point, pareto_front
+from .partitioner import best_latency, best_throughput, sweep_2way
+from .scenarios import Scenario
+
+Policy = Literal["latency", "throughput", "knee"]
+
+
+@dataclass
+class LinkEstimator:
+    """EWMA link-condition estimator fed by observed transfers."""
+
+    rtt_s: float
+    bw_bytes_per_s: float
+    alpha: float = 0.3
+
+    def observe(self, nbytes: float, elapsed_s: float, is_rtt_probe: bool = False):
+        if is_rtt_probe:
+            self.rtt_s = (1 - self.alpha) * self.rtt_s + self.alpha * elapsed_s
+            return
+        # attribute elapsed = rtt/2 + bytes/bw
+        serv = max(elapsed_s - self.rtt_s / 2.0, 1e-9)
+        bw = nbytes / serv
+        self.bw_bytes_per_s = (1 - self.alpha) * self.bw_bytes_per_s + self.alpha * bw
+
+    def as_link(self, name: str = "estimated") -> Link:
+        return Link(name, rtt_s=self.rtt_s, bw_bytes_per_s=self.bw_bytes_per_s)
+
+
+@dataclass
+class AdaptiveSplitter:
+    graph: BlockGraph
+    scenario: Scenario
+    batch: int = 8
+    policy: Policy = "knee"
+    costs: CostTable | None = None
+    hysteresis: float = 0.10          # required relative improvement
+    migration_cost_s: float = 1.0     # one-off cost of moving the split
+    current: PipelineMetrics | None = None
+    history: list = field(default_factory=list)
+
+    def _pick(self, points) -> PipelineMetrics:
+        feas = [p for p in points if p.feasible] or points
+        if self.policy == "latency":
+            return best_latency(feas)
+        if self.policy == "throughput":
+            return best_throughput(feas)
+        return knee_point(feas) or best_throughput(feas)
+
+    def _objective(self, m: PipelineMetrics) -> float:
+        """Lower is better (throughput negated)."""
+        return m.latency_s if self.policy == "latency" else -m.throughput
+
+    def solve(self, link: Link | None = None) -> PipelineMetrics:
+        scen = self.scenario if link is None else self.scenario.with_link(0, link)
+        points = sweep_2way(self.graph, scen.devices, scen.links[0],
+                            batch=self.batch, costs=self.costs)
+        return self._pick(points)
+
+    def step(self, estimator: LinkEstimator) -> tuple[PipelineMetrics, bool]:
+        """Re-evaluate with the current link estimate.  Returns the active
+        partition and whether a migration happened."""
+        cand = self.solve(estimator.as_link())
+        migrated = False
+        if self.current is None:
+            self.current, migrated = cand, True
+        elif cand.partition != self.current.partition:
+            # re-price the *current* split under the new conditions
+            cur = next(
+                p for p in sweep_2way(self.graph, self.scenario.devices,
+                                      estimator.as_link(), batch=self.batch,
+                                      costs=self.costs)
+                if p.partition == self.current.partition)
+            old, new = self._objective(cur), self._objective(cand)
+            gain = (old - new) / max(abs(old), 1e-12)
+            if gain > self.hysteresis:
+                self.current, migrated = cand, True
+            else:
+                self.current = cur
+        else:
+            self.current = cand
+        self.history.append((self.current.partition, migrated))
+        return self.current, migrated

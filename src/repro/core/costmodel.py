@@ -1,0 +1,162 @@
+"""Pipeline performance model — the analytical heart of ParetoPipe.
+
+Given a ``BlockGraph``, an assignment of contiguous block ranges to
+devices, and the links between consecutive devices, predict:
+
+  * **end-to-end latency per batch** — one batch flowing through the
+    whole pipeline: input dispatch + every stage's compute + every
+    inter-stage transfer + result return (paper Sec. IV-C measures
+    exactly this),
+  * **steady-state throughput** — successive batches pipeline, so the
+    bottleneck is the slowest stage *cycle* (its compute plus its
+    non-overlapped sends),
+  * per-stage breakdowns and memory feasibility.
+
+Validation against the paper (Table II, MobileNetV2 P3, batch 8):
+  exe 0.969 s + 0.941 s + net 0.048 s → latency ≈ 1.96 s and throughput
+  ≈ 8/(0.969+0.048) ≈ 7.9 img/s — the paper reports 7.8 img/s, i.e. the
+  bottleneck-cycle model (compute + outbound transfer) is the right one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+from .blocks import BlockGraph
+from .devices import DeviceProfile, Link
+
+
+class CostTable:
+    """Measured per-(device, block) execution times in seconds (per batch).
+
+    Overrides the analytic flops/eff_flops model where present — this is
+    the paper's block-wise profiling (Fig. 2) feeding the partitioner."""
+
+    def __init__(self, entries: Mapping[tuple[str, str], float] | None = None):
+        self._t: dict[tuple[str, str], float] = dict(entries or {})
+
+    def set(self, device: str, block: str, seconds: float) -> None:
+        self._t[(device, block)] = seconds
+
+    def get(self, device: str, block: str) -> float | None:
+        return self._t.get((device, block))
+
+    def __len__(self) -> int:
+        return len(self._t)
+
+
+@dataclass(frozen=True)
+class StageMetrics:
+    device: str
+    blocks: tuple[int, int]        # [lo, hi) block range
+    compute_s: float
+    send_s: float                  # outbound transfer time (0 for last stage)
+    weight_bytes: int
+    mem_ok: bool
+
+
+@dataclass(frozen=True)
+class PipelineMetrics:
+    partition: tuple[int, ...]     # cut points; stage i = blocks[cuts[i]:cuts[i+1]]
+    latency_s: float               # end-to-end per batch
+    throughput: float              # samples / s, steady state
+    stages: tuple[StageMetrics, ...]
+    net_s: float                   # total wire time per batch
+    feasible: bool                 # all stages fit in device memory
+
+    @property
+    def bottleneck_s(self) -> float:
+        return max(s.compute_s + s.send_s for s in self.stages)
+
+
+def _stage_time(graph: BlockGraph, lo: int, hi: int, dev: DeviceProfile,
+                batch: int, costs: CostTable | None) -> float:
+    """Batch execution time of blocks[lo:hi] on ``dev``."""
+    t = 0.0
+    analytic_flops = 0.0
+    any_measured = False
+    for b in graph.blocks[lo:hi]:
+        m = costs.get(dev.name, b.name) if costs is not None else None
+        if m is not None:
+            t += m
+            any_measured = True
+        else:
+            analytic_flops += b.flops * batch / max(b.eff, 1e-6)
+    if analytic_flops > 0:
+        t += analytic_flops / dev.flops_per_s
+    if hi > lo:
+        t += dev.stage_overhead_s
+    del any_measured
+    return t
+
+
+def evaluate_pipeline(
+    graph: BlockGraph,
+    cuts: Sequence[int],
+    devices: Sequence[DeviceProfile],
+    links: Sequence[Link],
+    batch: int = 1,
+    costs: CostTable | None = None,
+    dispatch_link: Link | None = None,
+    include_io: bool = True,
+) -> PipelineMetrics:
+    """Evaluate one partition.
+
+    ``cuts`` are the interior cut points: stage i runs blocks
+    [cuts[i], cuts[i+1]) with implicit cuts[ -1]=0 and cuts[-1]=n.
+    ``len(devices) == len(cuts) + 1`` and ``len(links) == len(cuts)``.
+    ``dispatch_link`` models orchestrator→worker1 input dispatch and
+    workerN→orchestrator result return (paper Alg. 1 lines 5–9); defaults
+    to the first link.
+    """
+    n = graph.n_blocks
+    full = (0, *cuts, n)
+    n_stages = len(devices)
+    if len(cuts) != n_stages - 1 or len(links) != n_stages - 1:
+        raise ValueError("need len(devices)-1 cuts and links")
+    for a, b in zip(full, full[1:]):
+        if not (0 <= a <= b <= n):
+            raise ValueError(f"bad cuts {cuts!r} for {n} blocks")
+
+    dlink = dispatch_link or (links[0] if links else None)
+
+    stages: list[StageMetrics] = []
+    latency = 0.0
+    net_total = 0.0
+    feasible = True
+
+    if include_io and dlink is not None:
+        t_in = dlink.transfer_time(graph.cut_bytes(0) * batch)
+        latency += t_in
+        net_total += t_in
+
+    cycle_times: list[float] = []
+    for i in range(n_stages):
+        lo, hi = full[i], full[i + 1]
+        dev = devices[i]
+        comp = _stage_time(graph, lo, hi, dev, batch, costs)
+        send = 0.0
+        if i < n_stages - 1:
+            send = links[i].transfer_time(graph.cut_bytes(hi) * batch)
+        wbytes = graph.segment_weight_bytes(lo, hi)
+        abytes = max((b.act_bytes * batch for b in graph.blocks[lo:hi]), default=0)
+        ok = wbytes + abytes <= dev.mem_bytes
+        feasible &= ok
+        stages.append(StageMetrics(device=dev.name, blocks=(lo, hi),
+                                   compute_s=comp, send_s=send,
+                                   weight_bytes=wbytes, mem_ok=ok))
+        latency += comp + send
+        net_total += send
+        cycle_times.append(comp + send)
+
+    if include_io and dlink is not None:
+        t_out = dlink.transfer_time(graph.output_bytes * batch)
+        latency += t_out
+        net_total += t_out
+        cycle_times[-1] += t_out
+
+    bottleneck = max(cycle_times)
+    throughput = batch / bottleneck if bottleneck > 0 else float("inf")
+    return PipelineMetrics(partition=tuple(cuts), latency_s=latency,
+                           throughput=throughput, stages=tuple(stages),
+                           net_s=net_total, feasible=feasible)

@@ -1,0 +1,117 @@
+"""Device and link models.
+
+Two kinds of cost sources coexist (mirroring the paper's methodology):
+
+  * **Analytic** — a ``DeviceProfile`` with an *effective* FLOP rate and a
+    fixed per-stage-invocation overhead; block time = flops / eff_flops +
+    overhead share.  Effective rates for the paper's testbed are
+    back-solved from the paper's own Tables II/III (see calibration notes
+    below) — the point is to land in the same *regime* (GPU 2–3 orders of
+    magnitude faster than a Pi; seconds-scale CNN batches), so frontier
+    *structure* reproduces.
+  * **Measured** — a ``CostTable`` filled by wall-clock profiling
+    (``core.profiler``) or by compiled-HLO cost analysis (the dry-run
+    path).  When a CostTable has an entry it overrides the analytic model.
+
+Calibration notes (paper Tables II/III, batch 8; 224²/299² inputs — the
+only reading consistent with the reported seconds-scale batch times):
+  * Pi 4B: AlexNet full ≈0.83 s/batch over 11.4 GFLOP and VGG16
+    ≈13 s over 248 GFLOP → ~10–19 effective GFLOP/s on dense convs; we
+    use 10.  MobileNetV2's 1.9 s over 5 GFLOP (~1.3 GFLOP/s) reflects
+    depthwise-conv inefficiency, modelled per-block via ``Block.eff``.
+  * RTX 4090: AlexNet ≈9 ms/batch → ~1.3 effective TFLOP/s at batch 8
+    (launch-bound).  We use 1.5 + 5 ms per-stage overhead.
+  * TPU v5e (the scale target): 197 TFLOP/s bf16 peak, 819 GB/s HBM,
+    ~50 GB/s/link ICI; DCN between pods ~25 GB/s per host pair.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    name: str
+    flops_per_s: float            # effective achievable FLOP/s
+    mem_bytes: int                # usable memory for weights + activations
+    mem_bw: float = 0.0           # bytes/s (used by roofline-style costs)
+    stage_overhead_s: float = 0.0  # fixed cost per stage invocation (framework)
+
+    def compute_time(self, flops: float, bytes_moved: float = 0.0) -> float:
+        """Roofline-ish time: max of compute and memory terms + overhead."""
+        t = flops / self.flops_per_s
+        if self.mem_bw > 0 and bytes_moved > 0:
+            t = max(t, bytes_moved / self.mem_bw)
+        return t + self.stage_overhead_s
+
+
+@dataclass(frozen=True)
+class Link:
+    """Point-to-point link: latency + bandwidth + per-message overhead."""
+
+    name: str
+    rtt_s: float                  # round-trip time
+    bw_bytes_per_s: float
+    per_msg_overhead_s: float = 0.0   # serialization / syscall / RPC overhead
+
+    def transfer_time(self, nbytes: float) -> float:
+        return self.rtt_s / 2.0 + self.per_msg_overhead_s + nbytes / self.bw_bytes_per_s
+
+
+# --------------------------------------------------------------------------- #
+# The paper's testbed (calibrated) and the TPU target.
+# --------------------------------------------------------------------------- #
+GiB = 1024 ** 3
+
+# Calibrated against Tables II/III at the paper's operating point
+# (CIFAR-10 upscaled to 224²/299² — the only reading consistent with the
+# reported seconds-scale batch times): PyTorch-on-A72 sustains ~10 GFLOP/s
+# on dense convs; depthwise convs run at ~10% of that (captured per-block
+# via Block.eff, not here).
+PI_4B = DeviceProfile(
+    name="pi4b", flops_per_s=10e9, mem_bytes=4 * GiB, mem_bw=4e9,
+    stage_overhead_s=5e-3,
+)
+
+RTX_4090 = DeviceProfile(
+    name="rtx4090", flops_per_s=1.5e12, mem_bytes=24 * GiB, mem_bw=1008e9,
+    stage_overhead_s=5e-3,
+)
+
+# One TPU v5e chip (peak specs; roofline constants of the assignment).
+TPU_V5E_CHIP = DeviceProfile(
+    name="tpu_v5e", flops_per_s=197e12, mem_bytes=16 * GiB, mem_bw=819e9,
+    stage_overhead_s=2e-6,
+)
+
+
+def tpu_pod(n_chips: int = 256, name: str | None = None) -> DeviceProfile:
+    """A whole pod as one pipeline 'device' (chips cooperate via TP/DP
+    inside the stage; the partitioner places layer ranges on pods)."""
+    return DeviceProfile(
+        name=name or f"v5e_pod{n_chips}",
+        flops_per_s=TPU_V5E_CHIP.flops_per_s * n_chips,
+        mem_bytes=TPU_V5E_CHIP.mem_bytes * n_chips,
+        mem_bw=TPU_V5E_CHIP.mem_bw * n_chips,
+        stage_overhead_s=5e-6,
+    )
+
+
+# Links -------------------------------------------------------------------- #
+Mbit = 1e6 / 8
+Gbit = 1e9 / 8
+
+LAN_PI_PI = Link("lan_pi_pi", rtt_s=0.201e-3, bw_bytes_per_s=1 * Gbit,
+                 per_msg_overhead_s=0.5e-3)
+LAN_PI_GPU = Link("lan_pi_gpu", rtt_s=0.383e-3, bw_bytes_per_s=1 * Gbit,
+                  per_msg_overhead_s=0.5e-3)
+# Paper Sec. V-B: tc netem 200 ms RTT + 5 Mbit/s.
+DURESS = Link("duress", rtt_s=200e-3, bw_bytes_per_s=5 * Mbit,
+              per_msg_overhead_s=0.5e-3)
+
+ICI_V5E = Link("ici_v5e", rtt_s=2e-6, bw_bytes_per_s=50e9,
+               per_msg_overhead_s=1e-6)
+# Cross-pod data-center network, aggregated per pod boundary.
+DCN = Link("dcn", rtt_s=20e-6, bw_bytes_per_s=25e9, per_msg_overhead_s=5e-6)
+DCN_CONGESTED = Link("dcn_congested", rtt_s=2e-3, bw_bytes_per_s=2.5e9,
+                     per_msg_overhead_s=5e-6)

@@ -1,0 +1,85 @@
+"""Pareto-front machinery over (latency ↓, throughput ↑) points.
+
+Pure functions; used by the partitioner, the benchmarks, and the
+scheduler.  Points are any objects exposing ``latency_s`` and
+``throughput`` (PipelineMetrics qualifies) or plain ``(lat, thr)``
+tuples via the key functions.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Sequence, TypeVar
+
+T = TypeVar("T")
+
+
+def _lat(p) -> float:
+    return p[0] if isinstance(p, tuple) else p.latency_s
+
+
+def _thr(p) -> float:
+    return p[1] if isinstance(p, tuple) else p.throughput
+
+
+def dominates(a, b) -> bool:
+    """a dominates b: no worse on both objectives, strictly better on one."""
+    la, ta, lb, tb = _lat(a), _thr(a), _lat(b), _thr(b)
+    return (la <= lb and ta >= tb) and (la < lb or ta > tb)
+
+
+def pareto_front(points: Sequence[T]) -> list[T]:
+    """Non-dominated subset, sorted by latency ascending.
+
+    O(n log n): sort by (latency asc, throughput desc) then sweep keeping
+    points whose throughput strictly exceeds the best seen so far.
+    Duplicate (lat, thr) pairs keep one representative.
+    """
+    if not points:
+        return []
+    order = sorted(points, key=lambda p: (_lat(p), -_thr(p)))
+    front: list[T] = []
+    best_thr = float("-inf")
+    for p in order:
+        if _thr(p) > best_thr:
+            front.append(p)
+            best_thr = _thr(p)
+    return front
+
+
+def is_on_front(p, points: Iterable) -> bool:
+    return not any(dominates(q, p) for q in points)
+
+
+def hypervolume(points: Sequence, ref_latency: float, ref_throughput: float = 0.0) -> float:
+    """2-D hypervolume dominated w.r.t. reference point
+    (ref_latency, ref_throughput) — higher is better.  Points with
+    latency above the reference contribute nothing."""
+    front = pareto_front(points)
+    hv = 0.0
+    prev_lat = ref_latency
+    for p in sorted(front, key=_lat, reverse=True):
+        lat, thr = _lat(p), _thr(p)
+        if lat >= prev_lat or thr <= ref_throughput:
+            continue
+        hv += (prev_lat - lat) * (thr - ref_throughput)
+        prev_lat = lat
+    return hv
+
+
+def knee_point(points: Sequence[T]) -> T | None:
+    """The front point with the max normalized Manhattan improvement —
+    a pragmatic 'balanced' pick for practitioners (paper Sec. V-A asks
+    which split balances the objectives)."""
+    front = pareto_front(points)
+    if not front:
+        return None
+    lats = [_lat(p) for p in front]
+    thrs = [_thr(p) for p in front]
+    lo_l, hi_l = min(lats), max(lats)
+    lo_t, hi_t = min(thrs), max(thrs)
+    dl = (hi_l - lo_l) or 1.0
+    dt = (hi_t - lo_t) or 1.0
+
+    def score(p) -> float:
+        return (hi_l - _lat(p)) / dl + (_thr(p) - lo_t) / dt
+
+    return max(front, key=score)

@@ -1,0 +1,157 @@
+"""Partition-point search.
+
+Three engines, in increasing generality:
+
+  * ``sweep_2way``      — the paper's method: exhaustively evaluate every
+                          block-boundary split across a 2-device pipeline.
+  * ``sweep_kway``      — exhaustive k-way enumeration (exact; fine up to
+                          ~C(n_blocks, k-1) ≈ 1e6 combinations).
+  * ``dp_front_kway``   — bi-objective label-correcting DP over the chain:
+                          exact Pareto front of (latency, bottleneck-cycle)
+                          for k stages in O(k·n²·|labels|), used when
+                          enumeration blows up (many pods / many blocks).
+
+All return ``PipelineMetrics`` lists; compose with ``pareto.pareto_front``.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from typing import Sequence
+
+from .blocks import BlockGraph
+from .costmodel import CostTable, PipelineMetrics, evaluate_pipeline
+from .devices import DeviceProfile, Link
+from .pareto import pareto_front
+
+
+def sweep_2way(
+    graph: BlockGraph,
+    devices: Sequence[DeviceProfile],
+    link: Link,
+    batch: int = 1,
+    costs: CostTable | None = None,
+    include_degenerate: bool = False,
+    include_io: bool = True,
+) -> list[PipelineMetrics]:
+    """Every valid split point of a 2-device pipeline (paper Sec. IV-C)."""
+    if len(devices) != 2:
+        raise ValueError("sweep_2way needs exactly 2 devices")
+    lo = 0 if include_degenerate else 1
+    hi = graph.n_blocks + (1 if include_degenerate else 0)
+    out = []
+    for p in range(lo, hi):
+        out.append(evaluate_pipeline(graph, (p,), devices, (link,),
+                                     batch=batch, costs=costs,
+                                     include_io=include_io))
+    return out
+
+
+def sweep_kway(
+    graph: BlockGraph,
+    devices: Sequence[DeviceProfile],
+    links: Sequence[Link],
+    batch: int = 1,
+    costs: CostTable | None = None,
+    allow_empty_stages: bool = False,
+    include_io: bool = True,
+    max_combos: int = 2_000_000,
+) -> list[PipelineMetrics]:
+    """Exhaustive enumeration of all k-way contiguous partitions."""
+    n, k = graph.n_blocks, len(devices)
+    if k - 1 != len(links):
+        raise ValueError("need len(devices)-1 links")
+    pool = range(0, n + 1) if allow_empty_stages else range(1, n)
+    combos = math.comb(len(pool), k - 1) if k > 1 else 1
+    if combos > max_combos:
+        raise ValueError(f"{combos} combinations; use dp_front_kway instead")
+    out = []
+    for cuts in itertools.combinations(pool, k - 1):
+        out.append(evaluate_pipeline(graph, cuts, devices, links,
+                                     batch=batch, costs=costs,
+                                     include_io=include_io))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# Bi-objective DP
+# --------------------------------------------------------------------------- #
+def _prune(labels: list[tuple[float, float, tuple[int, ...]]]):
+    """Keep non-dominated (latency, bottleneck) labels (both minimized)."""
+    labels.sort(key=lambda x: (x[0], x[1]))
+    kept: list[tuple[float, float, tuple[int, ...]]] = []
+    best_b = float("inf")
+    for lab in labels:
+        if lab[1] < best_b:
+            kept.append(lab)
+            best_b = lab[1]
+    return kept
+
+
+def dp_front_kway(
+    graph: BlockGraph,
+    devices: Sequence[DeviceProfile],
+    links: Sequence[Link],
+    batch: int = 1,
+    costs: CostTable | None = None,
+    allow_empty_stages: bool = False,
+    include_io: bool = True,
+) -> list[PipelineMetrics]:
+    """Exact Pareto front over all k-way partitions via label DP.
+
+    A label at state (i devices used, j blocks placed) is
+    (cumulative latency so far, worst stage cycle so far, cuts).
+    Both objectives are monotone under extension, so dominated labels can
+    never yield a non-dominated completion — pruning is exact.
+    """
+    from .costmodel import _stage_time  # internal reuse
+
+    n, k = graph.n_blocks, len(devices)
+    if k - 1 != len(links):
+        raise ValueError("need len(devices)-1 links")
+
+    dlink = links[0] if (include_io and links) else None
+    init_lat = dlink.transfer_time(graph.cut_bytes(0) * batch) if dlink else 0.0
+
+    # labels[j] after i stages: list of (lat, bot, cuts)
+    labels: dict[int, list] = {0: [(init_lat, 0.0, ())]}
+    for i in range(k):
+        nxt: dict[int, list] = {}
+        last = i == k - 1
+        stages_after = k - i - 1       # stages still to fill after this one
+        for j, labs in labels.items():
+            if last:
+                j2_options: Sequence[int] = (n,) if (allow_empty_stages or n > j) else ()
+            else:
+                lo = j if allow_empty_stages else j + 1
+                hi = n if allow_empty_stages else n - stages_after  # leave ≥1 each
+                j2_options = range(lo, hi + 1)
+            for j2 in j2_options:
+                comp = _stage_time(graph, j, j2, devices[i], batch, costs)
+                send = links[i].transfer_time(graph.cut_bytes(j2) * batch) if not last else 0.0
+                out_t = dlink.transfer_time(graph.output_bytes * batch) if (last and dlink) else 0.0
+                step = comp + send + out_t
+                cyc = step
+                for lat, bot, cuts in labs:
+                    nl = lat + step
+                    nb = max(bot, cyc)
+                    nc = cuts if last else cuts + (j2,)
+                    nxt.setdefault(j2, []).append((nl, nb, nc))
+        labels = {j: _prune(v) for j, v in nxt.items()}
+
+    finals = labels.get(n, [])
+    out = [evaluate_pipeline(graph, cuts, devices, links, batch=batch,
+                             costs=costs, include_io=include_io)
+           for _, _, cuts in finals]
+    return pareto_front(out)
+
+
+# Convenience single-objective picks ---------------------------------------- #
+def best_latency(points: Sequence[PipelineMetrics]) -> PipelineMetrics:
+    feas = [p for p in points if p.feasible] or list(points)
+    return min(feas, key=lambda p: p.latency_s)
+
+
+def best_throughput(points: Sequence[PipelineMetrics]) -> PipelineMetrics:
+    feas = [p for p in points if p.feasible] or list(points)
+    return max(feas, key=lambda p: p.throughput)

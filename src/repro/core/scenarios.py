@@ -1,0 +1,83 @@
+"""Named deployment scenarios (device chain + links).
+
+The paper's four experimental conditions plus the TPU-scale analogues the
+framework actually deploys on.  A ``Scenario`` is what the partitioner
+consumes: an ordered device chain with the links between them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from . import devices as D
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    devices: tuple[D.DeviceProfile, ...]
+    links: tuple[D.Link, ...]
+
+    def __post_init__(self):
+        if len(self.links) != len(self.devices) - 1:
+            raise ValueError("need len(devices)-1 links")
+
+    def with_link(self, i: int, link: D.Link, name: str | None = None) -> "Scenario":
+        links = list(self.links)
+        links[i] = link
+        return Scenario(name or f"{self.name}+{link.name}", self.devices, tuple(links))
+
+
+# --- the paper's testbed ---------------------------------------------------- #
+def pi_to_pi() -> Scenario:
+    return Scenario("pi_to_pi", (D.PI_4B, D.PI_4B), (D.LAN_PI_PI,))
+
+
+def pi_to_gpu() -> Scenario:
+    return Scenario("pi_to_gpu", (D.PI_4B, D.RTX_4090), (D.LAN_PI_GPU,))
+
+
+def duress(base: Scenario) -> Scenario:
+    """Paper Sec. V-B: tc-imposed 200 ms RTT + 5 Mbit/s on the first hop."""
+    return base.with_link(0, D.DURESS, name=f"{base.name}_duress")
+
+
+# --- TPU-scale analogues ----------------------------------------------------- #
+def pods(n_pods: int = 2, chips_per_pod: int = 256,
+         link: D.Link = D.DCN) -> Scenario:
+    """n pods in a pipeline, DCN links between consecutive pods —
+    the multi-pod mesh's ``pod`` axis as a ParetoPipe device chain."""
+    devs = tuple(D.tpu_pod(chips_per_pod, name=f"pod{i}") for i in range(n_pods))
+    return Scenario(f"pods{n_pods}x{chips_per_pod}", devs, (link,) * (n_pods - 1))
+
+
+def pods_congested(n_pods: int = 2, chips_per_pod: int = 256) -> Scenario:
+    """The duress analogue at datacenter scale: congested DCN."""
+    s = pods(n_pods, chips_per_pod, link=D.DCN_CONGESTED)
+    return dataclasses.replace(s, name=s.name + "_congested")
+
+
+def chips_linear(n: int = 4, link: D.Link = D.ICI_V5E) -> Scenario:
+    """A few chips in a ring/line over ICI — single-host pipelining."""
+    devs = tuple(dataclasses.replace(D.TPU_V5E_CHIP, name=f"chip{i}")
+                 for i in range(n))
+    return Scenario(f"chips{n}_ici", devs, (link,) * (n - 1))
+
+
+REGISTRY = {
+    "pi_to_pi": pi_to_pi,
+    "pi_to_gpu": pi_to_gpu,
+    "pi_to_pi_duress": lambda: duress(pi_to_pi()),
+    "pi_to_gpu_duress": lambda: duress(pi_to_gpu()),
+    "pods2": lambda: pods(2),
+    "pods2_congested": lambda: pods_congested(2),
+    "pods4": lambda: pods(4),
+    "chips4_ici": lambda: chips_linear(4),
+}
+
+
+def get(name: str) -> Scenario:
+    try:
+        return REGISTRY[name]()
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; have {sorted(REGISTRY)}") from None

@@ -1,0 +1,121 @@
+"""Deterministic synthetic data pipeline with O(1) resumable state.
+
+Every batch is a pure function of (seed, step) via ``jax.random.fold_in``
+— the iterator state checkpointed for restart is a single integer, and a
+restarted run consumes the *identical* token stream (the crash-restart
+integration test asserts bit-equal losses).  On a real multi-host fleet
+each host generates only its data-shard (same fold_in, host-offset
+stream); here the full batch is generated and device_put with the batch
+sharding.
+
+Also provides the ShapeDtypeStruct ``input_specs`` used by the dry-run —
+built from the same shape logic, so the dry-run and the real pipeline
+can never diverge.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig
+from ..sharding.api import MeshContext
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    batch: int
+    seq: int
+    seed: int = 0
+
+
+def _token_shapes(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    """Logical input shapes for one *training/prefill* batch."""
+    shapes: dict[str, tuple] = {}
+    if cfg.family == "vlm":
+        P = cfg.n_patches
+        shapes["tokens"] = (batch, seq - P)
+        shapes["img"] = (batch, P, cfg.d_model)
+    elif cfg.family == "encdec":
+        shapes["tokens"] = (batch, seq)
+        shapes["frames"] = (batch, cfg.enc_frames, cfg.d_model)
+    else:
+        shapes["tokens"] = (batch, seq)
+    return shapes
+
+
+def _axes_for(name: str) -> tuple:
+    return {"tokens": ("batch", "seq"),
+            "targets": ("batch", "seq"),
+            "img": ("batch", "patches", "embed"),
+            "frames": ("batch", "frames", "embed")}[name]
+
+
+class SyntheticLM:
+    """Synthetic next-token data; batches are functions of the step."""
+
+    def __init__(self, cfg: ArchConfig, data: DataConfig,
+                 ctx: MeshContext | None = None):
+        self.cfg, self.data, self.ctx = cfg, data, ctx
+        self.step = 0
+
+    # -- checkpointable state ------------------------------------------- #
+    def state_dict(self) -> dict:
+        return {"step": self.step, "seed": self.data.seed}
+
+    def load_state_dict(self, d: dict):
+        self.step = int(d["step"])
+
+    # ------------------------------------------------------------------- #
+    def batch_at(self, step: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.data.seed), step)
+        shapes = _token_shapes(self.cfg, self.data.batch, self.data.seq)
+        out = {}
+        for i, (name, shape) in enumerate(sorted(shapes.items())):
+            k = jax.random.fold_in(key, i)
+            if name in ("img", "frames"):
+                out[name] = jax.random.normal(k, shape, jnp.float32) * 0.02
+            else:
+                out[name] = jax.random.randint(k, shape, 0, self.cfg.vocab,
+                                               jnp.int32)
+        # next-token targets over the full logits sequence
+        tgt_key = jax.random.fold_in(key, 100)
+        out["targets"] = jax.random.randint(
+            tgt_key, (self.data.batch, self.data.seq), 0, self.cfg.vocab,
+            jnp.int32)
+        if self.cfg.family != "vlm":
+            # make it a real LM task: targets = tokens shifted left
+            t = out["tokens"]
+            out["targets"] = jnp.concatenate(
+                [t[:, 1:], out["targets"][:, :1]], axis=1)
+        if self.ctx is not None:
+            out = {k: jax.device_put(v, self.ctx.sharding(_axes_for(k), v.shape))
+                   for k, v in out.items()}
+        return out
+
+    def __next__(self) -> dict:
+        b = self.batch_at(self.step)
+        self.step += 1
+        return b
+
+
+# --------------------------------------------------------------------------- #
+# Dry-run input specs
+# --------------------------------------------------------------------------- #
+def make_batch_specs(cfg: ArchConfig, batch: int, seq: int,
+                     ctx: MeshContext | None, kind: str = "train") -> dict:
+    """ShapeDtypeStructs for a train/prefill batch (decode cache specs
+    live in ``repro.launch.specs``)."""
+    shapes = dict(_token_shapes(cfg, batch, seq))
+    if kind == "train":
+        shapes["targets"] = (batch, seq)
+    out = {}
+    for name, shape in shapes.items():
+        dtype = jnp.float32 if name in ("img", "frames") else jnp.int32
+        if ctx is None:
+            out[name] = jax.ShapeDtypeStruct(shape, dtype)
+        else:
+            out[name] = jax.ShapeDtypeStruct(
+                shape, dtype, sharding=ctx.sharding(_axes_for(name), shape))
+    return out

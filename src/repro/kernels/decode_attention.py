@@ -1,0 +1,97 @@
+"""Single-token GQA decode attention over a KV cache (Pallas TPU kernel).
+
+Flash-decoding style: the cache's sequence axis is tiled into VMEM
+blocks and iterated as the innermost sequential grid dimension with an
+online-softmax carry; positions beyond the current ``pos`` are masked.
+The current position arrives via scalar prefetch (SMEM), so block index
+maps could in principle skip fully-masked tail blocks; we predicate them
+with ``pl.when`` (equivalent FLOPs, simpler maps).
+
+Grid: (batch, q_heads, ns).  q: (B, H, hd); caches: (B, Smax, KV, hd).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, block_s: int):
+    j = pl.program_id(2)
+    pos = pos_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j * block_s <= pos)          # skip blocks fully past `pos`
+    def _body():
+        q = q_ref[0, 0, :].astype(jnp.float32)            # (hd,)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)         # (bs, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.einsum("d,sd->s", q, k) * scale           # (bs,)
+        idx = j * block_s + jax.lax.broadcasted_iota(jnp.int32, (block_s,), 0)
+        s = jnp.where(idx <= pos, s, NEG_INF)
+        s = s[None, :]                                     # (1, bs)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + p @ v
+        m_scr[...] = m_new
+
+    ns = pl.num_programs(2)
+
+    @pl.when(j == ns - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, :] = out[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, *,
+                     block_s: int = DEFAULT_BLOCK_S, interpret: bool = True):
+    """q: (B, H, hd); caches: (B, Smax, KV, hd); pos: scalar int32.
+    → (B, H, hd)."""
+    B, H, hd = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    block_s = min(block_s, Smax)
+    assert Smax % block_s == 0
+    ns = Smax // block_s
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_s=block_s)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, j, pos: (b, h, 0)),
+            pl.BlockSpec((1, block_s, 1, hd),
+                         lambda b, h, j, pos: (b, j, h // G, 0)),
+            pl.BlockSpec((1, block_s, 1, hd),
+                         lambda b, h, j, pos: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h, j, pos: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32)[None], q, k_cache, v_cache)

@@ -1,0 +1,115 @@
+"""Flash attention (prefill/train) as a Pallas TPU kernel.
+
+TPU-native design (vs. the CUDA original): the kv axis is the innermost
+*sequential* grid dimension, so the online-softmax running state
+(m, l, acc) lives in VMEM scratch and is carried across kv steps —
+the TPU analogue of a CUDA thread-block loop with shared-memory
+accumulators.  Block shapes are MXU-aligned (q/kv tiles of 128 rows by
+default); causal blocks above the diagonal are predicated away with
+``pl.when`` so they cost no MXU cycles.
+
+Grid: (batch, q_heads, nq, nk).  GQA is expressed in the k/v index maps
+(q head h reads kv head ``h // group``), so no head replication is ever
+materialized.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  nk: int):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # kv block (sequential innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (j <= i) if causal else (j <= nk)   # causal: skip above diagonal
+
+    @pl.when(run if causal else j >= 0)
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)         # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)         # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                          (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                          (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    last = i if causal else nk - 1
+
+    @pl.when(j == last)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True):
+    """q: (B, S, H, hd); k, v: (B, T, KV, hd) → (B, S, H, hd).
+
+    S % block_q == 0 and T % block_k == 0 are required (pad upstream);
+    for causal use S == T.
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0
+    nq, nk = S // block_q, T // block_k
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               block_q=block_q, block_k=block_k, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

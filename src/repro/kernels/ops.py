@@ -1,0 +1,40 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container) so the kernels
+execute their real bodies via the interpreter; on TPU backends the same
+calls compile to Mosaic.  Model code selects kernels with
+``cfg.attn_impl == "pallas"``.
+"""
+from __future__ import annotations
+
+import jax
+
+from .decode_attention import decode_attention as _decode
+from .flash_attention import flash_attention as _flash
+from .fused_rmsnorm import fused_rmsnorm as _rms
+from .ssm_scan import ssm_scan_chunk as _ssm
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
+                    interpret=None):
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=_default_interpret() if interpret is None else interpret)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, block_s=512, interpret=None):
+    return _decode(q, k_cache, v_cache, pos, block_s=block_s,
+                   interpret=_default_interpret() if interpret is None else interpret)
+
+
+def ssm_scan_chunk(dt, x, Bc, Cc, A, h0, *, block_d=512, interpret=None):
+    return _ssm(dt, x, Bc, Cc, A, h0, block_d=block_d,
+                interpret=_default_interpret() if interpret is None else interpret)
+
+
+def fused_rmsnorm(x, scale, *, eps=1e-6, block_rows=256, interpret=None):
+    return _rms(x, scale, eps=eps, block_rows=block_rows,
+                interpret=_default_interpret() if interpret is None else interpret)

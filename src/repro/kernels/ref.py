@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Deliberately naive: dense score matrices, full materialization, explicit
+sequential scans — slow but unarguable.  Kernel tests sweep shapes and
+dtypes and ``assert_allclose`` against these.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd) → (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", w, vv.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """q: (B,H,hd); caches: (B,Smax,KV,hd); pos scalar → (B,H,hd)."""
+    B, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    kk = jnp.repeat(k_cache, G, axis=2)
+    vv = jnp.repeat(v_cache, G, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(hd)
+    mask = jnp.arange(k_cache.shape[1]) <= pos
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhs,bshd->bhd", w, vv.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ssm_scan_chunk_ref(dt, x, Bc, Cc, A, h0):
+    """Sequential Mamba-1 recurrence (fp32).  Shapes as in ssm_scan."""
+    def step(h, xs):
+        dt_t, x_t, B_t, C_t = xs
+        dA = jnp.exp(dt_t[:, :, None] * A[None])             # (B, di, N)
+        h = dA * h + (dt_t * x_t)[:, :, None] * B_t[:, None, :]
+        y = jnp.sum(h * C_t[:, None, :], axis=-1)            # (B, di)
+        return h, y
+
+    xs = (dt.swapaxes(0, 1).astype(jnp.float32),
+          x.swapaxes(0, 1).astype(jnp.float32),
+          Bc.swapaxes(0, 1).astype(jnp.float32),
+          Cc.swapaxes(0, 1).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1), h
+
+
+def fused_rmsnorm_ref(x, scale, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,23 @@
+"""Production meshes.
+
+``make_production_mesh`` is a function (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any
+jax import, and everything else must see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_pods: int = 1, data: int = 2, model: int = 2):
+    """Small mesh over forced host devices (tests/examples)."""
+    if n_pods > 1:
+        return jax.make_mesh((n_pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

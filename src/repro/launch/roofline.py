@@ -1,0 +1,83 @@
+"""Roofline-term computation from dry-run artifacts.
+
+Hardware constants (assignment): TPU v5e — 197 TFLOP/s bf16 per chip,
+819 GB/s HBM per chip, ~50 GB/s/link ICI.  DCN egress per chip is not
+given; we assume 6.25 GB/s/chip (ICI/8, typical for pod-to-pod fabrics)
+and record the assumption here.
+
+All inputs are **per-device** quantities (XLA's cost_analysis and
+memory_analysis are per-device programs under SPMD — verified in tests):
+
+  compute term    = flops_per_dev / PEAK_FLOPS
+  memory term     = bytes_per_dev / HBM_BW
+  collective term = wire_ici_per_dev / ICI_BW + wire_dcn_per_dev / DCN_BW
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+DCN_BW = 6.25e9              # bytes/s per chip across pods (assumption)
+
+
+@dataclass(frozen=True)
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_per_dev: float      # 6·N·D (or 2·N·D inference) / chips
+    hlo_flops_per_dev: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound on step time = max of the three terms (perfect
+        overlap assumption)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS — how much compiled compute is 'useful'
+        (catches remat/causal-waste/dispatch overheads)."""
+        if self.hlo_flops_per_dev == 0:
+            return 0.0
+        return self.model_flops_per_dev / self.hlo_flops_per_dev
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization *if* the step ran at the roofline bound
+        (the score we hillclimb): model_flops / (peak · step_time)."""
+        t = self.step_time_s
+        if t == 0:
+            return 0.0
+        return self.model_flops_per_dev / (PEAK_FLOPS * t)
+
+
+def roofline_from(flops_per_dev: float, bytes_per_dev: float,
+                  wire_ici_per_dev: float, wire_dcn_per_dev: float,
+                  model_flops_total: float, n_chips: int) -> Roofline:
+    return Roofline(
+        compute_s=flops_per_dev / PEAK_FLOPS,
+        memory_s=bytes_per_dev / HBM_BW,
+        collective_s=wire_ici_per_dev / ICI_BW + wire_dcn_per_dev / DCN_BW,
+        model_flops_per_dev=model_flops_total / n_chips,
+        hlo_flops_per_dev=flops_per_dev,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D for training, 2·N·D for inference forward (N = active params
+    for MoE); D = tokens processed by the step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.batch * shape.seq
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.batch * shape.seq
+    return 2.0 * n * shape.batch  # decode: one token per sequence

@@ -1,0 +1,3 @@
+"""Paper's CNN zoo (Table I) — block-structured JAX implementations."""
+from . import layers, zoo
+from .zoo import CNNModel, ZOO, get

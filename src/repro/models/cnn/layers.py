@@ -1,0 +1,375 @@
+"""Minimal functional CNN layer library with cost accounting.
+
+Every layer knows how to ``init`` parameters, ``apply`` a forward pass
+(inference mode — BN uses running stats, dropout is identity, matching
+the paper's inference benchmarks), and report its ``flops``/``params``
+for a given input shape.  This single source of truth feeds both the
+executable block functions and the analytic ``BlockGraph`` used by the
+partitioner, so model-driven and measured profiles describe the same
+computation.
+
+Layout: NHWC, fp32.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def _pair(v):
+    return (v, v) if isinstance(v, int) else tuple(v)
+
+
+class Layer:
+    """Base: stateless layer description."""
+
+    def init(self, key):
+        return {}
+
+    def apply(self, params, x):
+        raise NotImplementedError
+
+    def out_shape(self, s):
+        return s
+
+    def flops(self, s) -> float:
+        return 0.0
+
+    def eff_flops(self, s) -> float:
+        """FLOPs weighted by 1/efficiency (depthwise convs run far below
+        peak on ARM/PyTorch — calibration of the paper's Fig. 2)."""
+        return self.flops(s)
+
+    def param_count(self) -> int:
+        return 0
+
+
+@dataclass
+class Conv2D(Layer):
+    cin: int
+    cout: int
+    kernel: int | tuple = 3
+    stride: int | tuple = 1
+    padding: int | tuple | str = 0
+    groups: int = 1
+    bias: bool = True
+
+    def _pad(self):
+        if isinstance(self.padding, str):
+            return self.padding
+        ph, pw = _pair(self.padding)
+        return ((ph, ph), (pw, pw))
+
+    def init(self, key):
+        kh, kw = _pair(self.kernel)
+        k1, k2 = jax.random.split(key)
+        fan_in = self.cin // self.groups * kh * kw
+        w = jax.random.normal(k1, (kh, kw, self.cin // self.groups, self.cout),
+                              jnp.float32) * (1.0 / math.sqrt(fan_in))
+        p = {"w": w}
+        if self.bias:
+            p["b"] = jnp.zeros((self.cout,), jnp.float32)
+        return p
+
+    def apply(self, params, x):
+        y = lax.conv_general_dilated(
+            x, params["w"], window_strides=_pair(self.stride),
+            padding=self._pad(), feature_group_count=self.groups,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        if self.bias:
+            y = y + params["b"]
+        return y
+
+    def out_shape(self, s):
+        n, h, w, _ = s
+        kh, kw = _pair(self.kernel)
+        sh, sw = _pair(self.stride)
+        if isinstance(self.padding, str) and self.padding.upper() == "SAME":
+            ho, wo = -(-h // sh), -(-w // sw)
+        else:
+            ph, pw = _pair(self.padding)
+            ho = (h + 2 * ph - kh) // sh + 1
+            wo = (w + 2 * pw - kw) // sw + 1
+        return (n, ho, wo, self.cout)
+
+    def flops(self, s):
+        n, ho, wo, _ = self.out_shape(s)
+        kh, kw = _pair(self.kernel)
+        return 2.0 * n * ho * wo * kh * kw * (self.cin // self.groups) * self.cout
+
+    def eff_flops(self, s):
+        depthwise = self.groups == self.cin and self.groups > 1
+        return self.flops(s) / (0.10 if depthwise else 1.0)
+
+    def param_count(self):
+        kh, kw = _pair(self.kernel)
+        return kh * kw * (self.cin // self.groups) * self.cout + (self.cout if self.bias else 0)
+
+
+@dataclass
+class BatchNorm(Layer):
+    c: int
+    eps: float = 1e-5
+
+    def init(self, key):
+        return {"scale": jnp.ones((self.c,), jnp.float32),
+                "bias": jnp.zeros((self.c,), jnp.float32),
+                "mean": jnp.zeros((self.c,), jnp.float32),
+                "var": jnp.ones((self.c,), jnp.float32)}
+
+    def apply(self, params, x):
+        inv = lax.rsqrt(params["var"] + self.eps) * params["scale"]
+        return x * inv + (params["bias"] - params["mean"] * inv)
+
+    def flops(self, s):
+        return 2.0 * float(np.prod(s))
+
+    def param_count(self):
+        return 2 * self.c  # learnable only (running stats excluded, torch-style)
+
+
+@dataclass
+class ReLU(Layer):
+    cap: float | None = None   # 6.0 for ReLU6
+
+    def apply(self, params, x):
+        y = jnp.maximum(x, 0)
+        return jnp.minimum(y, self.cap) if self.cap is not None else y
+
+    def flops(self, s):
+        return float(np.prod(s))
+
+
+@dataclass
+class Pool(Layer):
+    kind: str = "max"            # "max" | "avg"
+    kernel: int | tuple = 2
+    stride: int | tuple | None = None
+    padding: int | tuple = 0
+    ceil_mode: bool = False
+
+    def _dims(self):
+        kh, kw = _pair(self.kernel)
+        sh, sw = _pair(self.stride if self.stride is not None else self.kernel)
+        ph, pw = _pair(self.padding)
+        return kh, kw, sh, sw, ph, pw
+
+    def apply(self, params, x):
+        kh, kw, sh, sw, ph, pw = self._dims()
+        pad = ((0, 0), (ph, ph), (pw, pw), (0, 0))
+        if self.kind == "max":
+            return lax.reduce_window(x, -jnp.inf, lax.max,
+                                     (1, kh, kw, 1), (1, sh, sw, 1), pad)
+        summed = lax.reduce_window(x, 0.0, lax.add,
+                                   (1, kh, kw, 1), (1, sh, sw, 1), pad)
+        return summed / (kh * kw)
+
+    def out_shape(self, s):
+        n, h, w, c = s
+        kh, kw, sh, sw, ph, pw = self._dims()
+        rnd = math.ceil if self.ceil_mode else math.floor
+        ho = rnd((h + 2 * ph - kh) / sh) + 1
+        wo = rnd((w + 2 * pw - kw) / sw) + 1
+        return (n, ho, wo, c)
+
+    def flops(self, s):
+        n, ho, wo, c = self.out_shape(s)
+        kh, kw, *_ = self._dims()
+        return float(n * ho * wo * c * kh * kw)
+
+
+@dataclass
+class AdaptiveAvgPool(Layer):
+    out_hw: int | tuple = 1
+
+    def apply(self, params, x):
+        oh, ow = _pair(self.out_hw)
+        n, h, w, c = x.shape
+        if (oh, ow) == (1, 1):
+            return jnp.mean(x, axis=(1, 2), keepdims=True)
+        if h % oh == 0 and w % ow == 0:
+            kh, kw = h // oh, w // ow
+            summed = lax.reduce_window(x, 0.0, lax.add, (1, kh, kw, 1),
+                                       (1, kh, kw, 1), "VALID")
+            return summed / (kh * kw)
+        # torch adaptive semantics (handles upsampling too); oh/ow static & small
+        rows = []
+        for i in range(oh):
+            lo_h, hi_h = (i * h) // oh, -(-((i + 1) * h) // oh)
+            strip = x[:, lo_h:hi_h]
+            cells = []
+            for j in range(ow):
+                lo_w, hi_w = (j * w) // ow, -(-((j + 1) * w) // ow)
+                cells.append(strip[:, :, lo_w:hi_w].mean(axis=(1, 2), keepdims=True))
+            rows.append(jnp.concatenate(cells, axis=2))
+        return jnp.concatenate(rows, axis=1)
+
+    def out_shape(self, s):
+        oh, ow = _pair(self.out_hw)
+        return (s[0], oh, ow, s[3])
+
+    def flops(self, s):
+        return float(np.prod(s))
+
+
+@dataclass
+class Flatten(Layer):
+    def apply(self, params, x):
+        return x.reshape(x.shape[0], -1)
+
+    def out_shape(self, s):
+        return (s[0], int(np.prod(s[1:])))
+
+
+@dataclass
+class Linear(Layer):
+    fin: int
+    fout: int
+    bias: bool = True
+
+    def init(self, key):
+        w = jax.random.normal(key, (self.fin, self.fout), jnp.float32)
+        w = w * (1.0 / math.sqrt(self.fin))
+        p = {"w": w}
+        if self.bias:
+            p["b"] = jnp.zeros((self.fout,), jnp.float32)
+        return p
+
+    def apply(self, params, x):
+        y = x @ params["w"]
+        return y + params["b"] if self.bias else y
+
+    def out_shape(self, s):
+        return (*s[:-1], self.fout)
+
+    def flops(self, s):
+        return 2.0 * float(np.prod(s[:-1])) * self.fin * self.fout
+
+    def param_count(self):
+        return self.fin * self.fout + (self.fout if self.bias else 0)
+
+
+@dataclass
+class Dropout(Layer):
+    """Inference mode: identity (kept as a block to match torchvision
+    children counts — the paper's block indices include them)."""
+    p: float = 0.5
+
+    def apply(self, params, x):
+        return x
+
+
+@dataclass
+class Sequential(Layer):
+    layers: Sequence[Layer] = field(default_factory=list)
+
+    def init(self, key):
+        keys = jax.random.split(key, max(len(self.layers), 1))
+        return [l.init(k) for l, k in zip(self.layers, keys)]
+
+    def apply(self, params, x):
+        for l, p in zip(self.layers, params):
+            x = l.apply(p, x)
+        return x
+
+    def out_shape(self, s):
+        for l in self.layers:
+            s = l.out_shape(s)
+        return s
+
+    def flops(self, s):
+        t = 0.0
+        for l in self.layers:
+            t += l.flops(s)
+            s = l.out_shape(s)
+        return t
+
+    def eff_flops(self, s):
+        t = 0.0
+        for l in self.layers:
+            t += l.eff_flops(s)
+            s = l.out_shape(s)
+        return t
+
+    def param_count(self):
+        return sum(l.param_count() for l in self.layers)
+
+
+def conv_bn_relu(cin, cout, kernel, stride=1, padding=0, groups=1,
+                 relu_cap=None) -> Sequential:
+    return Sequential([
+        Conv2D(cin, cout, kernel, stride, padding, groups, bias=False),
+        BatchNorm(cout),
+        ReLU(cap=relu_cap),
+    ])
+
+
+@dataclass
+class Residual(Layer):
+    """y = body(x) + shortcut(x), optional trailing ReLU (ResNet blocks)."""
+    body: Layer
+    shortcut: Layer | None = None     # None = identity
+    post_relu: bool = True
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"body": self.body.init(k1),
+                "short": self.shortcut.init(k2) if self.shortcut else {}}
+
+    def apply(self, params, x):
+        y = self.body.apply(params["body"], x)
+        sc = self.shortcut.apply(params["short"], x) if self.shortcut else x
+        y = y + sc
+        return jnp.maximum(y, 0) if self.post_relu else y
+
+    def out_shape(self, s):
+        return self.body.out_shape(s)
+
+    def flops(self, s):
+        f = self.body.flops(s) + float(np.prod(self.body.out_shape(s)))
+        if self.shortcut:
+            f += self.shortcut.flops(s)
+        return f
+
+    def eff_flops(self, s):
+        f = self.body.eff_flops(s) + float(np.prod(self.body.out_shape(s)))
+        if self.shortcut:
+            f += self.shortcut.eff_flops(s)
+        return f
+
+    def param_count(self):
+        return self.body.param_count() + (self.shortcut.param_count() if self.shortcut else 0)
+
+
+@dataclass
+class Parallel(Layer):
+    """Concat of branches along channels (Inception mixed blocks)."""
+    branches: Sequence[Layer] = field(default_factory=list)
+
+    def init(self, key):
+        keys = jax.random.split(key, len(self.branches))
+        return [b.init(k) for b, k in zip(self.branches, keys)]
+
+    def apply(self, params, x):
+        outs = [b.apply(p, x) for b, p in zip(self.branches, params)]
+        return jnp.concatenate(outs, axis=-1)
+
+    def out_shape(self, s):
+        shapes = [b.out_shape(s) for b in self.branches]
+        c = sum(sh[-1] for sh in shapes)
+        return (*shapes[0][:-1], c)
+
+    def flops(self, s):
+        return sum(b.flops(s) for b in self.branches)
+
+    def eff_flops(self, s):
+        return sum(b.eff_flops(s) for b in self.branches)
+
+    def param_count(self):
+        return sum(b.param_count() for b in self.branches)

@@ -1,0 +1,196 @@
+"""Shared model machinery: param builders, norms, RoPE, embeddings, loss.
+
+**Builder pattern** — every weight is declared exactly once, via a
+``Builder`` callback that receives (path, shape, logical_axes, init).
+Three builders consume the same declarations:
+
+  * ``InitBuilder``     → real arrays (deterministic per-path keys),
+  * ``AbstractBuilder`` → ``jax.ShapeDtypeStruct`` with NamedSharding
+                          attached (the dry-run never materializes params),
+  * ``SpecBuilder``     → ``PartitionSpec`` pytree (checkpointing, docs).
+
+This guarantees the dry-run, the runtime, and the checkpointer always
+agree about shapes and shardings.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding.api import MeshContext, get_context, shard
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+          "float16": jnp.float16}
+
+
+class Builder:
+    dtype = jnp.bfloat16
+
+    def leaf(self, path: str, shape: tuple[int, ...], axes: tuple, *,
+             init: str | Callable = "normal", scale: float | None = None,
+             dtype=None):
+        raise NotImplementedError
+
+
+class InitBuilder(Builder):
+    def __init__(self, key, dtype=jnp.bfloat16):
+        self.key = key
+        self.dtype = dtype
+
+    def leaf(self, path, shape, axes, *, init="normal", scale=None, dtype=None):
+        dtype = dtype or self.dtype
+        k = jax.random.fold_in(self.key, int(np.uint32(hash(path) & 0x7FFFFFFF)))
+        if callable(init):
+            return init(k, shape, dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "normal":
+            if scale is None:
+                fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+                scale = 1.0 / math.sqrt(max(fan_in, 1))
+            return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+        raise ValueError(init)
+
+
+class AbstractBuilder(Builder):
+    """ShapeDtypeStructs with shardings — feeds ``jit(...).lower()``."""
+
+    def __init__(self, ctx: MeshContext | None, dtype=jnp.bfloat16):
+        self.ctx = ctx
+        self.dtype = dtype
+
+    def leaf(self, path, shape, axes, *, init="normal", scale=None, dtype=None):
+        dtype = dtype or self.dtype
+        if self.ctx is None:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=self.ctx.sharding(axes, shape))
+
+
+class SpecBuilder(Builder):
+    def __init__(self, ctx: MeshContext):
+        self.ctx = ctx
+
+    def leaf(self, path, shape, axes, *, init="normal", scale=None, dtype=None):
+        return self.ctx.spec(axes, shape)
+
+
+# --------------------------------------------------------------------------- #
+# Normalization / activations (fp32 internals, cast back)
+# --------------------------------------------------------------------------- #
+def rms_norm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x.astype(jnp.float32)).astype(x.dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x)
+
+
+def softplus(x):
+    return jax.nn.softplus(x)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / head / loss
+# --------------------------------------------------------------------------- #
+def embed_params(b: Builder, cfg, prefix: str = "embed"):
+    p = {"table": b.leaf(f"{prefix}.table", (cfg.vocab, cfg.d_model),
+                         ("vocab", "embed"), scale=0.02)}
+    if not cfg.tie_embeddings:
+        p_head = b.leaf("lm_head.w", (cfg.d_model, cfg.vocab),
+                        ("embed", "vocab"))
+        return p, {"w": p_head}
+    return p, None
+
+
+def embed_lookup(table, tokens):
+    y = jnp.take(table, tokens, axis=0)
+    return shard(y, "batch", "seq", "embed")
+
+
+def lm_logits(x, embed, head):
+    """x: (B, S, D) → (B, S, V), fp32 for the loss."""
+    w = head["w"] if head is not None else embed["table"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def chunked_cross_entropy(x, embed, head, targets, chunk: int):
+    """CE without materializing the full (B, S, V) fp32 logits: scan over
+    seq chunks; the chunk body is rematerialized in the backward pass so
+    peak logits memory is (B, chunk, V) (§Perf iteration 2).
+
+    x: (B, S, D) final hidden; targets: (B, S) → scalar mean loss."""
+    import jax
+
+    B, S, D = x.shape
+    if chunk <= 0 or S <= chunk or S % chunk != 0:
+        return cross_entropy(lm_logits(x, embed, head), targets)
+    n = S // chunk
+    xs = x.reshape(B, n, chunk, D).swapaxes(0, 1)
+    ts = targets.reshape(B, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(acc, xt):
+        xc, tc = xt
+        logits = lm_logits(xc, embed, head)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+        lab = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - lab), None
+
+    import jax.lax as lax
+    total, _ = lax.scan(body, jnp.zeros((), jnp.float32), (xs, ts))
+    return total / (B * S)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits: (B, S, V) fp32 (possibly vocab-sharded); labels: (B, S)."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    lab = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - lab
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,4 @@
+from .adamw import (OptConfig, init_opt_state, apply_gradients,
+                    cosine_schedule, global_norm)
+from .compress import (CompressionConfig, init_error_state,
+                       compress_gradients)

@@ -1,0 +1,224 @@
+"""Executable ParetoPipe pipeline — orchestrator + workers (paper Fig. 1 / Alg. 1).
+
+This is the *measured* half of the reproduction: a real partitioned
+pipeline running on this host, with
+
+  * two workers (threads standing in for the Pis / the GPU server), each
+    executing its contiguous block range,
+  * an emulated network between them (``tc``-style: RTT/2 + bytes/bw
+    injected as wall-clock delay — exactly what the paper imposes with
+    Linux traffic control),
+  * **dual communication backends**, mirroring the paper's PyTorch-RPC
+    vs. custom-socket study:
+
+      - ``lightweight``: the activation is handed to the next worker as a
+        device array, zero-copy, and each stage is one fused jitted
+        function (the paper's custom TCP backend with tensor
+        serialization only at the wire).
+      - ``rpc``: per-*block* call dispatch (module-granularity RPC), with
+        a full serialize → byte-buffer → deserialize round trip per hop
+        plus a per-call coordination overhead — the structural costs that
+        made PyTorch RPC slow in the paper (Sec. V-C).
+
+Steady-state throughput is measured by streaming batches through both
+workers concurrently (stage 2 of batch i overlaps stage 1 of batch i+1),
+end-to-end latency by timing a lone batch through the empty pipeline —
+the paper's two metrics.
+"""
+from __future__ import annotations
+
+import pickle
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.devices import Link
+
+Backend = Literal["lightweight", "rpc"]
+
+# Coordination overhead charged per RPC call (future creation, GIL
+# handoff, TensorPipe negotiation ~ O(100us) in the paper's setup).
+RPC_PER_CALL_OVERHEAD_S = 200e-6
+
+
+@dataclass
+class EmulatedLink:
+    """tc-netem analogue: sleeps RTT/2 + bytes/bw per message."""
+
+    link: Link
+
+    def send(self, nbytes: int) -> float:
+        dt = self.link.transfer_time(nbytes)
+        time.sleep(dt)
+        return dt
+
+
+class _Serializer:
+    """RPC-style full serialize/deserialize round trip."""
+
+    @staticmethod
+    def dumps(x: jax.Array) -> bytes:
+        host = np.asarray(x)
+        return pickle.dumps((host.shape, str(host.dtype), host.tobytes()))
+
+    @staticmethod
+    def loads(buf: bytes) -> jax.Array:
+        shape, dtype, raw = pickle.loads(buf)
+        return jnp.asarray(np.frombuffer(raw, dtype=dtype).reshape(shape))
+
+
+@dataclass
+class StageStats:
+    exe_s: float = 0.0
+    net_s: float = 0.0
+    calls: int = 0
+    cpu_pct: float = 0.0
+    mem_pct: float = 0.0
+
+
+class Worker:
+    """One pipeline stage: executes blocks[lo:hi] of a CNNModel."""
+
+    def __init__(self, name: str, model, params, lo: int, hi: int,
+                 backend: Backend):
+        self.name, self.lo, self.hi, self.backend = name, lo, hi, backend
+        self.stats = StageStats()
+        sub = params[lo:hi]
+        layers = [layer for (_, layer) in model.blocks[lo:hi]]
+        if backend == "lightweight":
+            def fused(x, _layers=tuple(layers), _sub=tuple(sub)):
+                for l, p in zip(_layers, _sub):
+                    x = l.apply(p, x)
+                return x
+            self._fns = [jax.jit(fused)]
+        else:
+            # module-granularity dispatch, one jitted call per block
+            self._fns = [jax.jit(lambda x, l=layer, p=p: l.apply(p, x))
+                         for layer, p in zip(layers, sub)]
+
+    def warmup(self, x):
+        for fn in self._fns:
+            x = fn(x)
+        jax.block_until_ready(x)
+        return x
+
+    def run(self, x):
+        t0 = time.perf_counter()
+        if self.backend == "rpc":
+            for fn in self._fns:
+                # serialize/deserialize at every module-call boundary
+                x = _Serializer.loads(_Serializer.dumps(x))
+                time.sleep(RPC_PER_CALL_OVERHEAD_S)
+                x = fn(x)
+        else:
+            x = self._fns[0](x)
+        x = jax.block_until_ready(x)
+        self.stats.exe_s += time.perf_counter() - t0
+        self.stats.calls += 1
+        return x
+
+
+@dataclass
+class PipelineResult:
+    backend: Backend
+    partition: int
+    latency_s: float               # lone-batch end-to-end
+    throughput: float              # samples/s steady state
+    stage_exe_s: tuple[float, ...]  # mean per-batch exe per stage
+    net_s: float                   # mean per-batch wire time
+    cpu_pct: tuple[float, ...]
+    mem_pct: tuple[float, ...]
+
+
+class EdgePipeline:
+    """Orchestrator (paper Alg. 1): split model at ``p``, deploy to two
+    workers, stream batches, measure."""
+
+    def __init__(self, model, params, p: int, link: Link,
+                 backend: Backend = "lightweight"):
+        n = len(model.blocks)
+        if not (1 <= p <= n - 1):
+            raise ValueError(f"split {p} out of range 1..{n-1}")
+        self.model, self.p, self.backend = model, p, backend
+        self.w1 = Worker("worker1", model, params, 0, p, backend)
+        self.w2 = Worker("worker2", model, params, p, n, backend)
+        self.net = EmulatedLink(link)
+
+    # ------------------------------------------------------------------ #
+    def _transfer(self, x) -> tuple[jax.Array, float]:
+        nbytes = x.size * x.dtype.itemsize
+        if self.backend == "rpc":
+            buf = _Serializer.dumps(x)
+            dt = self.net.send(len(buf))
+            return _Serializer.loads(buf), dt
+        dt = self.net.send(nbytes)
+        return x, dt
+
+    def run_one(self, x) -> tuple[jax.Array, float, float]:
+        """One batch through the empty pipeline → (out, latency, net_s)."""
+        t0 = time.perf_counter()
+        a = self.w1.run(x)
+        a, net = self._transfer(a)
+        y = self.w2.run(a)
+        return y, time.perf_counter() - t0, net
+
+    def measure(self, make_batch: Callable[[], jax.Array],
+                n_batches: int = 10, warmup: int = 1) -> PipelineResult:
+        import psutil
+        x = make_batch()
+        a = self.w1.warmup(x)
+        self.w2.warmup(a)
+        self.w1.stats = StageStats()
+        self.w2.stats = StageStats()
+
+        # --- latency: lone batches ---------------------------------- #
+        lat, net_t = [], []
+        for _ in range(max(warmup, 1)):
+            self.run_one(x)
+        for _ in range(max(n_batches // 3, 2)):
+            _, l, nt = self.run_one(x)
+            lat.append(l)
+            net_t.append(nt)
+
+        # --- throughput: streamed, stages overlap -------------------- #
+        self.w1.stats = StageStats()
+        self.w2.stats = StageStats()
+        q: queue.Queue = queue.Queue(maxsize=2)
+        done: queue.Queue = queue.Queue()
+        psutil.cpu_percent(None)
+        p_mem = psutil.virtual_memory().percent
+
+        def stage2():
+            while True:
+                item = q.get()
+                if item is None:
+                    return
+                done.put(self.w2.run(item))
+
+        t = threading.Thread(target=stage2, daemon=True)
+        t.start()
+        t0 = time.perf_counter()
+        for _ in range(n_batches):
+            a = self.w1.run(x)
+            a, _ = self._transfer(a)
+            q.put(a)
+        q.put(None)
+        t.join()
+        total = time.perf_counter() - t0
+        cpu = psutil.cpu_percent(None) * psutil.cpu_count()
+        batch = x.shape[0]
+        return PipelineResult(
+            backend=self.backend, partition=self.p,
+            latency_s=float(np.mean(lat)),
+            throughput=n_batches * batch / total,
+            stage_exe_s=(self.w1.stats.exe_s / self.w1.stats.calls,
+                         self.w2.stats.exe_s / self.w2.stats.calls),
+            net_s=float(np.mean(net_t)),
+            cpu_pct=(cpu, cpu), mem_pct=(p_mem, p_mem),
+        )

@@ -1,0 +1,128 @@
+"""Step functions: train / prefill / decode — the units jit compiles.
+
+These are what the dry-run lowers, what the launcher runs, and what the
+pipeline runtime wraps, for every architecture family.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm
+from ..models.common import cross_entropy
+from ..optim import (CompressionConfig, OptConfig, apply_gradients,
+                     compress_gradients)
+
+
+def loss_fn(cfg, params, batch):
+    """CE via the seq-chunked head (logits never fully materialized —
+    §Perf iteration 2); falls back to dense logits for tiny S."""
+    from ..models.common import chunked_cross_entropy
+    inputs = {k: v for k, v in batch.items() if k != "targets"}
+    if cfg.family == "encdec":
+        enc = lm.encode(cfg, params, inputs["frames"])
+        x = lm.decoder_train(cfg, params, inputs["tokens"], enc)
+        aux = 0.0
+    else:
+        x = lm.embed_inputs(cfg, params, inputs)
+        positions = jnp.arange(x.shape[1])
+        x, aux = lm.trunk_train(cfg, params, x, positions)
+        x = lm.final_hidden(cfg, params, x)
+    ce = chunked_cross_entropy(x, params["embed"], params.get("lm_head"),
+                               batch["targets"], cfg.ce_chunk)
+    return ce + 1e-2 * aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg, opt: OptConfig,
+                    comp: CompressionConfig | None = None,
+                    grad_accum: int = 1):
+    """``grad_accum`` > 1 scans microbatches with fp32 gradient
+    accumulation — activation working set shrinks by the factor at the
+    cost of re-streaming weights per microbatch (§Perf iteration 4)."""
+    comp = comp or CompressionConfig()
+
+    # ZeRO-1 (§Perf iteration 5): the fp32 gradient accumulator shards
+    # over data×model like the optimizer moments — otherwise it would
+    # replicate a full fp32 gradient per data shard.
+    from ..sharding.api import get_context, shard_zero1
+    from ..models.common import SpecBuilder
+    _specs = None
+    if get_context() is not None:
+        _specs = lm.build_params(cfg, SpecBuilder(get_context()))
+
+    def _z1(tree):
+        if _specs is None:
+            return tree
+        return jax.tree.map(lambda g, sp: shard_zero1(g, sp), tree, _specs)
+
+    def _grads(params, batch):
+        if grad_accum <= 1:
+            return jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        mbs = jax.tree.map(
+            lambda a: a.reshape(grad_accum, a.shape[0] // grad_accum,
+                                *a.shape[1:]), batch)
+
+        def body(carry, mb):
+            gsum, lsum = carry
+            (l, parts), g = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, mb), has_aux=True)(params)
+            # constrain the raw per-microbatch gradient too: its DP
+            # reduction then lowers to reduce-scatter instead of
+            # materializing a full unsharded gradient + all-reduce
+            g = _z1(jax.tree.map(lambda b: b.astype(jnp.float32), g))
+            gsum = _z1(jax.tree.map(jnp.add, gsum, g))
+            return (gsum, lsum + l), parts
+
+        g0 = _z1(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params))
+        (gsum, lsum), parts = jax.lax.scan(body, (g0, 0.0), mbs)
+        grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+        parts = jax.tree.map(lambda a: a[-1], parts)
+        return (lsum / grad_accum, parts), grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        (loss, parts), grads = _grads(params, batch)
+        if comp.enabled:
+            grads, err = compress_gradients(grads, state["err"], comp)
+        new_params, opt_state, om = apply_gradients(params, grads,
+                                                    state["opt"], opt)
+        new_state = {"params": new_params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        if comp.enabled:
+            new_state["err"] = err
+        metrics = {"loss": loss, **parts, **om}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, cache_len: int | None = None):
+    def prefill_step(params, inputs):
+        logits, cache = lm.forward_prefill(cfg, params, inputs, cache_len)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, token, cache):
+        logits, cache = lm.forward_decode(cfg, params, token, cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+    return decode_step
+
+
+def init_train_state(cfg, key, opt: OptConfig,
+                     comp: CompressionConfig | None = None,
+                     dtype=None):
+    from ..models.common import DTYPES, InitBuilder
+    from ..optim import init_error_state, init_opt_state
+    b = InitBuilder(key, dtype or DTYPES[cfg.dtype])
+    params = lm.build_params(cfg, b)
+    state = {"params": params, "opt": init_opt_state(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if comp is not None and comp.enabled:
+        state["err"] = init_error_state(params)
+    return state

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests must see the real single device — the 512-device override is
+# exclusively for launch/dryrun.py (assignment requirement).
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "do not run tests with the dry-run XLA_FLAGS set"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

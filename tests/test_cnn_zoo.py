@@ -1,0 +1,69 @@
+"""CNN zoo: exact param counts (Table I), block counts, partition identity."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.cnn import zoo
+
+# canonical torchvision counts @1000 classes
+TORCHVISION_COUNTS = {
+    "mobilenetv2": 3_504_872,
+    "resnet18": 11_689_512,
+    "resnet50": 25_557_032,
+    "alexnet": 61_100_840,
+    "vgg16": 138_357_544,
+}
+
+# paper Table I block counts
+PAPER_BLOCKS = {"mobilenetv2": 21, "resnet18": 14, "inceptionv3": 22,
+                "resnet50": 22, "alexnet": 21, "vgg16": 39}
+
+
+@pytest.mark.parametrize("name,count", sorted(TORCHVISION_COUNTS.items()))
+def test_param_counts_exact(name, count):
+    assert zoo.get(name, num_classes=1000).param_count() == count
+
+
+def test_paper_mobilenet_count_10_classes():
+    # paper Table I reports the CIFAR-10 head for MobileNetV2
+    assert zoo.get("mobilenetv2", num_classes=10).param_count() == 2_236_682
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_BLOCKS))
+def test_block_counts_match_table1(name):
+    assert len(zoo.get(name).blocks) == PAPER_BLOCKS[name]
+
+
+@pytest.mark.parametrize("name,hw", [("mobilenetv2", 64), ("resnet18", 64),
+                                     ("alexnet", 224)])
+def test_every_partition_bit_identical(name, hw):
+    """The property Table I's accuracy column stands in for: splitting
+    never changes the math (checked at every block boundary)."""
+    m = zoo.get(name)
+    params = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, hw, hw, 3))
+    ref = m.apply(params, x)
+    n = len(m.blocks)
+    for p in range(1, n, max(n // 6, 1)):
+        a = m.apply_range(params, x, 0, p)
+        y = m.apply_range(params, a, p, n)
+        assert jnp.array_equal(ref, y), f"split at {p} changed outputs"
+    assert not bool(jnp.any(jnp.isnan(ref)))
+
+
+def test_block_graph_flops_match_published_macs():
+    """Sanity: FLOPs ≈ 2× published MACs at 224²/299²."""
+    expect = {"mobilenetv2": 0.60, "resnet18": 3.6, "resnet50": 8.2,
+              "alexnet": 1.4, "vgg16": 31.0, "inceptionv3": 11.4}
+    for name, gf in expect.items():
+        got = zoo.get(name).block_graph().total_flops / 1e9
+        assert abs(got - gf) / gf < 0.15, (name, got)
+
+
+def test_weight_sizes_match_table1_mb():
+    """Table I 'Size (MB)' column (fp32 weights)."""
+    expect = {"mobilenetv2": 8.8, "resnet18": 43, "resnet50": 91,
+              "alexnet": 234, "vgg16": 528}
+    for name, mb in expect.items():
+        got = zoo.get(name).block_graph().total_weight_bytes / 1e6
+        assert abs(got - mb) / mb < 0.12, (name, got)

@@ -1,0 +1,97 @@
+"""Property + unit tests for the ParetoPipe core (the paper's algorithm)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Block, BlockGraph, chain, dominates, hypervolume,
+                        is_on_front, knee_point, pareto_front)
+
+points = st.lists(
+    st.tuples(st.floats(0.01, 100, allow_nan=False),
+              st.floats(0.01, 100, allow_nan=False)),
+    min_size=1, max_size=60)
+
+
+@given(points)
+@settings(max_examples=200, deadline=None)
+def test_front_is_nondominated(pts):
+    front = pareto_front(pts)
+    for p in front:
+        assert not any(dominates(q, p) for q in pts)
+
+
+@given(points)
+@settings(max_examples=200, deadline=None)
+def test_every_point_dominated_or_on_front(pts):
+    front = set(map(tuple, pareto_front(pts)))
+    for p in pts:
+        assert tuple(p) in front or any(dominates(q, p) for q in front)
+
+
+@given(points)
+@settings(max_examples=200, deadline=None)
+def test_front_monotone(pts):
+    """Sorted by latency ascending, throughput must strictly increase."""
+    front = pareto_front(pts)
+    for a, b in zip(front, front[1:]):
+        assert a[0] < b[0] and a[1] < b[1]
+
+
+@given(points)
+@settings(max_examples=100, deadline=None)
+def test_front_idempotent(pts):
+    f1 = pareto_front(pts)
+    assert pareto_front(f1) == f1
+
+
+@given(points, st.tuples(st.floats(0.01, 100), st.floats(0.01, 100)))
+@settings(max_examples=100, deadline=None)
+def test_adding_dominated_point_keeps_front(pts, extra):
+    front = pareto_front(pts)
+    if any(dominates(q, extra) for q in front):
+        assert set(map(tuple, pareto_front(pts + [extra]))) \
+            == set(map(tuple, front))
+
+
+@given(points)
+@settings(max_examples=100, deadline=None)
+def test_hypervolume_nonneg_and_front_invariant(pts):
+    ref = max(p[0] for p in pts) * 1.1
+    hv_all = hypervolume(pts, ref)
+    hv_front = hypervolume(pareto_front(pts), ref)
+    assert hv_all >= 0
+    assert math.isclose(hv_all, hv_front, rel_tol=1e-9, abs_tol=1e-12)
+
+
+def test_dominates_basic():
+    assert dominates((1.0, 10.0), (2.0, 5.0))
+    assert not dominates((1.0, 5.0), (2.0, 10.0))
+    assert not dominates((1.0, 5.0), (1.0, 5.0))  # equal: no strict improve
+
+
+def test_knee_on_front():
+    pts = [(1, 1), (2, 5), (3, 6), (10, 6.5)]
+    k = knee_point(pts)
+    assert is_on_front(k, pts)
+    assert k in ((2, 5), (3, 6))  # a balanced pick, not an extreme
+    assert k != (1, 1) and k != (10, 6.5)
+
+
+def test_blockgraph_cut_bytes_and_shared_groups():
+    blocks = (
+        Block("a", 1e6, 100, out_bytes=10),
+        Block("b", 1e6, 200, out_bytes=20, shared_group="s"),
+        Block("c", 1e6, 200, out_bytes=30, shared_group="s"),
+        Block("d", 1e6, 50, out_bytes=40, broadcast_bytes=7),
+        Block("e", 1e6, 60, out_bytes=50),
+    )
+    g = BlockGraph("t", blocks, input_bytes=5, output_bytes=3)
+    assert g.cut_bytes(0) == 5
+    assert g.cut_bytes(2) == 20
+    assert g.cut_bytes(5) == 3
+    assert g.cut_bytes(5 - 1) == 40 + 7  # broadcast edge crosses later cuts...
+    # shared group counted once globally and once per segment
+    assert g.total_weight_bytes == 100 + 200 + 50 + 60
+    assert g.segment_weight_bytes(1, 3) == 200
+    assert g.segment_weight_bytes(0, 5) == g.total_weight_bytes

@@ -1,0 +1,111 @@
+"""Partitioner: DP-vs-exhaustive equivalence, cost-model calibration."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Block, BlockGraph, CostTable, best_latency,
+                        best_throughput, dp_front_kway, evaluate_pipeline,
+                        pareto_front, sweep_2way, sweep_kway)
+from repro.core import scenarios
+from repro.core.devices import DeviceProfile, Link
+
+
+def rand_graph(draw):
+    n = draw(st.integers(3, 10))
+    blocks = tuple(
+        Block(f"b{i}",
+              flops=draw(st.floats(1e5, 1e9)),
+              weight_bytes=draw(st.integers(100, 10**6)),
+              out_bytes=draw(st.integers(100, 10**6)))
+        for i in range(n))
+    return BlockGraph("g", blocks, input_bytes=1000, output_bytes=100)
+
+
+graphs = st.composite(rand_graph)()
+
+
+@given(graphs, st.integers(2, 4))
+@settings(max_examples=40, deadline=None)
+def test_dp_front_matches_exhaustive(g, k):
+    devs = tuple(DeviceProfile(f"d{i}", flops_per_s=1e9 * (i + 1),
+                               mem_bytes=10**12) for i in range(k))
+    links = tuple(Link(f"l{i}", rtt_s=1e-3, bw_bytes_per_s=1e8)
+                  for i in range(k - 1))
+    ex = pareto_front(sweep_kway(g, devs, links, batch=4))
+    dp = dp_front_kway(g, devs, links, batch=4)
+    ex_pts = sorted((round(p.latency_s, 10), round(p.throughput, 6))
+                    for p in ex)
+    dp_pts = sorted((round(p.latency_s, 10), round(p.throughput, 6))
+                    for p in dp)
+    assert ex_pts == dp_pts
+
+
+@given(graphs)
+@settings(max_examples=30, deadline=None)
+def test_more_bandwidth_never_hurts(g):
+    s = scenarios.pi_to_pi()
+    slow = Link("slow", rtt_s=1e-3, bw_bytes_per_s=1e6)
+    fast = Link("fast", rtt_s=1e-3, bw_bytes_per_s=1e9)
+    for p in range(1, g.n_blocks):
+        m_slow = evaluate_pipeline(g, (p,), s.devices, (slow,), batch=2)
+        m_fast = evaluate_pipeline(g, (p,), s.devices, (fast,), batch=2)
+        assert m_fast.latency_s <= m_slow.latency_s + 1e-12
+        assert m_fast.throughput >= m_slow.throughput - 1e-9
+
+
+def test_cost_table_overrides_analytic():
+    g = BlockGraph("g", (Block("a", 1e9, 10, 10), Block("b", 1e9, 10, 10)),
+                   input_bytes=10)
+    s = scenarios.pi_to_pi()
+    t = CostTable()
+    t.set("pi4b", "a", 0.123)
+    m = evaluate_pipeline(g, (1,), s.devices, s.links, batch=1, costs=t,
+                          include_io=False)
+    # stage 0 = measured; stage 1 = analytic 1e9 / 10e9 = 0.1 s + overhead
+    assert math.isclose(m.stages[0].compute_s, 0.123 + 5e-3, rel_tol=1e-6)
+    assert math.isclose(m.stages[1].compute_s, 0.1 + 5e-3, rel_tol=1e-6)
+
+
+def test_paper_calibration_mobilenet_p3():
+    """Table II: MobileNetV2 P3 → thr ≈ batch/(pi1_exe + net).  Our model
+    must land in the paper's regime (seconds-scale, single-digit img/s)."""
+    from repro.models.cnn import zoo
+    g = zoo.get("mobilenetv2").block_graph()
+    s = scenarios.pi_to_pi()
+    pts = sweep_2way(g, s.devices, s.links[0], batch=8)
+    thr = best_throughput(pts)
+    assert 0.5 < thr.throughput < 50          # paper: 7.8 img/s
+    lat = best_latency(pts)
+    assert 0.05 < lat.latency_s < 20          # paper: ~2 s
+    assert all(p.feasible for p in pts)
+
+
+def test_duress_shifts_frontier():
+    """Sec. V-B: under 200 ms / 5 Mbit/s the frontier must move to higher
+    latency & lower throughput, and the min-transfer split must win."""
+    from repro.models.cnn import zoo
+    g = zoo.get("mobilenetv2").block_graph()
+    base = scenarios.pi_to_pi()
+    dur = scenarios.duress(base)
+    pts_base = sweep_2way(g, base.devices, base.links[0], batch=8)
+    pts_dur = sweep_2way(g, dur.devices, dur.links[0], batch=8)
+    assert best_latency(pts_dur).latency_s > best_latency(pts_base).latency_s
+    assert best_throughput(pts_dur).throughput < \
+        best_throughput(pts_base).throughput
+    # under duress the optimal split minimizes transferred bytes
+    best_dur = best_throughput(pts_dur)
+    cut_bytes = g.cut_bytes(best_dur.partition[0])
+    median = sorted(g.cut_bytes(p) for p in range(1, g.n_blocks))[
+        g.n_blocks // 2]
+    assert cut_bytes <= median
+
+
+def test_pi_to_gpu_offloads_aggressively():
+    """Fig. 4: with a GPU as stage 2, the best split offloads early."""
+    from repro.models.cnn import zoo
+    g = zoo.get("mobilenetv2").block_graph()
+    s = scenarios.pi_to_gpu()
+    pts = sweep_2way(g, s.devices, s.links[0], batch=8)
+    bt = best_throughput(pts)
+    assert bt.partition[0] <= 3               # paper: P1
