@@ -1,0 +1,28 @@
+# Developer loop for the ParetoPipe reproduction.
+#
+#   make test-fast   — the development tier: everything except the
+#                      multi-minute train/system drills (marker: slow)
+#   make test        — tier-1 verify, the full suite (what CI runs)
+#   make bench-quick — analytic benchmarks only (no wall-clock measuring)
+#   make demo        — k-stage adaptive loop demo under a WAN ramp
+
+PY      ?= python
+PYTEST  ?= $(PY) -m pytest
+ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench bench-quick demo
+
+test:
+	$(ENV) $(PYTEST) -x -q
+
+test-fast:
+	$(ENV) $(PYTEST) -q -m "not slow"
+
+bench:
+	$(ENV) $(PY) -m benchmarks.run
+
+bench-quick:
+	$(ENV) $(PY) -m benchmarks.run --quick
+
+demo:
+	$(ENV) $(PY) examples/kway_adaptive.py

@@ -1,0 +1,138 @@
+"""Beyond-paper: k-stage executable pipeline vs. the analytic model.
+
+Two artifacts on the 3-stage pi→pi→gpu chain:
+
+  * ``kway_front``    — predicted (``dp_front_kway``, host-calibrated via
+    block-wise wall-clock profiling) vs. *measured* (``EdgePipeline``)
+    latency fronts, under healthy links and under the fully-degraded WAN
+    (the ramp's two endpoints).  Reports pairwise ordering agreement —
+    the property that makes the analytic front trustworthy for placement.
+  * ``kway_adaptive`` — the closed loop under the degrading ``LinkTrace``
+    (observed wire times → estimators → re-solve → live migration),
+    reporting the migration trail and the latency it saved versus
+    pinning the initial cuts.
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax
+import numpy as np
+
+from repro.core import CostTable, dp_front_kway, pareto_front, scenarios
+from repro.core.profiler import profile_wallclock
+from repro.models.cnn import zoo
+from repro.runtime.adaptive import AdaptiveRuntime
+from repro.runtime.edge import EdgePipeline
+
+BATCH = 2
+HW = 32
+
+
+def _setup():
+    m = zoo.get("mobilenetv2")
+    params = m.init(jax.random.PRNGKey(0))
+    graph = m.block_graph(input_hw=HW)
+    x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, HW, HW, 3))
+    return m, params, graph, x
+
+
+def _host_costs(m, params, x, device_names) -> CostTable:
+    """Calibrate the analytic side to THIS host: wall-clock profile every
+    block once, then bill every scenario device at host speed (the
+    executable workers are all host threads)."""
+    names, fns = m.block_fns(params)
+    table = profile_wallclock(device_names[0], fns, names,
+                              make_input=lambda _: x, repeats=3)
+    for dev in device_names[1:]:
+        for blk in names:
+            table.set(dev, blk, table.get(device_names[0], blk))
+    return table
+
+
+def _pairwise_agreement(pred: list[float], meas: list[float],
+                        margin: float = 0.10) -> tuple[float | None, int]:
+    """(agreement, n_decisive_pairs): fraction of *decisive* point pairs
+    (predicted latencies differing by more than ``margin``) whose
+    predicted ordering matches the measured ordering.  Near-ties carry
+    no placement information, so they are excluded rather than counted
+    as coin flips; with no decisive pair at all the agreement is None
+    (unknown), never a vacuous 1.0."""
+    pairs = [(i, j) for i, j in itertools.combinations(range(len(pred)), 2)
+             if abs(pred[i] - pred[j]) / max(pred[i], pred[j]) > margin]
+    if not pairs:
+        return None, 0
+    ok = sum((pred[i] < pred[j]) == (meas[i] < meas[j]) for i, j in pairs)
+    return ok / len(pairs), len(pairs)
+
+
+def kway_front() -> list[str]:
+    print("\n== k-way runtime: predicted vs measured front (pi->pi->gpu) ==")
+    m, params, graph, x = _setup()
+    ramp = scenarios.get("pi_pi_gpu_wan_ramp")
+    costs = _host_costs(m, params, x, [d.name for d in ramp.devices])
+    rows: list[str] = []
+    for cond, t in (("healthy", 0.0), ("degraded", 1e9)):
+        scen = ramp.at(t)
+        front = dp_front_kway(graph, scen.devices, scen.links, batch=BATCH,
+                              costs=costs, include_io=False)
+        picks = front[:: max(len(front) // 4, 1)][:4]
+        pred_lat, meas_lat, pred_thr, meas_thr = [], [], [], []
+        for pt in picks:
+            pipe = EdgePipeline(m, params, pt.partition, scen)
+            r = pipe.measure(lambda: x, n_batches=6)
+            pred_lat.append(pt.latency_s)
+            meas_lat.append(r.latency_s)
+            pred_thr.append(pt.throughput)
+            meas_thr.append(r.throughput)
+            print(f"  {cond:9s} cuts={pt.partition}  "
+                  f"lat {pt.latency_s*1e3:8.1f} -> {r.latency_s*1e3:8.1f} ms"
+                  f"   thr {pt.throughput:7.1f} -> {r.throughput:7.1f}/s")
+        # On healthy links lone-batch latency is partition-invariant
+        # (the paper's finding) — the throughput axis carries the
+        # ordering information there; under duress the wire dominates
+        # and latency becomes decisive too.
+        for axis, pred, meas in (("lat", pred_lat, meas_lat),
+                                 ("thr", pred_thr, meas_thr)):
+            agree, n_pairs = _pairwise_agreement(pred, meas)
+            label = ("n/a (no decisive pairs)" if agree is None
+                     else f"{agree:.2f}")
+            print(f"  {cond:9s} {axis} ordering agreement: {label} "
+                  f"({n_pairs} decisive pairs over {len(picks)} points)")
+            rows.append(
+                f"kway_front/{cond}/{axis},0.0,"
+                f"agreement={'nan' if agree is None else f'{agree:.2f}'};"
+                f"pairs={n_pairs};points={len(picks)}")
+    return rows
+
+
+def kway_adaptive() -> list[str]:
+    print("\n== k-way runtime: closed adaptive loop under WAN ramp ==")
+    m, params, graph, x = _setup()
+    base = scenarios.get("pi_pi_gpu")
+    scen = scenarios.wan_ramp(base, hop=0, t_start=0.3, t_end=1.5,
+                              jitter=0.0)
+    n_batches = 20
+
+    rt = AdaptiveRuntime(m, params, scen, graph=graph, batch=BATCH,
+                         policy="throughput", check_every=2,
+                         migration_cost_s=0.05, alpha=0.6)
+    start = rt.pipe.cuts
+    recs = rt.run(lambda: x, n_batches=n_batches)
+    adaptive_tail = float(np.mean([r.latency_s for r in recs[-4:]]))
+
+    # baseline: cuts pinned at the lab-condition choice, measured on the
+    # fully-degraded link (a few lone batches — each is seconds-long)
+    pinned = EdgePipeline(m, params, start, scen.at(1e9))
+    pinned.warmup(x)
+    pinned_tail = float(np.mean([pinned.run_one(x)[1] for _ in range(3)]))
+
+    trail = " -> ".join(map(str, rt.cut_history))
+    print(f"  cuts {trail}  ({len(rt.pipe.migrations)} migrations)")
+    print(f"  steady-state latency after degrade: adaptive "
+          f"{adaptive_tail*1e3:7.1f} ms vs pinned {pinned_tail*1e3:7.1f} ms "
+          f"({pinned_tail/max(adaptive_tail, 1e-9):.1f}x)")
+    rows = [f"kway_adaptive/migrations,0.0,n={len(rt.pipe.migrations)}",
+            f"kway_adaptive/tail_latency,{adaptive_tail*1e6:.0f},"
+            f"pinned_x={pinned_tail/max(adaptive_tail, 1e-9):.1f}"]
+    return rows

@@ -17,6 +17,7 @@ def main() -> None:
                     help="skip the measured (wall-clock) benches")
     args = ap.parse_args()
 
+    from . import kway_runtime as K
     from . import paper_tables as P
     from . import tpu_pod_pareto as T
 
@@ -29,8 +30,10 @@ def main() -> None:
         "fig7": P.fig7_backends,
         "table23": P.table23_breakdown,
         "pod_pareto": T.pod_pareto,
+        "kway_front": K.kway_front,
+        "kway_adaptive": K.kway_adaptive,
     }
-    measured = {"fig2", "fig7"}
+    measured = {"fig2", "fig7", "kway_front", "kway_adaptive"}
     rows: list[str] = []
     for name, fn in benches.items():
         if args.only and args.only not in name:

@@ -2,8 +2,10 @@
 
 Public API:
     Block, BlockGraph, chain          — block-level model abstraction
-    DeviceProfile, Link               — hardware/network models
+    DeviceProfile, Link, LinkTrace    — hardware/network models (static +
+                                        time-varying links)
     CostTable, evaluate_pipeline      — pipeline performance model
+    solve                             — unified scenario-driven search
     sweep_2way, sweep_kway,
     dp_front_kway                     — partition search engines
     pareto_front, knee_point,
@@ -13,9 +15,10 @@ Public API:
 """
 from .blocks import Block, BlockGraph, chain
 from .costmodel import CostTable, PipelineMetrics, StageMetrics, evaluate_pipeline
-from .devices import DeviceProfile, Link
+from .devices import (DeviceProfile, Link, LinkTrace, link_at, ramp_trace,
+                      step_trace)
 from .pareto import dominates, hypervolume, is_on_front, knee_point, pareto_front
-from .partitioner import (best_latency, best_throughput, dp_front_kway,
+from .partitioner import (best_latency, best_throughput, dp_front_kway, solve,
                           sweep_2way, sweep_kway)
 from .autosplit import AdaptiveSplitter, LinkEstimator
 from .scenarios import Scenario
@@ -24,9 +27,10 @@ from . import devices, scenarios, profiler
 __all__ = [
     "Block", "BlockGraph", "chain",
     "CostTable", "PipelineMetrics", "StageMetrics", "evaluate_pipeline",
-    "DeviceProfile", "Link",
+    "DeviceProfile", "Link", "LinkTrace", "link_at", "ramp_trace", "step_trace",
     "dominates", "hypervolume", "is_on_front", "knee_point", "pareto_front",
-    "best_latency", "best_throughput", "dp_front_kway", "sweep_2way", "sweep_kway",
+    "best_latency", "best_throughput", "dp_front_kway", "solve",
+    "sweep_2way", "sweep_kway",
     "AdaptiveSplitter", "LinkEstimator", "Scenario",
     "devices", "scenarios", "profiler",
 ]

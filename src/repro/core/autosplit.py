@@ -6,24 +6,26 @@ must be *network-aware*.  The paper leaves adaptive selection to future
 work; we implement it:
 
   * ``LinkEstimator`` — EWMA estimates of RTT and bandwidth from observed
-    transfers (what a runtime actually sees).
-  * ``AdaptiveSplitter`` — re-solves the Pareto front with the estimated
-    link, picks a point for the active policy (min-latency /
+    transfers (what a runtime actually sees).  The executable runtime
+    (``runtime.adaptive``) feeds one estimator per hop straight from its
+    emulated-wire observations.
+  * ``AdaptiveSplitter`` — re-solves the Pareto front for the *whole*
+    device chain (any depth, via ``partitioner.solve``) with the
+    estimated links, picks a point for the active policy (min-latency /
     max-throughput / knee), and migrates only when the predicted gain
     beats a hysteresis threshold (migration = redeploying weights, which
-    has a real cost the splitter accounts for).
+    has a real cost the runtime charges via ``migration_cost_s``).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Literal
+from typing import Literal, Sequence
 
 from .blocks import BlockGraph
-from .costmodel import CostTable, PipelineMetrics
-from .devices import Link
-from .pareto import knee_point, pareto_front
-from .partitioner import best_latency, best_throughput, sweep_2way
+from .costmodel import CostTable, PipelineMetrics, evaluate_pipeline
+from .devices import Link, LinkTrace, link_at
+from .pareto import knee_point
+from .partitioner import best_latency, best_throughput, solve
 from .scenarios import Scenario
 
 Policy = Literal["latency", "throughput", "knee"]
@@ -37,12 +39,20 @@ class LinkEstimator:
     bw_bytes_per_s: float
     alpha: float = 0.3
 
+    @classmethod
+    def from_link(cls, link, alpha: float = 0.3) -> "LinkEstimator":
+        """Seed the estimator with a link's nominal (t=0) conditions."""
+        l = link_at(link, 0.0)
+        return cls(rtt_s=l.rtt_s, bw_bytes_per_s=l.bw_bytes_per_s, alpha=alpha)
+
     def observe(self, nbytes: float, elapsed_s: float, is_rtt_probe: bool = False):
         if is_rtt_probe:
             self.rtt_s = (1 - self.alpha) * self.rtt_s + self.alpha * elapsed_s
             return
-        # attribute elapsed = rtt/2 + bytes/bw
-        serv = max(elapsed_s - self.rtt_s / 2.0, 1e-9)
+        # attribute elapsed = rtt/2 + bytes/bw; floor the serviceable time
+        # at a fraction of elapsed so a jittery small transfer arriving
+        # "before" the estimated RTT cannot imply near-infinite bandwidth
+        serv = max(elapsed_s - self.rtt_s / 2.0, 0.05 * elapsed_s, 1e-9)
         bw = nbytes / serv
         self.bw_bytes_per_s = (1 - self.alpha) * self.bw_bytes_per_s + self.alpha * bw
 
@@ -59,6 +69,11 @@ class AdaptiveSplitter:
     costs: CostTable | None = None
     hysteresis: float = 0.10          # required relative improvement
     migration_cost_s: float = 1.0     # one-off cost of moving the split
+    # charge orchestrator dispatch/return IO in the model?  True for the
+    # paper's analytic studies; the executable runtime has no dispatch
+    # hop, so the closed loop (runtime.adaptive) solves with False to
+    # optimize the objective the pipeline actually exhibits.
+    include_io: bool = True
     current: PipelineMetrics | None = None
     history: list = field(default_factory=list)
 
@@ -74,32 +89,72 @@ class AdaptiveSplitter:
         """Lower is better (throughput negated)."""
         return m.latency_s if self.policy == "latency" else -m.throughput
 
-    def solve(self, link: Link | None = None) -> PipelineMetrics:
-        scen = self.scenario if link is None else self.scenario.with_link(0, link)
-        points = sweep_2way(self.graph, scen.devices, scen.links[0],
-                            batch=self.batch, costs=self.costs)
-        return self._pick(points)
+    def _with_links(self, links) -> Scenario:
+        """Scenario with hop links overridden.
 
-    def step(self, estimator: LinkEstimator) -> tuple[PipelineMetrics, bool]:
-        """Re-evaluate with the current link estimate.  Returns the active
-        partition and whether a migration happened."""
-        cand = self.solve(estimator.as_link())
+        ``links`` may be None (nominal scenario), a single Link (hop 0,
+        the 2-stage convention), or a per-hop sequence where ``None``
+        entries keep the scenario's own link."""
+        scen = self.scenario
+        if links is None:
+            return scen
+        if isinstance(links, (Link, LinkTrace)):
+            links = (links,)
+        for i, l in enumerate(links):
+            if l is not None:
+                scen = scen.with_link(i, l, name=scen.name)
+        return scen
+
+    def solve(self, link: Link | Sequence[Link | None] | None = None
+              ) -> PipelineMetrics:
+        return self._pick(self._solve_points(self._with_links(link)))
+
+    def _solve_points(self, scen: Scenario):
+        return solve(self.graph, scen, batch=self.batch, costs=self.costs,
+                     include_io=self.include_io)
+
+    def _reprice(self, partition: tuple[int, ...],
+                 scen: Scenario) -> PipelineMetrics | None:
+        """Re-evaluate the *current* cuts under new conditions; None when
+        the cut vector is no longer valid for the graph/chain (e.g. the
+        graph or pipeline depth changed between steps)."""
+        static = scen.at(0.0)
+        try:
+            return evaluate_pipeline(self.graph, partition, static.devices,
+                                     static.links, batch=self.batch,
+                                     costs=self.costs,
+                                     include_io=self.include_io)
+        except ValueError:
+            return None
+
+    def step(self, estimator: "LinkEstimator | Sequence[LinkEstimator]"
+             ) -> tuple[PipelineMetrics, bool]:
+        """Re-evaluate with the current link estimate(s).
+
+        ``estimator`` is one LinkEstimator (2-stage convention: hop 0) or
+        a per-hop sequence.  Returns the active partition and whether a
+        migration happened."""
+        ests = ([estimator] if isinstance(estimator, LinkEstimator)
+                else list(estimator))
+        links = [e.as_link(f"est_hop{i}") for i, e in enumerate(ests)]
+        scen = self._with_links(links)
+        cand = self._pick(self._solve_points(scen))
         migrated = False
         if self.current is None:
             self.current, migrated = cand, True
         elif cand.partition != self.current.partition:
             # re-price the *current* split under the new conditions
-            cur = next(
-                p for p in sweep_2way(self.graph, self.scenario.devices,
-                                      estimator.as_link(), batch=self.batch,
-                                      costs=self.costs)
-                if p.partition == self.current.partition)
-            old, new = self._objective(cur), self._objective(cand)
-            gain = (old - new) / max(abs(old), 1e-12)
-            if gain > self.hysteresis:
+            cur = self._reprice(self.current.partition, scen)
+            if cur is None:
+                # current cuts are stale/invalid — must migrate
                 self.current, migrated = cand, True
             else:
-                self.current = cur
+                old, new = self._objective(cur), self._objective(cand)
+                gain = (old - new) / max(abs(old), 1e-12)
+                if gain > self.hysteresis:
+                    self.current, migrated = cand, True
+                else:
+                    self.current = cur
         else:
             self.current = cand
         self.history.append((self.current.partition, migrated))

@@ -74,19 +74,16 @@ def _stage_time(graph: BlockGraph, lo: int, hi: int, dev: DeviceProfile,
     """Batch execution time of blocks[lo:hi] on ``dev``."""
     t = 0.0
     analytic_flops = 0.0
-    any_measured = False
     for b in graph.blocks[lo:hi]:
         m = costs.get(dev.name, b.name) if costs is not None else None
         if m is not None:
             t += m
-            any_measured = True
         else:
             analytic_flops += b.flops * batch / max(b.eff, 1e-6)
     if analytic_flops > 0:
         t += analytic_flops / dev.flops_per_s
     if hi > lo:
         t += dev.stage_overhead_s
-    del any_measured
     return t
 
 
@@ -103,7 +100,7 @@ def evaluate_pipeline(
     """Evaluate one partition.
 
     ``cuts`` are the interior cut points: stage i runs blocks
-    [cuts[i], cuts[i+1]) with implicit cuts[ -1]=0 and cuts[-1]=n.
+    [cuts[i], cuts[i+1]) with implicit cuts[-1]=0 and cuts[k]=n.
     ``len(devices) == len(cuts) + 1`` and ``len(links) == len(cuts)``.
     ``dispatch_link`` models orchestrator→worker1 input dispatch and
     workerN→orchestrator result return (paper Alg. 1 lines 5–9); defaults

@@ -26,7 +26,10 @@ only reading consistent with the reported seconds-scale batch times):
 """
 from __future__ import annotations
 
+import bisect
+import math
 from dataclasses import dataclass, field
+from typing import Union
 
 
 @dataclass(frozen=True)
@@ -56,6 +59,118 @@ class Link:
 
     def transfer_time(self, nbytes: float) -> float:
         return self.rtt_s / 2.0 + self.per_msg_overhead_s + nbytes / self.bw_bytes_per_s
+
+
+# --------------------------------------------------------------------------- #
+# Time-varying links
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class LinkTrace:
+    """A link whose RTT/bandwidth follow a piecewise (t, rtt, bw) schedule.
+
+    This is the paper's Sec. V-B duress experiment generalized from a
+    step to an arbitrary time profile: the emulator samples the trace at
+    every transfer, so a WAN ramp, a congestion spike, or a recovery can
+    all play out *while a pipeline is streaming*.
+
+      * ``schedule`` — ascending ``(t_s, rtt_s, bw_bytes_per_s)`` knots.
+        Between knots values are linearly interpolated (``interp="linear"``)
+        or held at the previous knot (``interp="hold"``); before the first
+        / after the last knot the boundary values apply.
+      * ``jitter`` — optional relative noise: a caller-supplied RNG draws a
+        lognormal factor ``exp(N(0, jitter))`` per transfer, so emulated
+        times wobble the way real WANs do while staying positive.
+    """
+
+    name: str
+    schedule: tuple[tuple[float, float, float], ...]
+    per_msg_overhead_s: float = 0.0
+    jitter: float = 0.0
+    interp: str = "linear"            # "linear" | "hold"
+
+    def __post_init__(self):
+        if not self.schedule:
+            raise ValueError(f"LinkTrace {self.name!r}: empty schedule")
+        ts = [k[0] for k in self.schedule]
+        if ts != sorted(ts):
+            raise ValueError(f"LinkTrace {self.name!r}: knots must be "
+                             f"sorted by time, got {ts}")
+        if self.interp not in ("linear", "hold"):
+            raise ValueError(f"unknown interp {self.interp!r}")
+
+    def _sample(self, t: float) -> tuple[float, float]:
+        knots = self.schedule
+        if t <= knots[0][0]:
+            return knots[0][1], knots[0][2]
+        if t >= knots[-1][0]:
+            return knots[-1][1], knots[-1][2]
+        i = bisect.bisect_right([k[0] for k in knots], t)
+        t0, r0, b0 = knots[i - 1]
+        t1, r1, b1 = knots[i]
+        if self.interp == "hold" or t1 == t0:
+            return r0, b0
+        w = (t - t0) / (t1 - t0)
+        return r0 + w * (r1 - r0), b0 + w * (b1 - b0)
+
+    def at(self, t: float) -> Link:
+        """Static snapshot of the link at trace time ``t`` (no jitter)."""
+        rtt, bw = self._sample(t)
+        return Link(f"{self.name}@{t:.3g}s", rtt_s=rtt, bw_bytes_per_s=bw,
+                    per_msg_overhead_s=self.per_msg_overhead_s)
+
+    def transfer_time(self, nbytes: float, t: float = 0.0, rng=None) -> float:
+        """Transfer time at trace time ``t``; with ``rng`` applies jitter.
+
+        ``t`` defaults to 0 so a LinkTrace is a drop-in Link for analytic
+        callers that only look at the trace's starting conditions."""
+        dt = self.at(t).transfer_time(nbytes)
+        if self.jitter > 0.0 and rng is not None:
+            dt *= math.exp(rng.normal(0.0, self.jitter))
+        return dt
+
+
+AnyLink = Union[Link, LinkTrace]
+
+
+def link_at(link: AnyLink, t: float = 0.0) -> Link:
+    """Resolve a possibly time-varying link to a static Link at time t."""
+    return link.at(t) if isinstance(link, LinkTrace) else link
+
+
+def ramp_trace(name: str, start: Link, end: Link, t_start: float,
+               t_end: float, jitter: float = 0.0) -> LinkTrace:
+    """A trace that holds ``start`` until ``t_start``, degrades (or
+    recovers) linearly to ``end`` by ``t_end``, then holds ``end``.
+
+    Schedule knots carry (t, rtt, bw) only, so the trace keeps
+    ``start``'s per-message overhead throughout; pick link pairs with
+    matching overheads (all the edge-side links here use 0.5 ms)."""
+    if t_end <= t_start:
+        raise ValueError("need t_end > t_start")
+    return LinkTrace(
+        name=name,
+        schedule=((t_start, start.rtt_s, start.bw_bytes_per_s),
+                  (t_end, end.rtt_s, end.bw_bytes_per_s)),
+        per_msg_overhead_s=start.per_msg_overhead_s,
+        jitter=jitter,
+    )
+
+
+def step_trace(name: str, before: Link, after: Link, t_step: float,
+               jitter: float = 0.0) -> LinkTrace:
+    """The paper's tc-netem duress switch as a trace: ``before`` until
+    ``t_step``, ``after`` from then on.  As with ``ramp_trace``, the
+    per-message overhead stays at ``before``'s value throughout."""
+    eps = 1e-9
+    return LinkTrace(
+        name=name,
+        schedule=((0.0, before.rtt_s, before.bw_bytes_per_s),
+                  (t_step, before.rtt_s, before.bw_bytes_per_s),
+                  (t_step + eps, after.rtt_s, after.bw_bytes_per_s)),
+        per_msg_overhead_s=before.per_msg_overhead_s,
+        jitter=jitter,
+        interp="hold",
+    )
 
 
 # --------------------------------------------------------------------------- #

@@ -11,6 +11,10 @@ Three engines, in increasing generality:
                           for k stages in O(k·n²·|labels|), used when
                           enumeration blows up (many pods / many blocks).
 
+``solve`` is the unified scenario-driven entry point: it picks the right
+engine for the problem size, so callers (AdaptiveSplitter, the runtime,
+benchmarks) never hard-code a pipeline depth.
+
 All return ``PipelineMetrics`` lists; compose with ``pareto.pareto_front``.
 """
 from __future__ import annotations
@@ -21,8 +25,47 @@ from typing import Sequence
 
 from .blocks import BlockGraph
 from .costmodel import CostTable, PipelineMetrics, evaluate_pipeline
-from .devices import DeviceProfile, Link
+from .devices import DeviceProfile, Link, link_at
 from .pareto import pareto_front
+
+
+def solve(
+    graph: BlockGraph,
+    scenario,
+    batch: int = 1,
+    costs: CostTable | None = None,
+    include_io: bool = True,
+    at_time: float = 0.0,
+    max_enum: int = 50_000,
+) -> list[PipelineMetrics]:
+    """Scenario-driven partition search — the one entry point.
+
+    Dispatches on problem size: ``sweep_2way`` for 2-device chains (every
+    point, the paper's method), ``sweep_kway`` while exhaustive k-way
+    enumeration stays under ``max_enum`` combinations, ``dp_front_kway``
+    beyond that (returns only the exact Pareto front).  Time-varying
+    links are resolved to their state at ``at_time``.
+    """
+    devices = tuple(scenario.devices)
+    links = tuple(link_at(l, at_time) for l in scenario.links)
+    k = len(devices)
+    if k < 1 or len(links) != k - 1:
+        raise ValueError("scenario needs >=1 device and len(devices)-1 links")
+    if graph.n_blocks < k:
+        raise ValueError(
+            f"{k}-stage scenario {getattr(scenario, 'name', '?')!r} needs "
+            f">= {k} blocks, graph {graph.name!r} has {graph.n_blocks}")
+    if k == 1:
+        return [evaluate_pipeline(graph, (), devices, (), batch=batch,
+                                  costs=costs, include_io=include_io)]
+    if k == 2:
+        return sweep_2way(graph, devices, links[0], batch=batch, costs=costs,
+                          include_io=include_io)
+    if math.comb(graph.n_blocks - 1, k - 1) <= max_enum:
+        return sweep_kway(graph, devices, links, batch=batch, costs=costs,
+                          include_io=include_io)
+    return dp_front_kway(graph, devices, links, batch=batch, costs=costs,
+                         include_io=include_io)
 
 
 def sweep_2way(

@@ -2,7 +2,11 @@
 
 The paper's four experimental conditions plus the TPU-scale analogues the
 framework actually deploys on.  A ``Scenario`` is what the partitioner
-consumes: an ordered device chain with the links between them.
+*and* the executable runtime consume: an ordered device chain with the
+links between consecutive devices.  Links may be static ``Link``s or
+time-varying ``LinkTrace``s — ``Scenario.at(t)`` resolves every trace to
+its value at time ``t`` for the analytic side, while the runtime samples
+traces per transfer.
 """
 from __future__ import annotations
 
@@ -16,16 +20,31 @@ from . import devices as D
 class Scenario:
     name: str
     devices: tuple[D.DeviceProfile, ...]
-    links: tuple[D.Link, ...]
+    links: tuple[D.AnyLink, ...]
 
     def __post_init__(self):
         if len(self.links) != len(self.devices) - 1:
             raise ValueError("need len(devices)-1 links")
 
-    def with_link(self, i: int, link: D.Link, name: str | None = None) -> "Scenario":
+    @property
+    def n_stages(self) -> int:
+        return len(self.devices)
+
+    @property
+    def time_varying(self) -> bool:
+        return any(isinstance(l, D.LinkTrace) for l in self.links)
+
+    def with_link(self, i: int, link: D.AnyLink, name: str | None = None) -> "Scenario":
         links = list(self.links)
         links[i] = link
         return Scenario(name or f"{self.name}+{link.name}", self.devices, tuple(links))
+
+    def at(self, t: float = 0.0) -> "Scenario":
+        """Static snapshot: every LinkTrace resolved to its link at ``t``."""
+        if not self.time_varying:
+            return self
+        return Scenario(self.name, self.devices,
+                        tuple(D.link_at(l, t) for l in self.links))
 
 
 # --- the paper's testbed ---------------------------------------------------- #
@@ -37,9 +56,37 @@ def pi_to_gpu() -> Scenario:
     return Scenario("pi_to_gpu", (D.PI_4B, D.RTX_4090), (D.LAN_PI_GPU,))
 
 
+def pi_pi_gpu() -> Scenario:
+    """Three-stage edge chain: two Pis feeding the GPU server — the
+    cluster depth the k-way engines reason about, now executable."""
+    return Scenario("pi_pi_gpu", (D.PI_4B, D.PI_4B, D.RTX_4090),
+                    (D.LAN_PI_PI, D.LAN_PI_GPU))
+
+
+def pi_chain(k: int = 3) -> Scenario:
+    """k-1 Pis in a line feeding a GPU — arbitrary-depth edge cluster."""
+    if k < 2:
+        raise ValueError("need k >= 2 stages")
+    devs = (D.PI_4B,) * (k - 1) + (D.RTX_4090,)
+    links = (D.LAN_PI_PI,) * (k - 2) + (D.LAN_PI_GPU,)
+    return Scenario(f"pi_chain{k}", devs, links)
+
+
 def duress(base: Scenario) -> Scenario:
     """Paper Sec. V-B: tc-imposed 200 ms RTT + 5 Mbit/s on the first hop."""
     return base.with_link(0, D.DURESS, name=f"{base.name}_duress")
+
+
+def wan_ramp(base: Scenario, hop: int = 0, t_start: float = 2.0,
+             t_end: float = 6.0, jitter: float = 0.05) -> Scenario:
+    """Time-varying duress: hop ``hop`` degrades linearly from its
+    healthy value to the paper's 200 ms / 5 Mbit WAN between ``t_start``
+    and ``t_end`` (trace time), with mild jitter — the condition the
+    adaptive loop is built to survive."""
+    healthy = D.link_at(base.links[hop], 0.0)
+    trace = D.ramp_trace(f"{healthy.name}_wan_ramp", healthy, D.DURESS,
+                         t_start, t_end, jitter=jitter)
+    return base.with_link(hop, trace, name=f"{base.name}_wan_ramp")
 
 
 # --- TPU-scale analogues ----------------------------------------------------- #
@@ -67,8 +114,12 @@ def chips_linear(n: int = 4, link: D.Link = D.ICI_V5E) -> Scenario:
 REGISTRY = {
     "pi_to_pi": pi_to_pi,
     "pi_to_gpu": pi_to_gpu,
+    "pi_pi_gpu": pi_pi_gpu,
+    "pi_chain4": lambda: pi_chain(4),
     "pi_to_pi_duress": lambda: duress(pi_to_pi()),
     "pi_to_gpu_duress": lambda: duress(pi_to_gpu()),
+    "pi_to_gpu_wan_ramp": lambda: wan_ramp(pi_to_gpu()),
+    "pi_pi_gpu_wan_ramp": lambda: wan_ramp(pi_pi_gpu()),
     "pods2": lambda: pods(2),
     "pods2_congested": lambda: pods_congested(2),
     "pods4": lambda: pods(4),

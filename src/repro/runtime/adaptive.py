@@ -1,0 +1,170 @@
+"""Closed adaptive loop: measure → estimate → re-solve → migrate.
+
+This wires the three halves of the system together into the loop the
+paper leaves as future work:
+
+  1. the executable k-stage pipeline (``runtime.edge.EdgePipeline``)
+     records what every emulated hop *actually* did per transfer,
+  2. those observations feed one ``LinkEstimator`` per hop (EWMA RTT /
+     bandwidth — what a real runtime can see),
+  3. ``AdaptiveSplitter`` re-solves the whole chain with the estimated
+     links (``partitioner.solve``: 2-way sweep, k-way enumeration, or
+     Pareto DP as the problem size demands) and, when the predicted gain
+     clears hysteresis, the pipeline live-migrates to the new cut vector,
+     charging ``migration_cost_s`` of wall-clock for the redeploy.
+
+Under a ``LinkTrace`` (WAN ramp, congestion spike) the loop therefore
+does exactly what Sec. V-B argues a deployment must: notice the wire
+degrading and move the split, while the run is in flight.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+from ..core.autosplit import AdaptiveSplitter, LinkEstimator, Policy
+from ..core.blocks import BlockGraph
+from ..core.costmodel import CostTable
+from ..core.scenarios import Scenario
+from .edge import Backend, EdgePipeline
+
+
+@dataclass(frozen=True)
+class LoopRecord:
+    """One batch through the adaptive loop."""
+
+    batch_idx: int
+    t_s: float                      # pipeline-clock time after the batch
+    cuts: tuple[int, ...]           # active cut vector for this batch
+    latency_s: float                # measured end-to-end latency
+    migrated: bool                  # did this step trigger a migration
+    migration_cost_s: float         # redeploy cost charged (0 if none)
+    predicted_latency_s: float      # splitter's model of the active cuts
+    predicted_throughput: float
+
+
+class AdaptiveRuntime:
+    """Owns an EdgePipeline + AdaptiveSplitter + per-hop LinkEstimators
+    and runs them as one loop."""
+
+    def __init__(self, model, params, scenario: Scenario, *,
+                 graph: BlockGraph | None = None, batch: int | None = None,
+                 policy: Policy = "throughput",
+                 backend: Backend | Sequence[Backend] = "lightweight",
+                 costs: CostTable | None = None, hysteresis: float = 0.10,
+                 migration_cost_s: float = 0.25, check_every: int = 4,
+                 alpha: float = 0.5, queue_depth: int = 2, seed: int = 0):
+        self._model, self._params = model, params
+        self.scenario = scenario
+        self._deploy_opts = dict(batch=batch, policy=policy, costs=costs,
+                                 hysteresis=hysteresis,
+                                 migration_cost_s=migration_cost_s,
+                                 backend=backend, queue_depth=queue_depth,
+                                 alpha=alpha, seed=seed)
+        self.check_every = check_every
+        self.records: list[LoopRecord] = []
+        self.graph: BlockGraph | None = graph
+        self.splitter: AdaptiveSplitter | None = None
+        self.pipe: EdgePipeline | None = None
+        self.estimators: list[LinkEstimator] = []
+        # graph and batch must both be known to solve; otherwise deploy
+        # lazily at run(), modelling the batches actually served
+        if graph is not None and batch is not None:
+            self._deploy(graph)
+
+    def _deploy(self, graph: BlockGraph) -> None:
+        """Solve under nominal (t=0) conditions — the paper's lab choice —
+        and stand the pipeline up at the chosen cuts."""
+        o = self._deploy_opts
+        self.graph = graph
+        # include_io=False: the executable pipeline has no orchestrator
+        # dispatch/return hop, so the splitter must optimize the same
+        # objective the pipeline actually exhibits
+        self.splitter = AdaptiveSplitter(
+            graph, self.scenario, batch=o["batch"], policy=o["policy"],
+            costs=o["costs"], hysteresis=o["hysteresis"],
+            migration_cost_s=o["migration_cost_s"], include_io=False)
+        init = self.splitter.solve()
+        self.splitter.current = init
+        self.splitter.history.append((init.partition, True))
+        self.pipe = EdgePipeline(self._model, self._params, init.partition,
+                                 self.scenario, backend=o["backend"],
+                                 queue_depth=o["queue_depth"], seed=o["seed"])
+        self.estimators = [LinkEstimator.from_link(l, alpha=o["alpha"])
+                           for l in self.scenario.links]
+
+    # ------------------------------------------------------------------ #
+    def _ingest_observations(self) -> None:
+        """Feed each hop's recorded transfers into its estimator.
+        Zero-byte messages are RTT probes (header-only ≈ one-way RTT/2)."""
+        for est, net in zip(self.estimators, self.pipe.nets):
+            for nbytes, dt, _t in net.drain_observations():
+                if nbytes <= 0:
+                    est.observe(0, 2.0 * dt, is_rtt_probe=True)
+                else:
+                    est.observe(nbytes, dt)
+
+    def probe_rtt(self) -> None:
+        """Send a header-only message down every hop — the emulated wire
+        charges RTT/2, giving the estimators a compute-free RTT sample."""
+        if self.pipe is None:
+            raise RuntimeError("pipeline not deployed yet — call run() "
+                               "(or pass graph= and batch=) first")
+        for net in self.pipe.nets:
+            net.send(0)
+
+    # ------------------------------------------------------------------ #
+    def run(self, make_batch: Callable[[], object], n_batches: int,
+            probe: bool = True) -> list[LoopRecord]:
+        """Drive ``n_batches`` through the pipeline, re-solving every
+        ``check_every`` batches.  Each check first RTT-probes every hop
+        (unless ``probe=False``) — without fresh RTT samples the
+        estimator attributes queueing delay to bandwidth and small
+        transfers make the estimate collapse.  Returns this call's
+        per-batch records (``self.records`` accumulates across calls);
+        migrations are also visible in ``self.pipe.migrations``."""
+        x = make_batch()
+        if self.pipe is None:
+            # model the batches actually being served: infer resolution
+            # and batch size from the first batch unless given explicitly
+            if self._deploy_opts["batch"] is None:
+                self._deploy_opts["batch"] = x.shape[0]
+            self._deploy(self.graph if self.graph is not None
+                         else self._model.block_graph(input_hw=x.shape[1]))
+        self.pipe.warmup(x)
+        self.pipe.reset_clock()
+        prev = len(self.records)
+        for b in range(prev, prev + n_batches):
+            active_cuts = self.pipe.cuts
+            _, lat, _hops = self.pipe.run_one(x)
+            # the model's view of the cuts this batch actually ran under
+            # (captured before any re-solve below replaces it)
+            pred = self.splitter.current
+            migrated, cost = False, 0.0
+            if (b + 1) % self.check_every == 0:
+                if probe:
+                    self.probe_rtt()
+                self._ingest_observations()
+                m, migrated = self.splitter.step(self.estimators)
+                if migrated and m.partition != self.pipe.cuts:
+                    cost = self.splitter.migration_cost_s
+                    self.pipe.migrate(m.partition, cost_s=cost)
+                    # warm the new placement before cutover (shadow-deploy
+                    # style) so jit compile doesn't pollute the next batch
+                    self.pipe.warmup(x)
+            self.records.append(LoopRecord(
+                batch_idx=b, t_s=self.pipe.clock(), cuts=active_cuts,
+                latency_s=lat, migrated=migrated, migration_cost_s=cost,
+                predicted_latency_s=pred.latency_s,
+                predicted_throughput=pred.throughput))
+        return self.records[prev:]
+
+    # ------------------------------------------------------------------ #
+    @property
+    def cut_history(self) -> list[tuple[int, ...]]:
+        """Distinct cut vectors in deployment order."""
+        out: list[tuple[int, ...]] = []
+        for r in self.records:
+            if not out or r.cuts != out[-1]:
+                out.append(r.cuts)
+        return out

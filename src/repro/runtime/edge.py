@@ -1,15 +1,19 @@
-"""Executable ParetoPipe pipeline — orchestrator + workers (paper Fig. 1 / Alg. 1).
+"""Executable ParetoPipe pipeline — k-stage orchestrator + workers
+(paper Fig. 1 / Alg. 1, generalized past the paper's 2-device testbed).
 
 This is the *measured* half of the reproduction: a real partitioned
 pipeline running on this host, with
 
-  * two workers (threads standing in for the Pis / the GPU server), each
-    executing its contiguous block range,
-  * an emulated network between them (``tc``-style: RTT/2 + bytes/bw
+  * one threaded ``Worker`` per stage (threads standing in for the Pis /
+    the GPU server / pods), each executing its contiguous block range
+    ``[cuts[i], cuts[i+1])``, bounded queues between stages,
+  * an emulated network on every hop (``tc``-style: RTT/2 + bytes/bw
     injected as wall-clock delay — exactly what the paper imposes with
-    Linux traffic control),
-  * **dual communication backends**, mirroring the paper's PyTorch-RPC
-    vs. custom-socket study:
+    Linux traffic control).  A hop may carry a static ``Link`` or a
+    time-varying ``LinkTrace``, which the emulator samples at the
+    pipeline clock on every transfer (WAN ramps, congestion spikes),
+  * **dual communication backends per hop**, mirroring the paper's
+    PyTorch-RPC vs. custom-socket study:
 
       - ``lightweight``: the activation is handed to the next worker as a
         device array, zero-copy, and each stage is one fused jitted
@@ -20,10 +24,13 @@ pipeline running on this host, with
         plus a per-call coordination overhead — the structural costs that
         made PyTorch RPC slow in the paper (Sec. V-C).
 
-Steady-state throughput is measured by streaming batches through both
-workers concurrently (stage 2 of batch i overlaps stage 1 of batch i+1),
+Steady-state throughput is measured by streaming batches through all
+stages concurrently (stage i+1 of batch b overlaps stage i of batch b+1),
 end-to-end latency by timing a lone batch through the empty pipeline —
-the paper's two metrics.
+the paper's two metrics.  Every emulated transfer is recorded per hop so
+a closed adaptive loop (``runtime.adaptive``) can feed *observed* wire
+times back into ``LinkEstimator``s, and ``migrate`` re-instantiates the
+workers at a new cut vector without tearing the pipeline down.
 """
 from __future__ import annotations
 
@@ -31,14 +38,15 @@ import pickle
 import queue
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Literal, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.devices import Link
+from ..core.devices import AnyLink, Link, LinkTrace
+from ..core.scenarios import Scenario
 
 Backend = Literal["lightweight", "rpc"]
 
@@ -47,16 +55,37 @@ Backend = Literal["lightweight", "rpc"]
 RPC_PER_CALL_OVERHEAD_S = 200e-6
 
 
-@dataclass
 class EmulatedLink:
-    """tc-netem analogue: sleeps RTT/2 + bytes/bw per message."""
+    """tc-netem analogue: sleeps RTT/2 + bytes/bw per message.
 
-    link: Link
+    ``LinkTrace`` hops are sampled at the pipeline clock on every send
+    (with the trace's jitter, seeded deterministically), and every
+    transfer is recorded as ``(nbytes, elapsed_s, t_s)`` so the adaptive
+    loop can replay what the wire actually did."""
+
+    def __init__(self, link: AnyLink, clock: Callable[[], float] | None = None,
+                 seed: int = 0):
+        self.link = link
+        self._clock = clock or (lambda: 0.0)
+        self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
+        self.observations: list[tuple[int, float, float]] = []
 
     def send(self, nbytes: int) -> float:
-        dt = self.link.transfer_time(nbytes)
+        t = self._clock()
+        if isinstance(self.link, LinkTrace):
+            dt = self.link.transfer_time(nbytes, t, rng=self._rng)
+        else:
+            dt = self.link.transfer_time(nbytes)
         time.sleep(dt)
+        with self._lock:
+            self.observations.append((nbytes, dt, t))
         return dt
+
+    def drain_observations(self) -> list[tuple[int, float, float]]:
+        with self._lock:
+            obs, self.observations = self.observations, []
+        return obs
 
 
 class _Serializer:
@@ -126,99 +155,259 @@ class Worker:
 
 @dataclass
 class PipelineResult:
-    backend: Backend
-    partition: int
-    latency_s: float               # lone-batch end-to-end
-    throughput: float              # samples/s steady state
+    backend: str                    # per-stage backends, "+"-joined if mixed
+    partition: tuple[int, ...]      # cut vector
+    latency_s: float                # lone-batch end-to-end
+    throughput: float               # samples/s steady state
     stage_exe_s: tuple[float, ...]  # mean per-batch exe per stage
-    net_s: float                   # mean per-batch wire time
-    cpu_pct: tuple[float, ...]
-    mem_pct: tuple[float, ...]
+    net_s: float                    # mean per-batch wire time, all hops
+    hop_net_s: tuple[float, ...] = ()   # mean per-batch wire time per hop
+    cpu_pct: tuple[float, ...] = ()
+    mem_pct: tuple[float, ...] = ()
 
 
 class EdgePipeline:
-    """Orchestrator (paper Alg. 1): split model at ``p``, deploy to two
-    workers, stream batches, measure."""
+    """Orchestrator (paper Alg. 1, k-stage): split the model at a cut
+    vector, deploy one worker per scenario device, stream batches through
+    per-hop emulated links, measure.
 
-    def __init__(self, model, params, p: int, link: Link,
-                 backend: Backend = "lightweight"):
-        n = len(model.blocks)
-        if not (1 <= p <= n - 1):
-            raise ValueError(f"split {p} out of range 1..{n-1}")
-        self.model, self.p, self.backend = model, p, backend
-        self.w1 = Worker("worker1", model, params, 0, p, backend)
-        self.w2 = Worker("worker2", model, params, p, n, backend)
-        self.net = EmulatedLink(link)
+    ``cuts``     — interior cut vector (k-1 ints, strictly increasing),
+                   or a single int for the classic 2-stage split.
+    ``scenario`` — a ``Scenario`` (device chain + per-hop links), a bare
+                   ``Link``/``LinkTrace`` (2-stage convenience), or a
+                   sequence of per-hop links.
+    ``backend``  — one backend for every stage, or a per-stage sequence.
+
+    The legacy 2-stage keywords ``p=`` and ``link=`` are still accepted.
+    """
+
+    def __init__(self, model, params, cuts=None, scenario=None,
+                 backend: Backend | Sequence[Backend] = "lightweight",
+                 *, p: int | None = None, link: AnyLink | None = None,
+                 queue_depth: int = 2, clock: Callable[[], float] | None = None,
+                 seed: int = 0):
+        if p is not None:
+            cuts = p
+        if link is not None:
+            scenario = link
+        if cuts is None:
+            raise ValueError("need a cut vector (cuts=... or p=...)")
+        if scenario is None:
+            raise ValueError("need a Scenario, per-hop links, or link=...")
+
+        if isinstance(scenario, Scenario):
+            self.scenario: Scenario | None = scenario
+            links: tuple[AnyLink, ...] = tuple(scenario.links)
+        elif isinstance(scenario, (Link, LinkTrace)):
+            self.scenario = None
+            links = (scenario,)
+        else:
+            self.scenario = None
+            links = tuple(scenario)
+
+        self.model, self.params = model, params
+        self.n_stages = len(links) + 1
+        if isinstance(backend, str):
+            self.backends: tuple[Backend, ...] = (backend,) * self.n_stages
+        else:
+            self.backends = tuple(backend)
+            if len(self.backends) != self.n_stages:
+                raise ValueError(f"{len(self.backends)} backends for "
+                                 f"{self.n_stages} stages")
+        self.queue_depth = queue_depth
+        self._t0 = time.perf_counter()
+        self.clock = clock or (lambda: time.perf_counter() - self._t0)
+        self.nets = [EmulatedLink(l, self.clock, seed=seed + i)
+                     for i, l in enumerate(links)]
+        self.migrations: list[tuple[float, tuple[int, ...], tuple[int, ...]]] = []
+        self.cuts = self._check_cuts(cuts)
+        self._build_workers()
 
     # ------------------------------------------------------------------ #
-    def _transfer(self, x) -> tuple[jax.Array, float]:
-        nbytes = x.size * x.dtype.itemsize
-        if self.backend == "rpc":
+    def _check_cuts(self, cuts) -> tuple[int, ...]:
+        n = len(self.model.blocks)
+        if isinstance(cuts, int):
+            cuts = (cuts,)
+        cuts = tuple(int(c) for c in cuts)
+        if len(cuts) != self.n_stages - 1:
+            raise ValueError(f"{len(cuts)} cuts for {self.n_stages} stages; "
+                             f"need {self.n_stages - 1}")
+        bounds = (0, *cuts, n)
+        for a, b in zip(bounds, bounds[1:]):
+            if not (0 <= a < b <= n):
+                raise ValueError(f"cuts {cuts} invalid for {n} blocks "
+                                 "(stages must be non-empty and ordered)")
+        return cuts
+
+    def _build_workers(self, reuse: Sequence[Worker] = ()) -> None:
+        """Instantiate stage workers, reusing any existing worker whose
+        (block range, backend) is unchanged — its jitted functions stay
+        warm across a migration."""
+        pool = {(w.lo, w.hi, w.backend): w for w in reuse}
+        bounds = (0, *self.cuts, len(self.model.blocks))
+        self.workers = [
+            pool.get((bounds[i], bounds[i + 1], self.backends[i]))
+            or Worker(f"worker{i + 1}", self.model, self.params,
+                      bounds[i], bounds[i + 1], self.backends[i])
+            for i in range(self.n_stages)]
+
+    # legacy 2-stage accessors ----------------------------------------- #
+    @property
+    def p(self) -> int:
+        return self.cuts[0]
+
+    @property
+    def backend(self) -> str:
+        return "+".join(sorted(set(self.backends)))
+
+    def reset_clock(self) -> None:
+        """Restart the pipeline clock (trace time 0) — call before a run
+        that should experience a LinkTrace from its beginning."""
+        self._t0 = time.perf_counter()
+
+    # ------------------------------------------------------------------ #
+    def migrate(self, new_cuts, cost_s: float = 0.0) -> tuple[int, ...]:
+        """Live migration: re-instantiate the workers at ``new_cuts``.
+
+        ``cost_s`` is the one-off redeploy cost (weights moving to their
+        new hosts) charged as wall-clock time, i.e. the splitter's
+        ``migration_cost_s``.  Link state (clock, traces, observations)
+        survives the migration."""
+        new_cuts = self._check_cuts(new_cuts)
+        if cost_s > 0.0:
+            time.sleep(cost_s)
+        self.migrations.append((self.clock(), self.cuts, new_cuts))
+        self.cuts = new_cuts
+        self._build_workers(reuse=self.workers)
+        return self.cuts
+
+    # ------------------------------------------------------------------ #
+    def _hop(self, i: int, x) -> tuple[jax.Array, float]:
+        """Transfer ``x`` over hop i, in the sending stage's wire format."""
+        if self.backends[i] == "rpc":
             buf = _Serializer.dumps(x)
-            dt = self.net.send(len(buf))
+            dt = self.nets[i].send(len(buf))
             return _Serializer.loads(buf), dt
-        dt = self.net.send(nbytes)
+        dt = self.nets[i].send(x.size * x.dtype.itemsize)
         return x, dt
 
-    def run_one(self, x) -> tuple[jax.Array, float, float]:
-        """One batch through the empty pipeline → (out, latency, net_s)."""
-        t0 = time.perf_counter()
-        a = self.w1.run(x)
-        a, net = self._transfer(a)
-        y = self.w2.run(a)
-        return y, time.perf_counter() - t0, net
+    def warmup(self, x):
+        for i, w in enumerate(self.workers):
+            x = w.warmup(x)
+        return x
 
+    def _reset_stats(self) -> None:
+        for w in self.workers:
+            w.stats = StageStats()
+
+    def run_one(self, x) -> tuple[jax.Array, float, tuple[float, ...]]:
+        """One batch through the empty pipeline →
+        (out, end-to-end latency, per-hop wire times)."""
+        t0 = time.perf_counter()
+        hop_net: list[float] = []
+        for i, w in enumerate(self.workers):
+            x = w.run(x)
+            if i < len(self.nets):
+                x, dt = self._hop(i, x)
+                hop_net.append(dt)
+        return x, time.perf_counter() - t0, tuple(hop_net)
+
+    def stream(self, x, n_batches: int) -> float:
+        """Push ``n_batches`` copies of ``x`` through all stages
+        concurrently (bounded queues) → total wall time."""
+        k = self.n_stages
+        if k == 1:
+            t0 = time.perf_counter()
+            for _ in range(n_batches):
+                self.workers[0].run(x)      # run() blocks until ready
+            return time.perf_counter() - t0
+
+        qs = [queue.Queue(maxsize=self.queue_depth) for _ in range(k - 1)]
+        errors: list[BaseException] = []
+
+        def stage(i: int):
+            # on failure, keep draining the input queue so upstream
+            # producers never block on a full queue, and still forward
+            # the shutdown sentinel — a dead stage must not hang the run
+            failed = False
+            while True:
+                item = qs[i - 1].get()
+                if item is None:
+                    if i < k - 1:
+                        qs[i].put(None)
+                    return
+                if failed:
+                    continue
+                try:
+                    y = self.workers[i].run(item)
+                    if i < k - 1:
+                        y, _ = self._hop(i, y)
+                        qs[i].put(y)
+                    # last stage: run() already blocked until ready;
+                    # the output is complete and can be dropped
+                except BaseException as e:   # noqa: BLE001 — re-raised below
+                    errors.append(e)
+                    failed = True
+
+        threads = [threading.Thread(target=stage, args=(i,), daemon=True)
+                   for i in range(1, k)]
+        for t in threads:
+            t.start()
+        t0 = time.perf_counter()
+        try:
+            for _ in range(n_batches):
+                a = self.workers[0].run(x)
+                a, _ = self._hop(0, a)
+                qs[0].put(a)
+        finally:
+            qs[0].put(None)
+            for t in threads:
+                t.join()
+        if errors:
+            raise errors[0]
+        return time.perf_counter() - t0
+
+    # ------------------------------------------------------------------ #
     def measure(self, make_batch: Callable[[], jax.Array],
                 n_batches: int = 10, warmup: int = 1) -> PipelineResult:
         import psutil
         x = make_batch()
-        a = self.w1.warmup(x)
-        self.w2.warmup(a)
-        self.w1.stats = StageStats()
-        self.w2.stats = StageStats()
+        self.warmup(x)
+        self._reset_stats()
+        # jit warmup can take seconds — restart trace time so a LinkTrace
+        # scenario is measured from its beginning, not mid-ramp
+        self.reset_clock()
 
         # --- latency: lone batches ---------------------------------- #
-        lat, net_t = [], []
+        lat: list[float] = []
+        hop_t: list[tuple[float, ...]] = []
         for _ in range(max(warmup, 1)):
             self.run_one(x)
         for _ in range(max(n_batches // 3, 2)):
-            _, l, nt = self.run_one(x)
+            _, l, hops = self.run_one(x)
             lat.append(l)
-            net_t.append(nt)
+            hop_t.append(hops)
 
         # --- throughput: streamed, stages overlap -------------------- #
-        self.w1.stats = StageStats()
-        self.w2.stats = StageStats()
-        q: queue.Queue = queue.Queue(maxsize=2)
-        done: queue.Queue = queue.Queue()
+        self._reset_stats()
+        # the latency phase advanced trace time (degraded lone batches
+        # sleep); restart so both metrics sample the trace from t=0
+        self.reset_clock()
         psutil.cpu_percent(None)
         p_mem = psutil.virtual_memory().percent
-
-        def stage2():
-            while True:
-                item = q.get()
-                if item is None:
-                    return
-                done.put(self.w2.run(item))
-
-        t = threading.Thread(target=stage2, daemon=True)
-        t.start()
-        t0 = time.perf_counter()
-        for _ in range(n_batches):
-            a = self.w1.run(x)
-            a, _ = self._transfer(a)
-            q.put(a)
-        q.put(None)
-        t.join()
-        total = time.perf_counter() - t0
+        total = self.stream(x, n_batches)
         cpu = psutil.cpu_percent(None) * psutil.cpu_count()
         batch = x.shape[0]
+        hop_net = tuple(float(np.mean([h[i] for h in hop_t]))
+                        for i in range(len(self.nets)))
         return PipelineResult(
-            backend=self.backend, partition=self.p,
+            backend=self.backend, partition=self.cuts,
             latency_s=float(np.mean(lat)),
             throughput=n_batches * batch / total,
-            stage_exe_s=(self.w1.stats.exe_s / self.w1.stats.calls,
-                         self.w2.stats.exe_s / self.w2.stats.calls),
-            net_s=float(np.mean(net_t)),
-            cpu_pct=(cpu, cpu), mem_pct=(p_mem, p_mem),
+            stage_exe_s=tuple(w.stats.exe_s / max(w.stats.calls, 1)
+                              for w in self.workers),
+            net_s=float(sum(hop_net)),
+            hop_net_s=hop_net,
+            cpu_pct=(cpu,) * self.n_stages,
+            mem_pct=(p_mem,) * self.n_stages,
         )

@@ -1,0 +1,66 @@
+"""Pareto machinery edge cases — deterministic, no hypothesis needed
+(the property suite in test_core_pareto.py skips when hypothesis is
+absent; this file keeps the degenerate paths covered regardless)."""
+import pytest
+
+from repro.core import dominates, hypervolume, is_on_front, knee_point, pareto_front
+
+
+def test_pareto_front_empty():
+    assert pareto_front([]) == []
+    assert knee_point([]) is None
+    assert hypervolume([], ref_latency=10.0) == 0.0
+
+
+def test_pareto_front_single_point():
+    assert pareto_front([(1.0, 2.0)]) == [(1.0, 2.0)]
+    assert knee_point([(1.0, 2.0)]) == (1.0, 2.0)
+
+
+def test_pareto_front_duplicates_keep_one():
+    pts = [(1.0, 2.0), (1.0, 2.0), (1.0, 2.0)]
+    assert pareto_front(pts) == [(1.0, 2.0)]
+
+
+def test_knee_point_degenerate_all_equal():
+    """All-equal fronts have zero spread on both axes — the knee must
+    still return a member, not divide by zero."""
+    pts = [(3.0, 5.0)] * 4
+    assert knee_point(pts) == (3.0, 5.0)
+
+
+def test_knee_point_degenerate_one_axis():
+    # same latency, varying throughput: front collapses to the best-thr point
+    pts = [(1.0, 1.0), (1.0, 2.0), (1.0, 3.0)]
+    assert knee_point(pts) == (1.0, 3.0)
+
+
+def test_hypervolume_point_outside_latency_reference():
+    # latency beyond the reference contributes nothing
+    assert hypervolume([(2.0, 5.0)], ref_latency=1.0) == 0.0
+
+
+def test_hypervolume_point_below_throughput_reference():
+    assert hypervolume([(0.5, 1.0)], ref_latency=1.0, ref_throughput=2.0) == 0.0
+
+
+def test_hypervolume_mixed_inside_outside():
+    inside = (0.5, 3.0)          # contributes (1.0-0.5)*(3.0-1.0) = 1.0
+    outside = (5.0, 10.0)        # latency past the reference: nothing
+    hv = hypervolume([inside, outside], ref_latency=1.0, ref_throughput=1.0)
+    assert hv == pytest.approx(1.0)
+
+
+def test_hypervolume_known_value():
+    pts = [(1.0, 1.0), (2.0, 2.0)]
+    # sweep from ref 3.0: (3-2)*2 + (2-1)*1 = 3
+    assert hypervolume(pts, ref_latency=3.0) == pytest.approx(3.0)
+
+
+def test_dominates_and_is_on_front():
+    a, b, c = (1.0, 5.0), (2.0, 4.0), (1.0, 5.0)
+    assert dominates(a, b)
+    assert not dominates(b, a)
+    assert not dominates(a, c)       # equal points never dominate
+    assert is_on_front(a, [a, b, c])
+    assert not is_on_front(b, [a, b])

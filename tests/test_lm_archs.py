@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow          # one jitted train step per arch
+
 import repro.configs as configs
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import lm

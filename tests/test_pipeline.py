@@ -4,8 +4,11 @@ import os
 
 import pytest
 
-pytestmark = pytest.mark.skipif(
-    "XLA_FLAGS" in os.environ, reason="needs default device config")
+pytestmark = [
+    pytest.mark.skipif("XLA_FLAGS" in os.environ,
+                       reason="needs default device config"),
+    pytest.mark.slow,                  # multi-pod GPipe drills, ~40s
+]
 
 import jax  # noqa: E402
 

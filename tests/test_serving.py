@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow          # ~10-17s per arch, 10 archs
+
 import repro.configs as configs
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import lm

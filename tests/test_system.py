@@ -14,6 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow          # subprocess train/serve drills
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
