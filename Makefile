@@ -1,16 +1,21 @@
 # Developer loop for the ParetoPipe reproduction.
 #
-#   make test-fast   — the development tier: everything except the
+#   make fast        — the development tier: fast tests + the <30 s
+#                      3-objective bench smoke (BENCH_pareto.json)
+#   make test-fast   — fast tests only: everything except the
 #                      multi-minute train/system drills (marker: slow)
 #   make test        — tier-1 verify, the full suite (what CI runs)
 #   make bench-quick — analytic benchmarks only (no wall-clock measuring)
+#   make bench-smoke — 3-objective solver bench on a tiny graph (<30 s)
 #   make demo        — k-stage adaptive loop demo under a WAN ramp
 
 PY      ?= python
 PYTEST  ?= $(PY) -m pytest
 ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-quick demo
+.PHONY: fast test test-fast bench bench-quick bench-smoke demo
+
+fast: test-fast bench-smoke
 
 test:
 	$(ENV) $(PYTEST) -x -q
@@ -23,6 +28,9 @@ bench:
 
 bench-quick:
 	$(ENV) $(PY) -m benchmarks.run --quick
+
+bench-smoke:
+	$(ENV) $(PY) -m benchmarks.energy_front --smoke
 
 demo:
 	$(ENV) $(PY) examples/kway_adaptive.py

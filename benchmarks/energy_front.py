@@ -1,0 +1,163 @@
+"""Beyond-paper: the 3-objective (latency, throughput, energy) study.
+
+Two artifacts:
+
+  * ``energy_front`` — the trade-off *surface* on the k-stage chains
+    under the existing WAN-ramp traces: at the ramp's healthy and
+    degraded endpoints, how the 3-D front widens past the 2-D one
+    (splits that are latency/throughput-equivalent but joules-apart),
+    which split each single-objective policy picks, and what the duress
+    WAN's radio cost does to the energy-optimal cut.
+  * ``pareto_bench`` — machine-readable solver trajectory: front sizes,
+    hypervolume, and solve wall-time for the 2- and 3-objective DP on
+    every model × scenario pair, written to ``BENCH_pareto.json`` so
+    future PRs can diff perf instead of guessing.
+
+    PYTHONPATH=src python -m benchmarks.energy_front [--smoke]
+
+``--smoke`` runs a tiny synthetic graph only (< 30 s, the Makefile
+``bench-smoke`` target) and still writes BENCH_pareto.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import (Block, BlockGraph, best_energy, best_latency,
+                        best_throughput, dp_front_kway, hypervolume,
+                        pareto_front, scenarios, sweep_kway)
+
+OBJ2 = ("latency", "throughput")
+OBJ3 = ("latency", "throughput", "energy")
+BATCH = 8
+BENCH_JSON = Path("BENCH_pareto.json")
+
+
+def tiny_graph(n: int = 8) -> BlockGraph:
+    """Deterministic small chain for smoke runs and cross-validation:
+    alternating fat/thin blocks so cuts genuinely trade bytes for flops."""
+    blocks = tuple(
+        Block(f"b{i}",
+              flops=(3e8 if i % 2 else 6e7) * (1 + i / n),
+              weight_bytes=200_000 + 40_000 * i,
+              out_bytes=400_000 if i % 3 else 40_000)
+        for i in range(n))
+    return BlockGraph("tiny", blocks, input_bytes=120_000, output_bytes=4_000)
+
+
+def _refs(pts):
+    """Reference vectors strictly worse than the cloud on every axis."""
+    lat = max(p.latency_s for p in pts) * 1.1
+    en = max(p.energy_j for p in pts) * 1.1
+    thr = min(p.throughput for p in pts) * 0.9
+    return (lat, thr), (lat, thr, en)
+
+
+def _solve_stats(graph, scen, batch):
+    """Time the DP at 2 and 3 objectives + exhaustive point cloud."""
+    out = {}
+    pts = sweep_kway(graph, scen.devices, scen.links, batch=batch)
+    ref2, ref3 = _refs(pts)
+    for tag, objs, ref in (("2obj", OBJ2, ref2), ("3obj", OBJ3, ref3)):
+        t0 = time.perf_counter()
+        front = dp_front_kway(graph, scen.devices, scen.links, batch=batch,
+                              objectives=objs)
+        dt = time.perf_counter() - t0
+        out[tag] = {
+            "front_size": len(front),
+            "hypervolume": hypervolume(front, ref, objs),
+            "solve_s": dt,
+        }
+    out["n_partitions"] = len(pts)
+    return out, pts
+
+
+def energy_front(models=("mobilenetv2", "resnet18")) -> list[str]:
+    """The 3-objective trade-off on the battery chain (pi_only3) and the
+    WAN-ramp chain (pi_pi_gpu), healthy vs. degraded.  The headline
+    number is the *pick divergence*: how many joules the energy-aware
+    pick saves over the throughput pick, and what that costs in
+    throughput — the axis a 2-objective solver cannot see."""
+    from repro.models.cnn import zoo
+    rows: list[str] = []
+    print("\n== 3-objective fronts: battery chain + WAN ramp ==")
+    ramp = scenarios.get("pi_pi_gpu_wan_ramp")
+    conds = [("pi_only3", "healthy", scenarios.get("pi_only3")),
+             ("pi_only3", "duress", scenarios.get("pi_only3_duress")),
+             ("wan_ramp", "healthy", ramp.at(0.0)),
+             ("wan_ramp", "degraded", ramp.at(1e9))]
+    for name in models:
+        g = zoo.get(name).block_graph()
+        for chain, cond, scen in conds:
+            pts = sweep_kway(g, scen.devices, scen.links, batch=BATCH)
+            f2 = pareto_front(pts, OBJ2)
+            f3 = pareto_front(pts, OBJ3)
+            bt, be = best_throughput(pts), best_energy(pts)
+            j_saved = bt.energy_j - be.energy_j
+            thr_cost = (1 - be.throughput / bt.throughput) * 100
+            print(f"{name:12s} {chain:8s} {cond:8s} "
+                  f"front 2D={len(f2):2d} 3D={len(f3):2d} | "
+                  f"thr-pick {bt.partition} {bt.energy_j:6.2f} J | "
+                  f"J-pick {be.partition} {be.energy_j:6.2f} J "
+                  f"(saves {j_saved:5.2f} J, costs {thr_cost:4.1f}% thr)")
+            rows.append(
+                f"energy_front/{name}/{chain}/{cond},0.0,"
+                f"front2={len(f2)};front3={len(f3)};"
+                f"j_saved={j_saved:.2f};thr_cost_pct={thr_cost:.1f}")
+    print("(equal-watt Pi chains: energy tracks bytes moved, so the J-pick "
+          "hugs min-transfer cuts while the thr-pick balances stages; the "
+          "GPU is the more J/FLOP-efficient device, so offloading saves "
+          "both time and joules until the wire degrades)")
+    return rows
+
+
+def pareto_bench(smoke: bool = False, out_path: Path = BENCH_JSON) -> list[str]:
+    """Solver perf + front trajectory → BENCH_pareto.json + CSV rows."""
+    rows: list[str] = []
+    results: dict = {"batch": BATCH, "entries": []}
+    print("\n== pareto solver bench (2 vs 3 objectives) ==")
+    cases: list[tuple[str, BlockGraph, object]] = [
+        ("tiny/pi_only3", tiny_graph(), scenarios.get("pi_only3"))]
+    if not smoke:
+        from repro.models.cnn import zoo
+        for name in ("mobilenetv2", "resnet18", "resnet50"):
+            g = zoo.get(name).block_graph()
+            for scen_name in ("pi_only3", "pi_pi_gpu", "pi_chain4"):
+                cases.append((f"{name}/{scen_name}", g,
+                              scenarios.get(scen_name)))
+    for label, g, scen in cases:
+        stats, _ = _solve_stats(g, scen.at(0.0), BATCH)
+        results["entries"].append({"case": label, **stats})
+        s2, s3 = stats["2obj"], stats["3obj"]
+        print(f"{label:28s} parts={stats['n_partitions']:6d} "
+              f"| 2obj front={s2['front_size']:3d} hv={s2['hypervolume']:9.3f}"
+              f" {s2['solve_s']*1e3:7.1f} ms "
+              f"| 3obj front={s3['front_size']:3d} hv={s3['hypervolume']:9.3f}"
+              f" {s3['solve_s']*1e3:7.1f} ms")
+        for tag in ("2obj", "3obj"):
+            s = stats[tag]
+            rows.append(f"pareto_bench/{label}/{tag},{s['solve_s']*1e6:.0f},"
+                        f"front={s['front_size']};hv={s['hypervolume']:.3f}")
+    out_path.write_text(json.dumps(results, indent=1))
+    print(f"[pareto_bench] wrote {out_path}")
+    return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graph only; < 30 s; still writes "
+                         "BENCH_pareto.json")
+    args = ap.parse_args()
+    rows = pareto_bench(smoke=args.smoke)
+    if not args.smoke:
+        rows += energy_front()
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

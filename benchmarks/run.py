@@ -17,6 +17,7 @@ def main() -> None:
                     help="skip the measured (wall-clock) benches")
     args = ap.parse_args()
 
+    from . import energy_front as E
     from . import kway_runtime as K
     from . import paper_tables as P
     from . import tpu_pod_pareto as T
@@ -32,6 +33,8 @@ def main() -> None:
         "pod_pareto": T.pod_pareto,
         "kway_front": K.kway_front,
         "kway_adaptive": K.kway_adaptive,
+        "energy_front": E.energy_front,
+        "pareto_bench": E.pareto_bench,
     }
     measured = {"fig2", "fig7", "kway_front", "kway_adaptive"}
     rows: list[str] = []

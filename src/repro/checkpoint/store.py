@@ -141,14 +141,26 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
+    def _complete(self) -> list[Path]:
+        """Published checkpoints only — a crash mid-write leaves a
+        ``step_*.tmp`` dir (no manifest) that must never be restored."""
+        return sorted(p for p in self.root.glob("step_*")
+                      if not p.name.endswith(".tmp")
+                      and (p / "manifest.json").exists())
+
     def _gc(self):
-        ckpts = sorted(self.root.glob("step_*"))
-        for old in ckpts[:-self.keep]:
+        for old in self._complete()[:-self.keep]:
             shutil.rmtree(old, ignore_errors=True)
+        # torn writes are never restorable; don't let crash/restart
+        # cycles hoard them (one writer at a time, and the current
+        # write's tmp dir was renamed before _gc runs, so every
+        # remaining *.tmp is an orphan)
+        for tmp in self.root.glob("step_*.tmp"):
+            shutil.rmtree(tmp, ignore_errors=True)
 
     def latest(self) -> Path | None:
         self.wait()
-        ckpts = sorted(self.root.glob("step_*"))
+        ckpts = self._complete()
         return ckpts[-1] if ckpts else None
 
     def restore(self, specs_tree=None):

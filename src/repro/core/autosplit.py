@@ -12,9 +12,14 @@ work; we implement it:
   * ``AdaptiveSplitter`` — re-solves the Pareto front for the *whole*
     device chain (any depth, via ``partitioner.solve``) with the
     estimated links, picks a point for the active policy (min-latency /
-    max-throughput / knee), and migrates only when the predicted gain
-    beats a hysteresis threshold (migration = redeploying weights, which
-    has a real cost the runtime charges via ``migration_cost_s``).
+    max-throughput / min-energy / knee), and migrates only when the
+    predicted gain beats a hysteresis threshold (migration = redeploying
+    weights, which has a real cost the runtime charges via
+    ``migration_cost_s``).  An ``energy_budget_j`` (joules/batch) turns
+    any policy into a constrained pick: candidates above the budget are
+    dropped before the policy chooses, falling back to the least-energy
+    point when nothing fits — a battery-bound Pi deployment re-solving
+    under its power envelope.
 """
 from __future__ import annotations
 
@@ -25,10 +30,10 @@ from .blocks import BlockGraph
 from .costmodel import CostTable, PipelineMetrics, evaluate_pipeline
 from .devices import Link, LinkTrace, link_at
 from .pareto import knee_point
-from .partitioner import best_latency, best_throughput, solve
+from .partitioner import best_energy, best_latency, best_throughput, solve
 from .scenarios import Scenario
 
-Policy = Literal["latency", "throughput", "knee"]
+Policy = Literal["latency", "throughput", "energy", "knee"]
 
 
 @dataclass
@@ -69,6 +74,7 @@ class AdaptiveSplitter:
     costs: CostTable | None = None
     hysteresis: float = 0.10          # required relative improvement
     migration_cost_s: float = 1.0     # one-off cost of moving the split
+    energy_budget_j: float | None = None   # max joules/batch (None = unbounded)
     # charge orchestrator dispatch/return IO in the model?  True for the
     # paper's analytic studies; the executable runtime has no dispatch
     # hop, so the closed loop (runtime.adaptive) solves with False to
@@ -79,15 +85,25 @@ class AdaptiveSplitter:
 
     def _pick(self, points) -> PipelineMetrics:
         feas = [p for p in points if p.feasible] or points
+        if self.energy_budget_j is not None:
+            within = [p for p in feas if p.energy_j <= self.energy_budget_j]
+            # nothing under budget: degrade to the least-energy point
+            feas = within or [best_energy(feas)]
         if self.policy == "latency":
             return best_latency(feas)
         if self.policy == "throughput":
             return best_throughput(feas)
+        if self.policy == "energy":
+            return best_energy(feas)
         return knee_point(feas) or best_throughput(feas)
 
     def _objective(self, m: PipelineMetrics) -> float:
         """Lower is better (throughput negated)."""
-        return m.latency_s if self.policy == "latency" else -m.throughput
+        if self.policy == "latency":
+            return m.latency_s
+        if self.policy == "energy":
+            return m.energy_j
+        return -m.throughput
 
     def _with_links(self, links) -> Scenario:
         """Scenario with hop links overridden.
@@ -110,8 +126,14 @@ class AdaptiveSplitter:
         return self._pick(self._solve_points(self._with_links(link)))
 
     def _solve_points(self, scen: Scenario):
+        # when energy drives the pick (policy or budget), the DP path must
+        # keep the energy axis, or energy-optimal splits get pruned as
+        # (latency, throughput)-dominated before _pick ever sees them
+        objectives = (("latency", "throughput", "energy")
+                      if self.policy == "energy"
+                      or self.energy_budget_j is not None else None)
         return solve(self.graph, scen, batch=self.batch, costs=self.costs,
-                     include_io=self.include_io)
+                     include_io=self.include_io, objectives=objectives)
 
     def _reprice(self, partition: tuple[int, ...],
                  scen: Scenario) -> PipelineMetrics | None:
@@ -147,6 +169,11 @@ class AdaptiveSplitter:
             cur = self._reprice(self.current.partition, scen)
             if cur is None:
                 # current cuts are stale/invalid — must migrate
+                self.current, migrated = cand, True
+            elif (self.energy_budget_j is not None
+                  and cur.energy_j > self.energy_budget_j >= cand.energy_j):
+                # current split violates the energy budget and the
+                # candidate fits: a constraint breach overrides hysteresis
                 self.current, migrated = cand, True
             else:
                 old, new = self._objective(cur), self._objective(cand)

@@ -10,6 +10,13 @@ devices, and the links between consecutive devices, predict:
   * **steady-state throughput** — successive batches pipeline, so the
     bottleneck is the slowest stage *cycle* (its compute plus its
     non-overlapped sends),
+  * **energy per batch** — per stage, device active power × compute time
+    plus idle power × its outbound wire wait plus the link's radio cost ×
+    bytes sent (Kreß et al., arXiv:2406.19913 treat exactly this
+    compute+radio decomposition as the edge partitioning energy model);
+    with ``include_io`` the dispatch/return hops add their radio cost.
+    The sum is additive over stages, which is what lets ``dp_front_kway``
+    carry it as a third monotone DP label,
   * per-stage breakdowns and memory feasibility.
 
 Validation against the paper (Table II, MobileNetV2 P3, batch 8):
@@ -24,6 +31,7 @@ from typing import Mapping, Sequence
 
 from .blocks import BlockGraph
 from .devices import DeviceProfile, Link
+from .pareto import ObjectiveLike, vector as objective_vector
 
 
 class CostTable:
@@ -53,6 +61,7 @@ class StageMetrics:
     send_s: float                  # outbound transfer time (0 for last stage)
     weight_bytes: int
     mem_ok: bool
+    energy_j: float = 0.0          # active×compute + idle×send + radio×bytes
 
 
 @dataclass(frozen=True)
@@ -63,10 +72,16 @@ class PipelineMetrics:
     stages: tuple[StageMetrics, ...]
     net_s: float                   # total wire time per batch
     feasible: bool                 # all stages fit in device memory
+    energy_j: float = 0.0          # joules per batch, all stages + IO radio
 
     @property
     def bottleneck_s(self) -> float:
         return max(s.compute_s + s.send_s for s in self.stages)
+
+    def objectives(self, objectives: Sequence[ObjectiveLike] | None = None
+                   ) -> tuple[float, ...]:
+        """This partition's objective vector (default: latency, throughput)."""
+        return objective_vector(self, objectives)
 
 
 def _stage_time(graph: BlockGraph, lo: int, hi: int, dev: DeviceProfile,
@@ -85,6 +100,16 @@ def _stage_time(graph: BlockGraph, lo: int, hi: int, dev: DeviceProfile,
     if hi > lo:
         t += dev.stage_overhead_s
     return t
+
+
+def _stage_energy(dev: DeviceProfile, compute_s: float, send_s: float,
+                  send_bytes: float, link: Link | None) -> float:
+    """Joules one stage spends per batch: busy while computing, idle
+    while its outbound transfer drains, radio cost per byte on the wire."""
+    e = dev.active_w * compute_s + dev.idle_w * send_s
+    if link is not None and send_bytes > 0:
+        e += link.transfer_energy(send_bytes)
+    return e
 
 
 def evaluate_pipeline(
@@ -120,12 +145,15 @@ def evaluate_pipeline(
     stages: list[StageMetrics] = []
     latency = 0.0
     net_total = 0.0
+    energy = 0.0
     feasible = True
 
     if include_io and dlink is not None:
-        t_in = dlink.transfer_time(graph.cut_bytes(0) * batch)
+        in_bytes = graph.cut_bytes(0) * batch
+        t_in = dlink.transfer_time(in_bytes)
         latency += t_in
         net_total += t_in
+        energy += dlink.transfer_energy(in_bytes)
 
     cycle_times: list[float] = []
     for i in range(n_stages):
@@ -133,27 +161,37 @@ def evaluate_pipeline(
         dev = devices[i]
         comp = _stage_time(graph, lo, hi, dev, batch, costs)
         send = 0.0
+        send_bytes = 0.0
+        link = None
         if i < n_stages - 1:
-            send = links[i].transfer_time(graph.cut_bytes(hi) * batch)
+            link = links[i]
+            send_bytes = graph.cut_bytes(hi) * batch
+            send = link.transfer_time(send_bytes)
+        e = _stage_energy(dev, comp, send, send_bytes, link)
         wbytes = graph.segment_weight_bytes(lo, hi)
         abytes = max((b.act_bytes * batch for b in graph.blocks[lo:hi]), default=0)
         ok = wbytes + abytes <= dev.mem_bytes
         feasible &= ok
         stages.append(StageMetrics(device=dev.name, blocks=(lo, hi),
                                    compute_s=comp, send_s=send,
-                                   weight_bytes=wbytes, mem_ok=ok))
+                                   weight_bytes=wbytes, mem_ok=ok,
+                                   energy_j=e))
         latency += comp + send
         net_total += send
+        energy += e
         cycle_times.append(comp + send)
 
     if include_io and dlink is not None:
-        t_out = dlink.transfer_time(graph.output_bytes * batch)
+        out_bytes = graph.output_bytes * batch
+        t_out = dlink.transfer_time(out_bytes)
         latency += t_out
         net_total += t_out
+        energy += dlink.transfer_energy(out_bytes)
         cycle_times[-1] += t_out
 
     bottleneck = max(cycle_times)
     throughput = batch / bottleneck if bottleneck > 0 else float("inf")
     return PipelineMetrics(partition=tuple(cuts), latency_s=latency,
                            throughput=throughput, stages=tuple(stages),
-                           net_s=net_total, feasible=feasible)
+                           net_s=net_total, feasible=feasible,
+                           energy_j=energy)

@@ -39,6 +39,8 @@ class DeviceProfile:
     mem_bytes: int                # usable memory for weights + activations
     mem_bw: float = 0.0           # bytes/s (used by roofline-style costs)
     stage_overhead_s: float = 0.0  # fixed cost per stage invocation (framework)
+    idle_w: float = 0.0           # power draw while waiting (W)
+    active_w: float = 0.0         # power draw while computing (W)
 
     def compute_time(self, flops: float, bytes_moved: float = 0.0) -> float:
         """Roofline-ish time: max of compute and memory terms + overhead."""
@@ -46,6 +48,10 @@ class DeviceProfile:
         if self.mem_bw > 0 and bytes_moved > 0:
             t = max(t, bytes_moved / self.mem_bw)
         return t + self.stage_overhead_s
+
+    def compute_energy(self, compute_s: float, idle_s: float = 0.0) -> float:
+        """Joules for ``compute_s`` seconds busy (+ optional idle tail)."""
+        return self.active_w * compute_s + self.idle_w * idle_s
 
 
 @dataclass(frozen=True)
@@ -56,9 +62,14 @@ class Link:
     rtt_s: float                  # round-trip time
     bw_bytes_per_s: float
     per_msg_overhead_s: float = 0.0   # serialization / syscall / RPC overhead
+    energy_per_byte_j: float = 0.0    # radio/NIC joules per byte on the wire
 
     def transfer_time(self, nbytes: float) -> float:
         return self.rtt_s / 2.0 + self.per_msg_overhead_s + nbytes / self.bw_bytes_per_s
+
+    def transfer_energy(self, nbytes: float) -> float:
+        """Radio joules to move ``nbytes`` (sender + receiver NICs)."""
+        return self.energy_per_byte_j * nbytes
 
 
 # --------------------------------------------------------------------------- #
@@ -87,6 +98,9 @@ class LinkTrace:
     per_msg_overhead_s: float = 0.0
     jitter: float = 0.0
     interp: str = "linear"            # "linear" | "hold"
+    energy_per_byte_j: float = 0.0    # radio cost is a link property, not
+                                      # time-varying: congestion changes
+                                      # rtt/bw, not joules per byte sent
 
     def __post_init__(self):
         if not self.schedule:
@@ -116,7 +130,8 @@ class LinkTrace:
         """Static snapshot of the link at trace time ``t`` (no jitter)."""
         rtt, bw = self._sample(t)
         return Link(f"{self.name}@{t:.3g}s", rtt_s=rtt, bw_bytes_per_s=bw,
-                    per_msg_overhead_s=self.per_msg_overhead_s)
+                    per_msg_overhead_s=self.per_msg_overhead_s,
+                    energy_per_byte_j=self.energy_per_byte_j)
 
     def transfer_time(self, nbytes: float, t: float = 0.0, rng=None) -> float:
         """Transfer time at trace time ``t``; with ``rng`` applies jitter.
@@ -127,6 +142,9 @@ class LinkTrace:
         if self.jitter > 0.0 and rng is not None:
             dt *= math.exp(rng.normal(0.0, self.jitter))
         return dt
+
+    def transfer_energy(self, nbytes: float) -> float:
+        return self.energy_per_byte_j * nbytes
 
 
 AnyLink = Union[Link, LinkTrace]
@@ -143,8 +161,9 @@ def ramp_trace(name: str, start: Link, end: Link, t_start: float,
     recovers) linearly to ``end`` by ``t_end``, then holds ``end``.
 
     Schedule knots carry (t, rtt, bw) only, so the trace keeps
-    ``start``'s per-message overhead throughout; pick link pairs with
-    matching overheads (all the edge-side links here use 0.5 ms)."""
+    ``start``'s per-message overhead and radio energy throughout; pick
+    link pairs with matching overheads (all the edge-side links here use
+    0.5 ms)."""
     if t_end <= t_start:
         raise ValueError("need t_end > t_start")
     return LinkTrace(
@@ -153,6 +172,7 @@ def ramp_trace(name: str, start: Link, end: Link, t_start: float,
                   (t_end, end.rtt_s, end.bw_bytes_per_s)),
         per_msg_overhead_s=start.per_msg_overhead_s,
         jitter=jitter,
+        energy_per_byte_j=start.energy_per_byte_j,
     )
 
 
@@ -170,6 +190,7 @@ def step_trace(name: str, before: Link, after: Link, t_step: float,
         per_msg_overhead_s=before.per_msg_overhead_s,
         jitter=jitter,
         interp="hold",
+        energy_per_byte_j=before.energy_per_byte_j,
     )
 
 
@@ -183,20 +204,27 @@ GiB = 1024 ** 3
 # reported seconds-scale batch times): PyTorch-on-A72 sustains ~10 GFLOP/s
 # on dense convs; depthwise convs run at ~10% of that (captured per-block
 # via Block.eff, not here).
+#
+# Power calibration (the energy objective): Pi 4B draws ~2.7 W idle and
+# ~6.4 W with all four A72 cores busy (widely measured wall figures); an
+# RTX 4090 idles around 22 W and sustains ~320 W under inference load
+# (below its 450 W TGP — launch-bound small batches never hit it).  TPU
+# v5e per-chip power is not published; ~170 W active / ~60 W idle is the
+# regime consistent with its 197 TFLOP/s at "2x perf/W over v4".
 PI_4B = DeviceProfile(
     name="pi4b", flops_per_s=10e9, mem_bytes=4 * GiB, mem_bw=4e9,
-    stage_overhead_s=5e-3,
+    stage_overhead_s=5e-3, idle_w=2.7, active_w=6.4,
 )
 
 RTX_4090 = DeviceProfile(
     name="rtx4090", flops_per_s=1.5e12, mem_bytes=24 * GiB, mem_bw=1008e9,
-    stage_overhead_s=5e-3,
+    stage_overhead_s=5e-3, idle_w=22.0, active_w=320.0,
 )
 
 # One TPU v5e chip (peak specs; roofline constants of the assignment).
 TPU_V5E_CHIP = DeviceProfile(
     name="tpu_v5e", flops_per_s=197e12, mem_bytes=16 * GiB, mem_bw=819e9,
-    stage_overhead_s=2e-6,
+    stage_overhead_s=2e-6, idle_w=60.0, active_w=170.0,
 )
 
 
@@ -209,6 +237,8 @@ def tpu_pod(n_chips: int = 256, name: str | None = None) -> DeviceProfile:
         mem_bytes=TPU_V5E_CHIP.mem_bytes * n_chips,
         mem_bw=TPU_V5E_CHIP.mem_bw * n_chips,
         stage_overhead_s=5e-6,
+        idle_w=TPU_V5E_CHIP.idle_w * n_chips,
+        active_w=TPU_V5E_CHIP.active_w * n_chips,
     )
 
 
@@ -216,17 +246,24 @@ def tpu_pod(n_chips: int = 256, name: str | None = None) -> DeviceProfile:
 Mbit = 1e6 / 8
 Gbit = 1e9 / 8
 
+# Radio/NIC energy per byte (both endpoints): GbE NICs draw ~1.5 W
+# sustained at wire rate (125 MB/s) → ~12 nJ/B for the pair; a
+# WAN/cellular egress path is orders of magnitude costlier, ~1 J/MB
+# (the low end of measured LTE figures) → 1 µJ/B; ICI/DCN move bytes at
+# a few W over tens of GB/s, so their per-byte cost is negligible but
+# nonzero.
 LAN_PI_PI = Link("lan_pi_pi", rtt_s=0.201e-3, bw_bytes_per_s=1 * Gbit,
-                 per_msg_overhead_s=0.5e-3)
+                 per_msg_overhead_s=0.5e-3, energy_per_byte_j=12e-9)
 LAN_PI_GPU = Link("lan_pi_gpu", rtt_s=0.383e-3, bw_bytes_per_s=1 * Gbit,
-                  per_msg_overhead_s=0.5e-3)
+                  per_msg_overhead_s=0.5e-3, energy_per_byte_j=12e-9)
 # Paper Sec. V-B: tc netem 200 ms RTT + 5 Mbit/s.
 DURESS = Link("duress", rtt_s=200e-3, bw_bytes_per_s=5 * Mbit,
-              per_msg_overhead_s=0.5e-3)
+              per_msg_overhead_s=0.5e-3, energy_per_byte_j=1e-6)
 
 ICI_V5E = Link("ici_v5e", rtt_s=2e-6, bw_bytes_per_s=50e9,
-               per_msg_overhead_s=1e-6)
+               per_msg_overhead_s=1e-6, energy_per_byte_j=1e-11)
 # Cross-pod data-center network, aggregated per pod boundary.
-DCN = Link("dcn", rtt_s=20e-6, bw_bytes_per_s=25e9, per_msg_overhead_s=5e-6)
+DCN = Link("dcn", rtt_s=20e-6, bw_bytes_per_s=25e9, per_msg_overhead_s=5e-6,
+           energy_per_byte_j=5e-11)
 DCN_CONGESTED = Link("dcn_congested", rtt_s=2e-3, bw_bytes_per_s=2.5e9,
-                     per_msg_overhead_s=5e-6)
+                     per_msg_overhead_s=5e-6, energy_per_byte_j=5e-11)

@@ -6,14 +6,21 @@ Three engines, in increasing generality:
                           block-boundary split across a 2-device pipeline.
   * ``sweep_kway``      — exhaustive k-way enumeration (exact; fine up to
                           ~C(n_blocks, k-1) ≈ 1e6 combinations).
-  * ``dp_front_kway``   — bi-objective label-correcting DP over the chain:
-                          exact Pareto front of (latency, bottleneck-cycle)
-                          for k stages in O(k·n²·|labels|), used when
-                          enumeration blows up (many pods / many blocks).
+  * ``dp_front_kway``   — multi-objective label-correcting DP over the
+                          chain: exact Pareto front for k stages in
+                          O(k·n²·|labels|), used when enumeration blows
+                          up (many pods / many blocks).  Labels carry one
+                          monotone scalar per active objective — latency,
+                          bottleneck cycle (↔ throughput), and energy are
+                          each monotone under chain extension, so pruning
+                          dominated labels is exact for any subset.
 
 ``solve`` is the unified scenario-driven entry point: it picks the right
 engine for the problem size, so callers (AdaptiveSplitter, the runtime,
-benchmarks) never hard-code a pipeline depth.
+benchmarks) never hard-code a pipeline depth.  Pass
+``objectives=("latency", "throughput", "energy")`` to widen the DP front
+to the 3-D trade-off surface; the default is the paper's bi-objective
+pair, and sweeps always return every evaluated point regardless.
 
 All return ``PipelineMetrics`` lists; compose with ``pareto.pareto_front``.
 """
@@ -24,9 +31,11 @@ import math
 from typing import Sequence
 
 from .blocks import BlockGraph
-from .costmodel import CostTable, PipelineMetrics, evaluate_pipeline
+from .costmodel import (CostTable, PipelineMetrics, _stage_energy,
+                        evaluate_pipeline)
 from .devices import DeviceProfile, Link, link_at
-from .pareto import pareto_front
+from .pareto import (ObjectiveLike, min_front, pareto_front,
+                     resolve_objectives)
 
 
 def solve(
@@ -37,6 +46,7 @@ def solve(
     include_io: bool = True,
     at_time: float = 0.0,
     max_enum: int = 50_000,
+    objectives: Sequence[ObjectiveLike] | None = None,
 ) -> list[PipelineMetrics]:
     """Scenario-driven partition search — the one entry point.
 
@@ -44,7 +54,10 @@ def solve(
     point, the paper's method), ``sweep_kway`` while exhaustive k-way
     enumeration stays under ``max_enum`` combinations, ``dp_front_kway``
     beyond that (returns only the exact Pareto front).  Time-varying
-    links are resolved to their state at ``at_time``.
+    links are resolved to their state at ``at_time``.  ``objectives``
+    selects the active objective set for the DP front (default: the
+    paper's (latency, throughput) pair); the exhaustive engines return
+    every evaluated point, whose metrics always carry all objectives.
     """
     devices = tuple(scenario.devices)
     links = tuple(link_at(l, at_time) for l in scenario.links)
@@ -65,7 +78,7 @@ def solve(
         return sweep_kway(graph, devices, links, batch=batch, costs=costs,
                           include_io=include_io)
     return dp_front_kway(graph, devices, links, batch=batch, costs=costs,
-                         include_io=include_io)
+                         include_io=include_io, objectives=objectives)
 
 
 def sweep_2way(
@@ -117,18 +130,18 @@ def sweep_kway(
 
 
 # --------------------------------------------------------------------------- #
-# Bi-objective DP
+# Multi-objective DP
 # --------------------------------------------------------------------------- #
-def _prune(labels: list[tuple[float, float, tuple[int, ...]]]):
-    """Keep non-dominated (latency, bottleneck) labels (both minimized)."""
-    labels.sort(key=lambda x: (x[0], x[1]))
-    kept: list[tuple[float, float, tuple[int, ...]]] = []
-    best_b = float("inf")
-    for lab in labels:
-        if lab[1] < best_b:
-            kept.append(lab)
-            best_b = lab[1]
-    return kept
+#: DP-trackable monotone scalars per objective name: the label component
+#: is min-convention and monotone non-decreasing under chain extension.
+#: "throughput" is tracked as the bottleneck cycle time (throughput =
+#: batch / bottleneck is strictly monotone in it).
+_DP_OBJECTIVES = ("latency", "throughput", "energy")
+
+
+def _prune(labels: list[tuple[tuple[float, ...], tuple[int, ...]]]):
+    """Keep non-dominated (vector, cuts) labels (vectors all-minimized)."""
+    return min_front(labels)
 
 
 def dp_front_kway(
@@ -139,15 +152,28 @@ def dp_front_kway(
     costs: CostTable | None = None,
     allow_empty_stages: bool = False,
     include_io: bool = True,
+    objectives: Sequence[ObjectiveLike] | None = None,
 ) -> list[PipelineMetrics]:
     """Exact Pareto front over all k-way partitions via label DP.
 
-    A label at state (i devices used, j blocks placed) is
-    (cumulative latency so far, worst stage cycle so far, cuts).
-    Both objectives are monotone under extension, so dominated labels can
-    never yield a non-dominated completion — pruning is exact.
+    A label at state (i devices used, j blocks placed) carries one
+    monotone scalar per active objective — cumulative latency, worst
+    stage cycle so far (↔ throughput), cumulative energy — plus the cut
+    vector.  Every component is monotone under extension, so dominated
+    labels can never yield a non-dominated completion — pruning is exact
+    for any subset of {latency, throughput, energy}.
     """
     from .costmodel import _stage_time  # internal reuse
+
+    objs = resolve_objectives(objectives)
+    for o in objs:
+        if o.name not in _DP_OBJECTIVES:
+            raise ValueError(
+                f"dp_front_kway cannot track objective {o.name!r}: only "
+                f"{_DP_OBJECTIVES} are monotone under chain extension")
+    track_lat = any(o.name == "latency" for o in objs)
+    track_bot = any(o.name == "throughput" for o in objs)
+    track_en = any(o.name == "energy" for o in objs)
 
     n, k = graph.n_blocks, len(devices)
     if k - 1 != len(links):
@@ -155,9 +181,21 @@ def dp_front_kway(
 
     dlink = links[0] if (include_io and links) else None
     init_lat = dlink.transfer_time(graph.cut_bytes(0) * batch) if dlink else 0.0
+    init_en = dlink.transfer_energy(graph.cut_bytes(0) * batch) if dlink else 0.0
 
-    # labels[j] after i stages: list of (lat, bot, cuts)
-    labels: dict[int, list] = {0: [(init_lat, 0.0, ())]}
+    def label_vec(lat: float, bot: float, en: float) -> tuple[float, ...]:
+        vec = []
+        if track_lat:
+            vec.append(lat)
+        if track_bot:
+            vec.append(bot)
+        if track_en:
+            vec.append(en)
+        return tuple(vec)
+
+    # labels[j] after i stages: list of ((lat, bot, en), cuts); the full
+    # triple rides along so pruning can project to the active subset
+    labels: dict[int, list] = {0: [((init_lat, 0.0, init_en), ())]}
     for i in range(k):
         nxt: dict[int, list] = {}
         last = i == k - 1
@@ -171,22 +209,29 @@ def dp_front_kway(
                 j2_options = range(lo, hi + 1)
             for j2 in j2_options:
                 comp = _stage_time(graph, j, j2, devices[i], batch, costs)
-                send = links[i].transfer_time(graph.cut_bytes(j2) * batch) if not last else 0.0
+                send_bytes = graph.cut_bytes(j2) * batch if not last else 0.0
+                send = links[i].transfer_time(send_bytes) if not last else 0.0
                 out_t = dlink.transfer_time(graph.output_bytes * batch) if (last and dlink) else 0.0
+                out_e = dlink.transfer_energy(graph.output_bytes * batch) if (last and dlink) else 0.0
+                e_step = _stage_energy(devices[i], comp, send, send_bytes,
+                                       links[i] if not last else None) + out_e
                 step = comp + send + out_t
                 cyc = step
-                for lat, bot, cuts in labs:
+                for (lat, bot, en), cuts in labs:
                     nl = lat + step
                     nb = max(bot, cyc)
+                    ne = en + e_step
                     nc = cuts if last else cuts + (j2,)
-                    nxt.setdefault(j2, []).append((nl, nb, nc))
-        labels = {j: _prune(v) for j, v in nxt.items()}
+                    nxt.setdefault(j2, []).append(((nl, nb, ne), nc))
+        labels = {j: _prune([(label_vec(*vec), (vec, cuts))
+                             for vec, cuts in v])
+                  for j, v in nxt.items()}
 
     finals = labels.get(n, [])
     out = [evaluate_pipeline(graph, cuts, devices, links, batch=batch,
                              costs=costs, include_io=include_io)
-           for _, _, cuts in finals]
-    return pareto_front(out)
+           for _, cuts in finals]
+    return pareto_front(out, objs)
 
 
 # Convenience single-objective picks ---------------------------------------- #
@@ -198,3 +243,9 @@ def best_latency(points: Sequence[PipelineMetrics]) -> PipelineMetrics:
 def best_throughput(points: Sequence[PipelineMetrics]) -> PipelineMetrics:
     feas = [p for p in points if p.feasible] or list(points)
     return max(feas, key=lambda p: p.throughput)
+
+
+def best_energy(points: Sequence[PipelineMetrics]) -> PipelineMetrics:
+    """Lowest joules/batch — the pick for battery-bound deployments."""
+    feas = [p for p in points if p.feasible] or list(points)
+    return min(feas, key=lambda p: p.energy_j)

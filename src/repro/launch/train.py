@@ -134,6 +134,12 @@ def main(argv=None) -> int:
         t0 = time.time()
         for step in range(start, args.steps):
             if args.fail_at_step and step == args.fail_at_step:
+                # crash between async checkpoint writes, not during one:
+                # the drill tests restart from a durable checkpoint; a
+                # torn in-flight write is a separate failure mode the
+                # manager already survives by never restoring *.tmp dirs
+                if mgr is not None:
+                    mgr.wait()
                 print(f"[fault-injection] crashing at step {step}",
                       flush=True)
                 os._exit(42)

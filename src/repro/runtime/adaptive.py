@@ -16,6 +16,14 @@ paper leaves as future work:
 Under a ``LinkTrace`` (WAN ramp, congestion spike) the loop therefore
 does exactly what Sec. V-B argues a deployment must: notice the wire
 degrading and move the split, while the run is in flight.
+
+Energy rides the same loop: every batch's joules are modeled from the
+*measured* per-stage compute times (device active power × exe + idle
+power during the wire waits + radio cost × bytes actually sent), and an
+``energy_budget_j`` makes the re-solve constrained — splits above the
+budget are discarded before the policy picks, so a WAN ramp that makes
+the current split energy-hungry triggers a migration even when raw
+throughput would not justify one.
 """
 from __future__ import annotations
 
@@ -41,6 +49,8 @@ class LoopRecord:
     migration_cost_s: float         # redeploy cost charged (0 if none)
     predicted_latency_s: float      # splitter's model of the active cuts
     predicted_throughput: float
+    energy_j: float = 0.0           # modeled J for this batch (measured exe)
+    predicted_energy_j: float = 0.0  # splitter's model of the active cuts
 
 
 class AdaptiveRuntime:
@@ -53,14 +63,16 @@ class AdaptiveRuntime:
                  backend: Backend | Sequence[Backend] = "lightweight",
                  costs: CostTable | None = None, hysteresis: float = 0.10,
                  migration_cost_s: float = 0.25, check_every: int = 4,
-                 alpha: float = 0.5, queue_depth: int = 2, seed: int = 0):
+                 alpha: float = 0.5, queue_depth: int = 2, seed: int = 0,
+                 energy_budget_j: float | None = None):
         self._model, self._params = model, params
         self.scenario = scenario
         self._deploy_opts = dict(batch=batch, policy=policy, costs=costs,
                                  hysteresis=hysteresis,
                                  migration_cost_s=migration_cost_s,
                                  backend=backend, queue_depth=queue_depth,
-                                 alpha=alpha, seed=seed)
+                                 alpha=alpha, seed=seed,
+                                 energy_budget_j=energy_budget_j)
         self.check_every = check_every
         self.records: list[LoopRecord] = []
         self.graph: BlockGraph | None = graph
@@ -83,7 +95,8 @@ class AdaptiveRuntime:
         self.splitter = AdaptiveSplitter(
             graph, self.scenario, batch=o["batch"], policy=o["policy"],
             costs=o["costs"], hysteresis=o["hysteresis"],
-            migration_cost_s=o["migration_cost_s"], include_io=False)
+            migration_cost_s=o["migration_cost_s"], include_io=False,
+            energy_budget_j=o["energy_budget_j"])
         init = self.splitter.solve()
         self.splitter.current = init
         self.splitter.history.append((init.partition, True))
@@ -136,7 +149,14 @@ class AdaptiveRuntime:
         prev = len(self.records)
         for b in range(prev, prev + n_batches):
             active_cuts = self.pipe.cuts
+            exe0 = [w.stats.exe_s for w in self.pipe.workers]
+            bytes0 = [net.total_bytes for net in self.pipe.nets]
             _, lat, _hops = self.pipe.run_one(x)
+            exe_d = [w.stats.exe_s - e0
+                     for w, e0 in zip(self.pipe.workers, exe0)]
+            bytes_d = [net.total_bytes - b0
+                       for net, b0 in zip(self.pipe.nets, bytes0)]
+            energy, _ = self.pipe.stage_energy_model(exe_d, _hops, bytes_d)
             # the model's view of the cuts this batch actually ran under
             # (captured before any re-solve below replaces it)
             pred = self.splitter.current
@@ -156,7 +176,8 @@ class AdaptiveRuntime:
                 batch_idx=b, t_s=self.pipe.clock(), cuts=active_cuts,
                 latency_s=lat, migrated=migrated, migration_cost_s=cost,
                 predicted_latency_s=pred.latency_s,
-                predicted_throughput=pred.throughput))
+                predicted_throughput=pred.throughput,
+                energy_j=energy, predicted_energy_j=pred.energy_j))
         return self.records[prev:]
 
     # ------------------------------------------------------------------ #

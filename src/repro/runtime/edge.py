@@ -70,6 +70,10 @@ class EmulatedLink:
         self._rng = np.random.default_rng(seed)
         self._lock = threading.Lock()
         self.observations: list[tuple[int, float, float]] = []
+        # lifetime radio accounting (never drained): joules = link radio
+        # cost × bytes actually pushed through this hop
+        self.total_bytes: int = 0
+        self.total_energy_j: float = 0.0
 
     def send(self, nbytes: int) -> float:
         t = self._clock()
@@ -80,6 +84,8 @@ class EmulatedLink:
         time.sleep(dt)
         with self._lock:
             self.observations.append((nbytes, dt, t))
+            self.total_bytes += nbytes
+            self.total_energy_j += self.link.energy_per_byte_j * nbytes
         return dt
 
     def drain_observations(self) -> list[tuple[int, float, float]]:
@@ -164,6 +170,11 @@ class PipelineResult:
     hop_net_s: tuple[float, ...] = ()   # mean per-batch wire time per hop
     cpu_pct: tuple[float, ...] = ()
     mem_pct: tuple[float, ...] = ()
+    # modeled J/batch from *measured* stage times + wire bytes (scenario
+    # device power × exe + idle × wire wait + radio × bytes); 0.0 when
+    # the pipeline was built from bare links (no device power profile)
+    energy_j: float = 0.0
+    stage_energy_j: tuple[float, ...] = ()
 
 
 class EdgePipeline:
@@ -367,6 +378,25 @@ class EdgePipeline:
             raise errors[0]
         return time.perf_counter() - t0
 
+    def stage_energy_model(self, stage_exe_s: Sequence[float],
+                            hop_net_s: Sequence[float],
+                            hop_bytes: Sequence[float],
+                            ) -> tuple[float, tuple[float, ...]]:
+        """Modeled J/batch from measured per-stage compute times: device
+        active power × exe, idle power while its outbound hop drains, and
+        each hop's radio cost × bytes.  Needs a Scenario (device power
+        profiles); bare-link pipelines report 0."""
+        if self.scenario is None:
+            return 0.0, ()
+        from ..core.costmodel import _stage_energy
+        per_stage = tuple(
+            _stage_energy(dev, stage_exe_s[i],
+                          hop_net_s[i] if i < len(hop_net_s) else 0.0,
+                          hop_bytes[i] if i < len(hop_bytes) else 0.0,
+                          self.nets[i].link if i < len(self.nets) else None)
+            for i, dev in enumerate(self.scenario.devices))
+        return sum(per_stage), per_stage
+
     # ------------------------------------------------------------------ #
     def measure(self, make_batch: Callable[[], jax.Array],
                 n_batches: int = 10, warmup: int = 1) -> PipelineResult:
@@ -383,10 +413,13 @@ class EdgePipeline:
         hop_t: list[tuple[float, ...]] = []
         for _ in range(max(warmup, 1)):
             self.run_one(x)
+        bytes0 = [net.total_bytes for net in self.nets]
         for _ in range(max(n_batches // 3, 2)):
             _, l, hops = self.run_one(x)
             lat.append(l)
             hop_t.append(hops)
+        hop_bytes = [(net.total_bytes - b0) / len(lat)
+                     for net, b0 in zip(self.nets, bytes0)]
 
         # --- throughput: streamed, stages overlap -------------------- #
         self._reset_stats()
@@ -400,14 +433,19 @@ class EdgePipeline:
         batch = x.shape[0]
         hop_net = tuple(float(np.mean([h[i] for h in hop_t]))
                         for i in range(len(self.nets)))
+        stage_exe = tuple(w.stats.exe_s / max(w.stats.calls, 1)
+                          for w in self.workers)
+        energy, stage_energy = self.stage_energy_model(stage_exe, hop_net,
+                                                       hop_bytes)
         return PipelineResult(
             backend=self.backend, partition=self.cuts,
             latency_s=float(np.mean(lat)),
             throughput=n_batches * batch / total,
-            stage_exe_s=tuple(w.stats.exe_s / max(w.stats.calls, 1)
-                              for w in self.workers),
+            stage_exe_s=stage_exe,
             net_s=float(sum(hop_net)),
             hop_net_s=hop_net,
             cpu_pct=(cpu,) * self.n_stages,
             mem_pct=(p_mem,) * self.n_stages,
+            energy_j=energy,
+            stage_energy_j=stage_energy,
         )

@@ -37,6 +37,20 @@ from ..sharding.api import shard
 from ..optim import OptConfig, apply_gradients
 
 
+def _shard_map(f, mesh, in_specs, out_specs, axis_names):
+    """Partial-manual shard_map across jax versions: jax>=0.6 spells it
+    jax.shard_map(axis_names=..., check_vma=...); older releases have
+    jax.experimental.shard_map with auto=<complement> / check_rep=."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=set(axis_names),
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    auto = frozenset(mesh.axis_names) - set(axis_names)
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False, auto=auto)
+
+
 # --------------------------------------------------------------------------- #
 # Stage layout / param repacking
 # --------------------------------------------------------------------------- #
@@ -261,10 +275,10 @@ def make_pipeline_train_step(cfg, pcfg: PipelineConfig, opt: OptConfig,
             _, ys = jax.lax.scan(tick, buf0, jnp.arange(T))
             return ys[None]                       # (1, T, mb, S, D) per pod
 
-        ys = jax.shard_map(
+        ys = _shard_map(
             pipeline, mesh=mesh,
             in_specs=(P("pod"), P(), P(), P()), out_specs=P("pod"),
-            axis_names={"pod"}, check_vma=False,
+            axis_names={"pod"},
         )(layers, x_mb32, enc_mb32, shared32)
         # finished microbatches come off the last pod at ticks K-1 .. T-1
         out = ys[K - 1][K - 1:]                    # (M, mb, S, D)
@@ -339,9 +353,9 @@ def make_pipeline_prefill_step(cfg, pcfg: PipelineConfig, mesh,
             last = ys[K - 1]
             return jax.tree.map(lambda c: c[None], (last, cache))
 
-        last, cache = jax.shard_map(
+        last, cache = _shard_map(
             pipeline, mesh=mesh, in_specs=(P("pod"), P()),
-            out_specs=P("pod"), axis_names={"pod"}, check_vma=False,
+            out_specs=P("pod"), axis_names={"pod"},
         )(layers, x)
         h = lm.final_hidden(cfg, params, last[K - 1])
         logits = lm_logits(h[:, -1:], params["embed"], params.get("lm_head"))
@@ -387,9 +401,9 @@ def make_pipeline_decode_step(cfg, pcfg: PipelineConfig, mesh):
             (_, kv), ys = jax.lax.scan(tick, (x, kv), jnp.arange(K))
             return jax.tree.map(lambda c: c[None], (ys[K - 1], kv))
 
-        last, kv = jax.shard_map(
+        last, kv = _shard_map(
             pipeline, mesh=mesh, in_specs=(P("pod"), P("pod"), P()),
-            out_specs=P("pod"), axis_names={"pod"}, check_vma=False,
+            out_specs=P("pod"), axis_names={"pod"},
         )(layers, kv, x)
         h = lm.final_hidden(cfg, params, last[K - 1])
         logits = lm_logits(h, params["embed"], params.get("lm_head"))

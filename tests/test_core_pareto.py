@@ -15,6 +15,14 @@ points = st.lists(
               st.floats(0.01, 100, allow_nan=False)),
     min_size=1, max_size=60)
 
+# d=3 clouds (latency ↓, throughput ↑, energy ↓); a coarse grid mixed in
+# so duplicate coordinates (the staircase's hard case) actually occur
+_coord = st.one_of(st.floats(0.01, 100, allow_nan=False),
+                   st.integers(1, 5).map(float))
+points3 = st.lists(st.tuples(_coord, _coord, _coord),
+                   min_size=1, max_size=60)
+OBJ3 = ("latency", "throughput", "energy")
+
 
 @given(points)
 @settings(max_examples=200, deadline=None)
@@ -65,6 +73,68 @@ def test_hypervolume_nonneg_and_front_invariant(pts):
     hv_front = hypervolume(pareto_front(pts), ref)
     assert hv_all >= 0
     assert math.isclose(hv_all, hv_front, rel_tol=1e-9, abs_tol=1e-12)
+
+
+# ---- d-dimensional properties (the objective-vector protocol) ------------- #
+@given(points3)
+@settings(max_examples=200, deadline=None)
+def test_front3_is_nondominated(pts):
+    front = pareto_front(pts, OBJ3)
+    for p in front:
+        assert not any(dominates(q, p, OBJ3) for q in pts)
+
+
+@given(points3)
+@settings(max_examples=200, deadline=None)
+def test_front3_covers_every_point(pts):
+    front = set(pareto_front(pts, OBJ3))
+    for p in pts:
+        assert p in front or any(dominates(q, p, OBJ3) for q in front)
+
+
+@given(points3)
+@settings(max_examples=200, deadline=None)
+def test_dominates3_antisymmetric_and_irreflexive(pts):
+    for p in pts:
+        assert not dominates(p, p, OBJ3)
+    for a in pts[:10]:
+        for b in pts[:10]:
+            assert not (dominates(a, b, OBJ3) and dominates(b, a, OBJ3))
+
+
+@given(points3)
+@settings(max_examples=100, deadline=None)
+def test_front3_idempotent(pts):
+    f1 = pareto_front(pts, OBJ3)
+    assert pareto_front(f1, OBJ3) == f1
+
+
+@given(points)
+@settings(max_examples=200, deadline=None)
+def test_d2_path_agrees_with_legacy_sweep(pts):
+    """The generalized front must reproduce the original bi-objective
+    sort-sweep output exactly (order included)."""
+    order = sorted(pts, key=lambda p: (p[0], -p[1]))
+    legacy, best_thr = [], float("-inf")
+    for p in order:
+        if p[1] > best_thr:
+            legacy.append(p)
+            best_thr = p[1]
+    assert pareto_front(pts) == legacy
+
+
+@given(points3)
+@settings(max_examples=100, deadline=None)
+def test_hypervolume3_nonneg_front_invariant_and_monotone(pts):
+    ref = (max(p[0] for p in pts) * 1.1, min(p[1] for p in pts) * 0.9,
+           max(p[2] for p in pts) * 1.1)
+    hv_all = hypervolume(pts, ref, OBJ3)
+    hv_front = hypervolume(pareto_front(pts, OBJ3), ref, OBJ3)
+    assert hv_all >= 0
+    assert math.isclose(hv_all, hv_front, rel_tol=1e-9, abs_tol=1e-12)
+    # an extra clearly-dominating point can only grow the volume
+    better = (0.005, 200.0, 0.005)
+    assert hypervolume(pts + [better], ref, OBJ3) >= hv_all - 1e-12
 
 
 def test_dominates_basic():

@@ -35,13 +35,18 @@ def test_knee_point_degenerate_one_axis():
     assert knee_point(pts) == (1.0, 3.0)
 
 
-def test_hypervolume_point_outside_latency_reference():
-    # latency beyond the reference contributes nothing
-    assert hypervolume([(2.0, 5.0)], ref_latency=1.0) == 0.0
+def test_hypervolume_invalid_reference_raises():
+    # every point outside the reference box = a mis-specified reference;
+    # the old behavior silently returned 0.0, now it raises
+    with pytest.raises(ValueError, match="invalid reference box"):
+        hypervolume([(2.0, 5.0)], ref_latency=1.0)
 
 
-def test_hypervolume_point_below_throughput_reference():
-    assert hypervolume([(0.5, 1.0)], ref_latency=1.0, ref_throughput=2.0) == 0.0
+def test_hypervolume_reference_better_on_max_axis_raises():
+    # throughput reference at/above every point = ref not worse on a
+    # max-axis: invalid box
+    with pytest.raises(ValueError, match="invalid reference box"):
+        hypervolume([(0.5, 1.0)], ref_latency=1.0, ref_throughput=2.0)
 
 
 def test_hypervolume_mixed_inside_outside():
@@ -55,6 +60,16 @@ def test_hypervolume_known_value():
     pts = [(1.0, 1.0), (2.0, 2.0)]
     # sweep from ref 3.0: (3-2)*2 + (2-1)*1 = 3
     assert hypervolume(pts, ref_latency=3.0) == pytest.approx(3.0)
+
+
+def test_hypervolume_legacy_positional_forms():
+    pts = [(1.0, 3.0), (2.0, 4.0)]
+    # (points, ref_latency): thr reference defaults to 0
+    assert hypervolume(pts, 3.0) == pytest.approx(
+        hypervolume(pts, ref_latency=3.0))
+    # (points, ref_latency, ref_throughput): the old fully-positional call
+    assert hypervolume(pts, 3.0, 1.0) == pytest.approx(
+        hypervolume(pts, ref_latency=3.0, ref_throughput=1.0))
 
 
 def test_dominates_and_is_on_front():

@@ -1,0 +1,333 @@
+"""The N-dimensional objective system + energy as the third objective.
+
+Deterministic (no hypothesis needed — the property suite in
+test_core_pareto.py adds randomized d-dim coverage when hypothesis is
+installed).  Covers: the objective-vector protocol, d∈{1,2,3,4} fronts
+against brute force, d=3 hypervolume, the energy cost model, the
+3-objective DP cross-validated against exhaustive enumeration (the PR's
+acceptance criterion), and the energy-aware adaptive layer.
+"""
+import math
+import random
+
+import pytest
+
+from repro.core import (Block, BlockGraph, CostTable, ENERGY, LATENCY,
+                        THROUGHPUT, AdaptiveSplitter, Objective, best_energy,
+                        dominates, dp_front_kway, evaluate_pipeline,
+                        hypervolume, is_on_front, knee_point, pareto_front,
+                        resolve_objectives, scenarios, solve, sweep_kway)
+from repro.core.devices import DeviceProfile, Link
+from repro.core.pareto import vector
+from repro.core.scenarios import Scenario
+
+OBJ3 = ("latency", "throughput", "energy")
+
+
+# --------------------------------------------------------------------------- #
+# Objective protocol
+# --------------------------------------------------------------------------- #
+def test_resolve_objectives_names_instances_and_default():
+    assert resolve_objectives() == (LATENCY, THROUGHPUT)
+    assert resolve_objectives(OBJ3) == (LATENCY, THROUGHPUT, ENERGY)
+    assert resolve_objectives((ENERGY, "latency")) == (ENERGY, LATENCY)
+    with pytest.raises(ValueError, match="unknown objective"):
+        resolve_objectives(("latency", "carbon"))
+    with pytest.raises(ValueError, match="at least one"):
+        resolve_objectives(())
+
+
+def test_objective_sense_validated():
+    with pytest.raises(ValueError, match="sense"):
+        Objective("x", "maximize", "x")
+
+
+def test_vector_reads_tuples_positionally_and_objects_by_attr():
+    assert vector((1.0, 2.0)) == (1.0, 2.0)
+    assert vector((1.0, 2.0, 3.0), OBJ3) == (1.0, 2.0, 3.0)
+
+    class M:
+        latency_s, throughput, energy_j = 0.5, 8.0, 2.5
+    assert vector(M(), OBJ3) == (0.5, 8.0, 2.5)
+
+
+# --------------------------------------------------------------------------- #
+# d-dimensional dominance / fronts
+# --------------------------------------------------------------------------- #
+def test_dominates_3d_basics_and_antisymmetry():
+    a, b = (1.0, 10.0, 2.0), (2.0, 5.0, 3.0)
+    assert dominates(a, b, OBJ3)
+    assert not dominates(b, a, OBJ3)            # antisymmetry
+    # equal vectors never dominate
+    assert not dominates(a, a, OBJ3)
+    # better on two axes, worse on energy: incomparable
+    c = (0.5, 20.0, 5.0)
+    assert not dominates(c, a, OBJ3) and not dominates(a, c, OBJ3)
+
+
+def _naive_front(pts, objs):
+    seen, out = set(), []
+    for p in pts:
+        if p in seen:
+            continue
+        seen.add(p)
+        if not any(dominates(q, p, objs) for q in pts):
+            out.append(p)
+    return out
+
+
+@pytest.mark.parametrize("d", [1, 2, 3, 4])
+def test_front_matches_brute_force_every_dimension(d):
+    names = ["latency", "throughput", "energy"]
+    objs = tuple((names[i] if i < 3 else Objective(f"o{i}", "min", f"o{i}"))
+                 for i in range(d))
+    rnd = random.Random(42 + d)
+    for _ in range(40):
+        pts = [tuple(rnd.choice([rnd.uniform(0, 5), float(rnd.randint(1, 3))])
+                     for _ in range(d))
+               for _ in range(rnd.randint(1, 50))]
+        front = pareto_front(pts, objs)
+        assert sorted(set(front)) == sorted(set(_naive_front(pts, objs)))
+        assert len(front) == len(set(front))            # dedup
+        for p in front:
+            assert is_on_front(p, pts, objs)
+
+
+def test_front_3d_never_drops_energy_distinct_ties():
+    # identical (lat, thr), different energy: 2-D front keeps one, the
+    # 3-D front keeps exactly the lower-energy point
+    pts = [(1.0, 5.0, 9.0), (1.0, 5.0, 2.0), (2.0, 6.0, 1.0)]
+    f3 = pareto_front(pts, OBJ3)
+    assert (1.0, 5.0, 2.0) in f3 and (1.0, 5.0, 9.0) not in f3
+    assert (2.0, 6.0, 1.0) in f3
+
+
+def test_legacy_2d_callers_unchanged():
+    # the exact cases of the original bi-objective suite
+    pts = [(1, 1), (2, 5), (3, 6), (10, 6.5)]
+    assert pareto_front(pts) == [(1, 1), (2, 5), (3, 6), (10, 6.5)]
+    k = knee_point(pts)
+    assert k in ((2, 5), (3, 6))
+    assert dominates((1.0, 10.0), (2.0, 5.0))
+    assert hypervolume([(1.0, 1.0), (2.0, 2.0)], 3.0) == pytest.approx(3.0)
+
+
+def test_knee_point_3d_on_front():
+    pts = [(1, 1, 10), (2, 5, 5), (3, 6, 4), (10, 6.5, 1)]
+    k = knee_point(pts, OBJ3)
+    assert k is not None and is_on_front(k, pts, OBJ3)
+
+
+# --------------------------------------------------------------------------- #
+# Hypervolume
+# --------------------------------------------------------------------------- #
+def test_hypervolume_3d_known_value():
+    # single point: box (3-1) × (4-2) × (5-2) = 12
+    assert hypervolume([(1.0, 4.0, 2.0)], (3.0, 2.0, 5.0), OBJ3) \
+        == pytest.approx(12.0)
+    # second, dominated point adds nothing
+    assert hypervolume([(1.0, 4.0, 2.0), (2.0, 3.0, 3.0)],
+                       (3.0, 2.0, 5.0), OBJ3) == pytest.approx(12.0)
+    # disjoint contribution: (1,4,2) and a better-energy, worse-latency pt
+    hv = hypervolume([(1.0, 4.0, 2.0), (2.0, 4.0, 1.0)],
+                     (3.0, 2.0, 5.0), OBJ3)
+    # union = 12 + (3-2)*(4-2)*(2-1) extra slab below energy 2
+    assert hv == pytest.approx(12.0 + 2.0)
+
+
+def test_hypervolume_3d_invalid_reference_raises():
+    with pytest.raises(ValueError, match="invalid reference box"):
+        hypervolume([(1.0, 4.0, 2.0)], (3.0, 2.0, 1.0), OBJ3)
+
+
+def test_hypervolume_vector_ref_dimension_checked():
+    with pytest.raises(ValueError, match="reference"):
+        hypervolume([(1.0, 4.0, 2.0)], (3.0, 2.0), OBJ3)
+    with pytest.raises(ValueError, match="either ref or ref_latency"):
+        hypervolume([(1.0, 4.0)], 3.0, ref_latency=2.0)
+
+
+# --------------------------------------------------------------------------- #
+# Energy cost model
+# --------------------------------------------------------------------------- #
+def _two_stage():
+    g = BlockGraph("g", (Block("a", 1e9, 10, out_bytes=1000),
+                         Block("b", 2e9, 10, out_bytes=10)),
+                   input_bytes=100, output_bytes=10)
+    d0 = DeviceProfile("d0", flops_per_s=1e9, mem_bytes=10**9,
+                       idle_w=2.0, active_w=10.0)
+    d1 = DeviceProfile("d1", flops_per_s=2e9, mem_bytes=10**9,
+                       idle_w=3.0, active_w=30.0)
+    link = Link("l", rtt_s=0.2, bw_bytes_per_s=1e4, energy_per_byte_j=1e-3)
+    return g, (d0, d1), (link,)
+
+
+def test_evaluate_pipeline_energy_hand_computed():
+    g, devs, links = _two_stage()
+    m = evaluate_pipeline(g, (1,), devs, links, batch=1, include_io=False)
+    # stage0: 1e9/1e9 = 1 s busy at 10 W; send 1000 B: 0.1 s rtt/2 +
+    # 1000/1e4 = 0.2 s wait at 2 W idle; radio 1000 × 1e-3 = 1 J
+    send_s = 0.1 + 1000 / 1e4
+    e0 = 10.0 * 1.0 + 2.0 * send_s + 1.0
+    # stage1: 2e9/2e9 = 1 s at 30 W, no send
+    e1 = 30.0 * 1.0
+    assert m.stages[0].energy_j == pytest.approx(e0)
+    assert m.stages[1].energy_j == pytest.approx(e1)
+    assert m.energy_j == pytest.approx(e0 + e1)
+
+
+def test_evaluate_pipeline_io_radio_charged():
+    g, devs, links = _two_stage()
+    no_io = evaluate_pipeline(g, (1,), devs, links, batch=1, include_io=False)
+    io = evaluate_pipeline(g, (1,), devs, links, batch=1, include_io=True)
+    # dispatch 100 B + return 10 B over the default dispatch link
+    assert io.energy_j - no_io.energy_j == pytest.approx(110 * 1e-3)
+
+
+def test_objectives_accessor_and_batch_scaling():
+    g, devs, links = _two_stage()
+    m = evaluate_pipeline(g, (1,), devs, links, batch=1, include_io=False)
+    assert m.objectives() == (m.latency_s, m.throughput)
+    assert m.objectives(OBJ3) == (m.latency_s, m.throughput, m.energy_j)
+    m4 = evaluate_pipeline(g, (1,), devs, links, batch=4, include_io=False)
+    assert m4.energy_j > m.energy_j         # more samples, more joules
+
+
+def test_registry_scenarios_carry_power_specs():
+    for name in ("pi_to_pi", "pi_to_gpu", "pi_pi_gpu", "pi_only3", "pods2"):
+        scen = scenarios.get(name)
+        assert all(d.active_w > 0 for d in scen.devices), name
+        assert scen.active_power_w > 0
+        from repro.core.devices import link_at
+        assert all(link_at(l, 0.0).energy_per_byte_j > 0
+                   for l in scen.links), name
+
+
+# --------------------------------------------------------------------------- #
+# 3-objective DP — the acceptance criterion
+# --------------------------------------------------------------------------- #
+def _rand_case(rnd, k):
+    n = rnd.randint(k + 1, 9)
+    blocks = tuple(Block(f"b{i}", flops=rnd.uniform(1e5, 1e9),
+                         weight_bytes=rnd.randint(100, 10**6),
+                         out_bytes=rnd.randint(100, 10**6))
+                   for i in range(n))
+    g = BlockGraph("g", blocks, input_bytes=1000, output_bytes=100)
+    devs = tuple(DeviceProfile(f"d{i}", flops_per_s=1e9 * (i + 1),
+                               mem_bytes=10**12, idle_w=1.0 + i,
+                               active_w=5.0 + 7 * i) for i in range(k))
+    links = tuple(Link(f"l{i}", rtt_s=1e-3, bw_bytes_per_s=1e8,
+                       energy_per_byte_j=rnd.choice([1e-8, 1e-6]))
+                  for i in range(k - 1))
+    return g, devs, links
+
+
+def _key3(p):
+    return (round(p.latency_s, 10), round(p.throughput, 6),
+            round(p.energy_j, 9))
+
+
+@pytest.mark.parametrize("k", [2, 3, 4])
+def test_dp_3obj_matches_brute_force(k):
+    """dp_front_kway with 3 objectives returns the exact (latency,
+    throughput, energy) Pareto front — cross-validated against
+    sweep_kway + d=3 pareto_front on brute-force-checkable graphs."""
+    rnd = random.Random(100 + k)
+    for _ in range(8):
+        g, devs, links = _rand_case(rnd, k)
+        ex = pareto_front(sweep_kway(g, devs, links, batch=4), OBJ3)
+        dp = dp_front_kway(g, devs, links, batch=4, objectives=OBJ3)
+        assert sorted(map(_key3, ex)) == sorted(map(_key3, dp))
+
+
+def test_dp_legacy_2obj_unchanged():
+    rnd = random.Random(7)
+    for _ in range(8):
+        g, devs, links = _rand_case(rnd, 3)
+        ex = pareto_front(sweep_kway(g, devs, links, batch=4))
+        dp = dp_front_kway(g, devs, links, batch=4)
+        key = lambda p: (round(p.latency_s, 10), round(p.throughput, 6))
+        assert sorted(map(key, ex)) == sorted(map(key, dp))
+
+
+def test_dp_single_objective_and_unknown_rejected():
+    rnd = random.Random(11)
+    g, devs, links = _rand_case(rnd, 3)
+    lat_only = dp_front_kway(g, devs, links, batch=4,
+                             objectives=("latency",))
+    assert len(lat_only) == 1
+    all_pts = sweep_kway(g, devs, links, batch=4)
+    assert lat_only[0].latency_s == pytest.approx(
+        min(p.latency_s for p in all_pts))
+    with pytest.raises(ValueError, match="unknown objective"):
+        dp_front_kway(g, devs, links, objectives=("energy", "net_s"))
+    # a registered-looking custom objective the DP has no monotone label for
+    with pytest.raises(ValueError, match="cannot track"):
+        dp_front_kway(g, devs, links,
+                      objectives=(Objective("net", "min", "net_s"),))
+
+
+def test_solve_passes_objectives_to_dp():
+    # force the DP path with max_enum=0 and check the 3-D front arrives
+    rnd = random.Random(13)
+    g, devs, links = _rand_case(rnd, 3)
+    scen = Scenario("t", devs, links)
+    dp = solve(g, scen, batch=4, max_enum=0, objectives=OBJ3)
+    ex = pareto_front(sweep_kway(g, devs, links, batch=4), OBJ3)
+    assert sorted(map(_key3, dp)) == sorted(map(_key3, ex))
+
+
+# --------------------------------------------------------------------------- #
+# Energy-aware adaptive layer
+# --------------------------------------------------------------------------- #
+def test_best_energy_and_energy_policy():
+    from repro.models.cnn import zoo
+    g = zoo.get("mobilenetv2").block_graph()
+    scen = scenarios.get("pi_only3")
+    pts = solve(g, scen, batch=8)
+    be = best_energy(pts)
+    assert be.energy_j == pytest.approx(min(p.energy_j for p in pts))
+    sp = AdaptiveSplitter(g, scen, batch=8, policy="energy")
+    assert sp.solve().partition == be.partition
+
+
+def test_splitter_requests_energy_axis_when_energy_drives_pick(monkeypatch):
+    """On the DP path a 2-objective front prunes energy-optimal splits
+    before the policy sees them — the splitter must ask for the energy
+    axis whenever policy or budget involves energy."""
+    import repro.core.autosplit as A
+    from repro.models.cnn import zoo
+    g = zoo.get("mobilenetv2").block_graph()
+    scen = scenarios.get("pi_only3")
+    seen = []
+    real_solve = A.solve
+    monkeypatch.setattr(
+        A, "solve",
+        lambda *a, **kw: seen.append(kw.get("objectives")) or
+        real_solve(*a, **kw))
+    AdaptiveSplitter(g, scen, batch=8, policy="energy").solve()
+    AdaptiveSplitter(g, scen, batch=8, policy="throughput",
+                     energy_budget_j=10.0).solve()
+    AdaptiveSplitter(g, scen, batch=8, policy="throughput").solve()
+    assert seen == [("latency", "throughput", "energy"),
+                    ("latency", "throughput", "energy"), None]
+
+
+def test_energy_budget_constrains_pick():
+    from repro.models.cnn import zoo
+    g = zoo.get("mobilenetv2").block_graph()
+    scen = scenarios.get("pi_only3")
+    pts = solve(g, scen, batch=8)
+    unconstrained = AdaptiveSplitter(g, scen, batch=8,
+                                     policy="throughput").solve()
+    # budget below the throughput pick's joules forces a cheaper split
+    budget = unconstrained.energy_j - 1e-3
+    sp = AdaptiveSplitter(g, scen, batch=8, policy="throughput",
+                          energy_budget_j=budget)
+    pick = sp.solve()
+    assert pick.energy_j <= budget
+    assert pick.throughput <= unconstrained.throughput
+    # impossible budget: degrade to the least-energy split, not crash
+    sp0 = AdaptiveSplitter(g, scen, batch=8, policy="throughput",
+                           energy_budget_j=0.0)
+    assert sp0.solve().partition == best_energy(pts).partition

@@ -163,6 +163,9 @@ def test_three_stage_registry_scenario_end_to_end(mobilenet):
     assert res.partition == (5, 12)
     assert len(res.stage_exe_s) == 3 and len(res.hop_net_s) == 2
     assert res.throughput > 0
+    # modeled-from-measured energy: scenario devices carry power specs
+    assert res.energy_j > 0 and len(res.stage_energy_j) == 3
+    assert res.energy_j == pytest.approx(sum(res.stage_energy_j))
 
 
 def test_four_stage_and_mixed_backends(mobilenet):
@@ -253,6 +256,33 @@ def test_per_hop_observations_recorded(mobilenet):
         nbytes, dt, t = obs[0]
         assert nbytes > 0 and dt > 0 and t >= 0
         assert net.drain_observations() == []        # drained
+        # radio accounting survives the drain (lifetime counters)
+        assert net.total_bytes == nbytes
+        assert net.total_energy_j == pytest.approx(
+            nbytes * net.link.energy_per_byte_j)
+
+
+def test_bare_link_pipeline_reports_zero_energy(mobilenet):
+    """No Scenario = no device power profile: energy must be 0, not junk."""
+    m, params = mobilenet
+    x = _x()
+    pipe = EdgePipeline(m, params, p=5, link=Link("l", 1e-5, 1e12))
+    res = pipe.measure(lambda: x, n_batches=2)
+    assert res.energy_j == 0.0 and res.stage_energy_j == ()
+
+
+def test_adaptive_records_carry_energy(mobilenet):
+    m, params = mobilenet
+    x = _x()
+    rt = AdaptiveRuntime(m, params, scenarios.get("pi_pi_gpu"),
+                         graph=m.block_graph(input_hw=32),
+                         batch=x.shape[0], check_every=2,
+                         energy_budget_j=1e6)
+    recs = rt.run(lambda: x, n_batches=3)
+    for r in recs:
+        assert r.energy_j > 0              # measured-exe modeled joules
+        assert r.predicted_energy_j > 0    # the splitter's model view
+    assert rt.splitter.energy_budget_j == 1e6
 
 
 # --------------------------------------------------------------------------- #
@@ -391,3 +421,4 @@ def test_evaluate_pipeline_three_stage_consistency():
     assert pm.latency_s == pytest.approx(
         sum(s.compute_s + s.send_s for s in pm.stages))
     assert pm.throughput == pytest.approx(2 / pm.bottleneck_s)
+    assert pm.energy_j == pytest.approx(sum(s.energy_j for s in pm.stages))

@@ -28,6 +28,16 @@ if jax.device_count() == 1:
                             capture_output=True, text=True, timeout=900)
         assert cp.returncode == 0, cp.stdout + "\n" + cp.stderr
 
+    # partial-manual shard_map (manual over 'pod', auto elsewhere) only
+    # lowers on jax >= 0.6; jax 0.4's SPMD partitioner rejects the
+    # axis_index → PartitionId op inside an auto-axes shard_map
+    _needs_new_shard_map = pytest.mark.xfail(
+        not hasattr(jax, "shard_map"),
+        reason="partial-manual shard_map (axis_names=) requires jax>=0.6; "
+               "this jax lowers axis_index to an unpartitionable PartitionId",
+        strict=False)
+
+    @_needs_new_shard_map
     def test_pipeline_train_matches_plain():
         _run_sub("""
 import jax, jax.numpy as jnp
@@ -59,6 +69,7 @@ for name in ["qwen3-1.7b", "zamba2-7b", "qwen3-moe-30b-a3b", "whisper-small", "f
 print("OK")
 """)
 
+    @_needs_new_shard_map
     def test_pipeline_uneven_cuts_and_serving():
         _run_sub("""
 import jax, jax.numpy as jnp

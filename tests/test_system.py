@@ -77,6 +77,11 @@ def test_serve_cli():
     assert "decode:" in cp.stdout
 
 
+@pytest.mark.xfail(
+    not hasattr(jax, "shard_map"),
+    reason="partial-manual shard_map (axis_names=) requires jax>=0.6; "
+           "this jax lowers axis_index to an unpartitionable PartitionId",
+    strict=False)
 def test_train_pipeline_cli_with_auto_partition():
     """Multi-pod GPipe on forced host devices + ParetoPipe-chosen cuts."""
     cp = _run(["repro.launch.train", "--arch", "qwen3-1.7b", "--reduced",
