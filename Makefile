@@ -1,21 +1,24 @@
 # Developer loop for the ParetoPipe reproduction.
 #
-#   make fast        — the development tier: fast tests + the <30 s
-#                      3-objective bench smoke (BENCH_pareto.json)
-#   make test-fast   — fast tests only: everything except the
-#                      multi-minute train/system drills (marker: slow)
-#   make test        — tier-1 verify, the full suite (what CI runs)
-#   make bench-quick — analytic benchmarks only (no wall-clock measuring)
-#   make bench-smoke — 3-objective solver bench on a tiny graph (<30 s)
-#   make demo        — k-stage adaptive loop demo under a WAN ramp
+#   make fast            — the development tier: fast tests + the <30 s
+#                          3-objective bench smoke (BENCH_pareto.json) +
+#                          the <30 s transport smoke (BENCH_transport.json)
+#   make test-fast       — fast tests only: everything except the
+#                          multi-minute train/system drills (marker: slow)
+#   make test            — tier-1 verify, the full suite (what CI runs)
+#   make bench-quick     — analytic benchmarks only (no wall-clock measuring)
+#   make bench-smoke     — 3-objective solver bench on a tiny graph (<30 s)
+#   make bench-transport — per-hop overhead, emulated vs real socket/shmem
+#                          processes on loopback (<30 s smoke tier)
+#   make demo            — k-stage adaptive loop demo under a WAN ramp
 
 PY      ?= python
 PYTEST  ?= $(PY) -m pytest
 ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: fast test test-fast bench bench-quick bench-smoke demo
+.PHONY: fast test test-fast bench bench-quick bench-smoke bench-transport demo
 
-fast: test-fast bench-smoke
+fast: test-fast bench-smoke bench-transport
 
 test:
 	$(ENV) $(PYTEST) -x -q
@@ -31,6 +34,9 @@ bench-quick:
 
 bench-smoke:
 	$(ENV) $(PY) -m benchmarks.energy_front --smoke
+
+bench-transport:
+	$(ENV) $(PY) -m benchmarks.transport_bench --smoke
 
 demo:
 	$(ENV) $(PY) examples/kway_adaptive.py

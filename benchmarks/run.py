@@ -21,6 +21,7 @@ def main() -> None:
     from . import kway_runtime as K
     from . import paper_tables as P
     from . import tpu_pod_pareto as T
+    from . import transport_bench as TR
 
     benches = {
         "table1": P.table1_models,
@@ -35,8 +36,10 @@ def main() -> None:
         "kway_adaptive": K.kway_adaptive,
         "energy_front": E.energy_front,
         "pareto_bench": E.pareto_bench,
+        "transport_overhead": TR.transport_overhead,
     }
-    measured = {"fig2", "fig7", "kway_front", "kway_adaptive"}
+    measured = {"fig2", "fig7", "kway_front", "kway_adaptive",
+                "transport_overhead"}
     rows: list[str] = []
     for name, fn in benches.items():
         if args.only and args.only not in name:

@@ -1,0 +1,136 @@
+"""Transport-overhead comparison: modeled vs. measured hops.
+
+For the same tiny model + cut, runs a 2-stage pipeline over every
+transport × framing combination and reports the per-hop transfer cost:
+
+  * ``emulated``   — the modeled loopback (Link math injected as sleep),
+  * ``socket``     — real TCP between worker processes on loopback,
+  * ``shmem``      — the shared-memory ring between processes,
+
+each under the ``lightweight`` (header + raw tensor bytes) and ``rpc``
+(full pickle round trip per hop + per-block dispatch) framings — the
+paper's backend study, now with *measured* numbers for the real
+channels.  Results go to ``BENCH_transport.json`` plus the harness CSV.
+
+    PYTHONPATH=src python -m benchmarks.transport_bench [--smoke]
+
+``--smoke`` shrinks the batch count (< 30 s, the Makefile
+``bench-transport`` target) and still writes BENCH_transport.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .common import emit
+
+BENCH_JSON = Path("BENCH_transport.json")
+
+COMBOS = [("emulated", "lightweight"), ("emulated", "rpc"),
+          ("socket", "lightweight"), ("socket", "rpc"),
+          ("shmem", "lightweight"), ("shmem", "rpc")]
+
+
+def _one_combo(model, params, x, transport: str, backend: str,
+               n_batches: int) -> dict:
+    from repro.core.devices import LOOPBACK
+    from repro.runtime.edge import EdgePipeline
+
+    with EdgePipeline(model, params, 2, [LOOPBACK], backend=backend,
+                      transport=transport) as pipe:
+        pipe.warmup(x)
+        pipe.run_one(x)                       # settle caches / first-touch
+        pipe.nets[0].drain_observations()
+        lats = []
+        for _ in range(n_batches):
+            _, lat, _ = pipe.run_one(x)
+            lats.append(lat)
+        recs = [r for r in pipe.nets[0].drain_observations() if r.nbytes > 0]
+        return {
+            "transport": transport,
+            "backend": backend,
+            "measured": transport != "emulated",
+            # medians: lone-batch transfers on a small shared host are
+            # heavy-tailed (scheduler preemption), and the tail is not
+            # what the framing comparison is about
+            "hop_us": float(np.median([r.elapsed_s for r in recs]) * 1e6),
+            "hop_us_min": float(min(r.elapsed_s for r in recs) * 1e6),
+            "nbytes": int(recs[0].nbytes),
+            "latency_ms": float(np.median(lats) * 1e3),
+        }
+
+
+def _tiny_model():
+    """A 5-block CNN that jit-compiles in a blink — the hop cost is the
+    thing under test, not the compute."""
+    from repro.models.cnn.layers import (Conv2D, Flatten, Linear, Pool,
+                                         ReLU, Sequential)
+    from repro.models.cnn.zoo import CNNModel
+    blocks = [
+        ("conv0", Sequential([Conv2D(3, 8, 3, 1, 1), ReLU()])),
+        ("conv1", Sequential([Conv2D(8, 8, 3, 1, 1), ReLU()])),
+        ("pool", Pool("max", 2, 2)),
+        ("conv2", Sequential([Conv2D(8, 16, 3, 1, 1), ReLU()])),
+        ("head", Sequential([Flatten(), Linear(16 * 16 * 16, 10)])),
+    ]
+    return CNNModel("tinycnn", blocks, input_hw=32)
+
+
+def transport_overhead(smoke: bool = False,
+                       out_path: Path = BENCH_JSON) -> list[str]:
+    """Per-hop µs across transports × framings → BENCH_transport.json."""
+    import jax
+
+    model = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    n_batches = 4 if smoke else 15
+
+    combos = COMBOS
+    if smoke:
+        # each process pipeline costs seconds of spawn+jit on a small
+        # host; the smoke tier proves every transport end-to-end and
+        # leaves the rpc framing column to the full run
+        combos = [c for c in COMBOS if c[1] == "lightweight"]
+        print("[smoke: lightweight framing only — run without --smoke "
+              "for the full transport x framing matrix]")
+    rows: list[str] = []
+    results = {"model": model.name, "input_hw": 32, "batch": 2,
+               "cut": 2, "n_batches": n_batches, "combos": {}}
+    print("== transport overhead (per-hop, one activation transfer) ==")
+    for transport, backend in combos:
+        r = _one_combo(model, params, x, transport, backend, n_batches)
+        results["combos"][f"{transport}/{backend}"] = r
+        tag = "measured" if r["measured"] else "modeled "
+        print(f"  {transport:>8}/{backend:<11} [{tag}] "
+              f"hop={r['hop_us']:9.1f}us  ({r['nbytes']} B)  "
+              f"latency={r['latency_ms']:7.2f}ms")
+        rows.append(f"transport/{transport}_{backend},{r['hop_us']:.3f},"
+                    f"lat_ms={r['latency_ms']:.3f}")
+    if "socket/rpc" in results["combos"]:
+        lw = results["combos"]["socket/lightweight"]["hop_us"]
+        rpc = results["combos"]["socket/rpc"]["hop_us"]
+        print(f"  -> measured socket framing cost: rpc/lightweight = "
+              f"{rpc / max(lw, 1e-9):.2f}x")
+    out_path.write_text(json.dumps(results, indent=1))
+    print(f"[wrote {out_path}]")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run (< 30 s) that still writes "
+                         "BENCH_transport.json")
+    args = ap.parse_args()
+    rows = transport_overhead(smoke=args.smoke)
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

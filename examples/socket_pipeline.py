@@ -1,0 +1,75 @@
+"""Real worker processes + measured hops, end to end.
+
+Deploys MobileNetV2 across 3 OS processes connected by real loopback TCP
+(the ``socket`` transport), measures per-hop transfer cost from the
+wire's own ``TransferRecord``s, live-migrates the cut vector inside the
+running processes, lets the closed adaptive loop re-solve from the
+*measured* (not modeled) hop costs, and finally converts the measured
+records into a replayable ``LinkTrace`` that seeds the emulator.
+
+    PYTHONPATH=src python examples/socket_pipeline.py
+
+(The ``if __name__ == "__main__"`` guard matters: worker hosts are
+spawned processes.)
+"""
+import jax
+import numpy as np
+
+
+def main():
+    from repro.core import scenarios
+    from repro.core.devices import DURESS
+    from repro.models.cnn import zoo
+    from repro.runtime import AdaptiveRuntime, EdgePipeline, record_trace
+
+    m = zoo.get("mobilenetv2")
+    params = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+
+    # --- a 3-stage pipeline across real processes ---------------------- #
+    scen = scenarios.get("pi_pi_gpu")
+    with EdgePipeline(m, params, (5, 12), scen, transport="socket") as pipe:
+        pipe.warmup(x)
+        out, latency, hop_s = pipe.run_one(x)
+        ref = np.asarray(m.apply(params, x))
+        print(f"3 worker processes over loopback TCP: "
+              f"latency {latency * 1e3:.1f} ms, per-hop "
+              f"{[f'{h * 1e6:.0f}us' for h in hop_s]}, "
+              f"output matches: {np.allclose(ref, out, atol=1e-5)}")
+
+        pipe.migrate((3, 17))
+        pipe.warmup(x)           # jit the new block ranges off the clock
+        out, latency, _ = pipe.run_one(x)
+        print(f"live-migrated to cuts {pipe.cuts} inside the running "
+              f"processes: latency {latency * 1e3:.1f} ms, "
+              f"still correct: {np.allclose(ref, out, atol=1e-5)}\n")
+
+        # measured records -> a replayable trace for the emulator
+        pipe.probe()
+        trace = record_trace(pipe.nets[0], name="loopback_recorded",
+                             bucket_s=60.0)
+    snap = trace.at(0.0)
+    print(f"recorded hop 0 as a LinkTrace: rtt={snap.rtt_s * 1e6:.0f}us "
+          f"bw={snap.bw_bytes_per_s / 1e6:.0f} MB/s "
+          f"(replay with scenario.with_link(0, trace))\n")
+
+    # --- the adaptive loop closing over measured costs ------------------ #
+    # plan pessimistically (duress everywhere); the measured wire is a
+    # loopback socket, so the loop should discover that and migrate
+    duress = (scen.with_link(0, DURESS).with_link(1, DURESS)
+              .with_transport("socket"))
+    with AdaptiveRuntime(m, params, duress,
+                         graph=m.block_graph(input_hw=32), batch=2,
+                         policy="throughput", check_every=2,
+                         migration_cost_s=0.02, alpha=0.8) as rt:
+        rt.run(lambda: x, n_batches=10)
+        est = rt.estimators[0]
+        print(f"planned under duress (200 ms RTT), measured loopback: "
+              f"rtt -> {est.rtt_s * 1e3:.1f} ms, "
+              f"bw -> {est.bw_bytes_per_s / 1e6:.0f} MB/s")
+        print(f"cut history: {' -> '.join(map(str, rt.cut_history))} "
+              f"({len(rt.pipe.migrations)} migration(s) on live processes)")
+
+
+if __name__ == "__main__":
+    main()

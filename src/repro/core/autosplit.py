@@ -28,7 +28,8 @@ from typing import Literal, Sequence
 
 from .blocks import BlockGraph
 from .costmodel import CostTable, PipelineMetrics, evaluate_pipeline
-from .devices import Link, LinkTrace, link_at
+from .devices import (Link, LinkTrace, attribute_bandwidth, fit_link_params,
+                      link_at)
 from .pareto import knee_point
 from .partitioner import best_energy, best_latency, best_throughput, solve
 from .scenarios import Scenario
@@ -38,31 +39,68 @@ Policy = Literal["latency", "throughput", "energy", "knee"]
 
 @dataclass
 class LinkEstimator:
-    """EWMA link-condition estimator fed by observed transfers."""
+    """Link-condition estimator fed by observed transfers.
+
+    The link model is ``elapsed = rtt/2 + overhead + nbytes/bw``.  RTT
+    comes from header-only probes (EWMA — probes measure it directly).
+    For data transfers the estimator accumulates ``(nbytes, elapsed)``
+    pairs in a sliding window and, once the window spans more than one
+    message size, fits (overhead, bw) **jointly** by least squares:
+    slope → 1/bw, intercept − rtt/2 → per-message overhead.  This fixes
+    the classic EWMA failure mode where the fixed per-message cost of
+    tiny transfers is mis-attributed to bandwidth.  Until the window is
+    informative (too few samples, or all one size) it falls back to the
+    bounded per-sample EWMA attribution.
+    """
 
     rtt_s: float
     bw_bytes_per_s: float
     alpha: float = 0.3
+    per_msg_overhead_s: float = 0.0
+    window: int = 64                  # (nbytes, elapsed) pairs kept for the fit
+    min_fit_samples: int = 4
+    _nbytes: list = field(default_factory=list, repr=False)
+    _elapsed: list = field(default_factory=list, repr=False)
 
     @classmethod
     def from_link(cls, link, alpha: float = 0.3) -> "LinkEstimator":
         """Seed the estimator with a link's nominal (t=0) conditions."""
         l = link_at(link, 0.0)
-        return cls(rtt_s=l.rtt_s, bw_bytes_per_s=l.bw_bytes_per_s, alpha=alpha)
+        return cls(rtt_s=l.rtt_s, bw_bytes_per_s=l.bw_bytes_per_s, alpha=alpha,
+                   per_msg_overhead_s=l.per_msg_overhead_s)
 
     def observe(self, nbytes: float, elapsed_s: float, is_rtt_probe: bool = False):
-        if is_rtt_probe:
+        if is_rtt_probe or nbytes <= 0:
             self.rtt_s = (1 - self.alpha) * self.rtt_s + self.alpha * elapsed_s
             return
-        # attribute elapsed = rtt/2 + bytes/bw; floor the serviceable time
-        # at a fraction of elapsed so a jittery small transfer arriving
-        # "before" the estimated RTT cannot imply near-infinite bandwidth
-        serv = max(elapsed_s - self.rtt_s / 2.0, 0.05 * elapsed_s, 1e-9)
-        bw = nbytes / serv
+        self._nbytes.append(float(nbytes))
+        self._elapsed.append(float(elapsed_s))
+        if len(self._nbytes) > self.window:
+            del self._nbytes[0], self._elapsed[0]
+        if len(self._nbytes) >= self.min_fit_samples and self._fit():
+            return
+        # fallback: per-sample attribution of elapsed = rtt/2 + overhead
+        # + bytes/bw (bounded, see devices.attribute_bandwidth)
+        bw = attribute_bandwidth(nbytes, elapsed_s, self.rtt_s,
+                                 self.per_msg_overhead_s)
         self.bw_bytes_per_s = (1 - self.alpha) * self.bw_bytes_per_s + self.alpha * bw
 
+    def _fit(self) -> bool:
+        """Joint least-squares of (overhead, bw) over the window; False
+        when the window is degenerate (single message size / bad slope)."""
+        fit = fit_link_params(self._nbytes, self._elapsed, self.rtt_s)
+        if fit is None:
+            return False                       # keep the EWMA fallback
+        bw, overhead = fit
+        self.bw_bytes_per_s = ((1 - self.alpha) * self.bw_bytes_per_s
+                               + self.alpha * bw)
+        self.per_msg_overhead_s = ((1 - self.alpha) * self.per_msg_overhead_s
+                                   + self.alpha * overhead)
+        return True
+
     def as_link(self, name: str = "estimated") -> Link:
-        return Link(name, rtt_s=self.rtt_s, bw_bytes_per_s=self.bw_bytes_per_s)
+        return Link(name, rtt_s=self.rtt_s, bw_bytes_per_s=self.bw_bytes_per_s,
+                    per_msg_overhead_s=self.per_msg_overhead_s)
 
 
 @dataclass

@@ -155,6 +155,40 @@ def link_at(link: AnyLink, t: float = 0.0) -> Link:
     return link.at(t) if isinstance(link, LinkTrace) else link
 
 
+# --------------------------------------------------------------------------- #
+# Fitting the link model to observed transfers.  One home for the
+# ``elapsed = rtt/2 + overhead + nbytes/bw`` inversion, shared by the
+# runtime estimator (core.autosplit.LinkEstimator) and the trace
+# recorder (runtime.transport.record_trace).
+# --------------------------------------------------------------------------- #
+def fit_link_params(nbytes_list, elapsed_list,
+                    rtt_s: float) -> tuple[float, float] | None:
+    """Joint least-squares of (bw, overhead) from (nbytes, elapsed)
+    pairs: slope → 1/bw, intercept − rtt/2 → per-message overhead.
+    Returns None when the sample is degenerate (a single message size
+    makes the slope unidentifiable; a non-positive slope means noise
+    dominates) — callers fall back to ``attribute_bandwidth``."""
+    import numpy as np
+    xs = np.asarray(nbytes_list, dtype=float)
+    ys = np.asarray(elapsed_list, dtype=float)
+    if xs.max() - xs.min() < 1e-9 * max(xs.max(), 1.0):
+        return None
+    slope, intercept = np.polyfit(xs, ys, 1)
+    if slope <= 0.0:
+        return None
+    return 1.0 / float(slope), max(float(intercept) - rtt_s / 2.0, 0.0)
+
+
+def attribute_bandwidth(nbytes: float, elapsed_s: float, rtt_s: float,
+                        overhead_s: float = 0.0) -> float:
+    """Single-transfer bandwidth attribution: serviceable time is
+    elapsed minus the fixed costs, floored at a fraction of elapsed so
+    a jittery small transfer arriving "before" the estimated RTT cannot
+    imply near-infinite bandwidth."""
+    serv = max(elapsed_s - rtt_s / 2.0 - overhead_s, 0.05 * elapsed_s, 1e-9)
+    return nbytes / serv
+
+
 def ramp_trace(name: str, start: Link, end: Link, t_start: float,
                t_end: float, jitter: float = 0.0) -> LinkTrace:
     """A trace that holds ``start`` until ``t_start``, degrades (or
@@ -221,6 +255,17 @@ RTX_4090 = DeviceProfile(
     stage_overhead_s=5e-3, idle_w=22.0, active_w=320.0,
 )
 
+# This host, as one pipeline "device" per worker *process* — the analytic
+# stand-in the partitioner plans with when the runtime deploys real local
+# processes (scenarios.local_chain); the measured transports then replace
+# the link model with observed transfer costs.  Effective rate is the
+# same order as the Pi calibration (shared cores, CPU jax); power is the
+# package figure of a small desktop CPU.
+HOST_CPU = DeviceProfile(
+    name="host_cpu", flops_per_s=20e9, mem_bytes=8 * GiB, mem_bw=10e9,
+    stage_overhead_s=1e-3, idle_w=10.0, active_w=45.0,
+)
+
 # One TPU v5e chip (peak specs; roofline constants of the assignment).
 TPU_V5E_CHIP = DeviceProfile(
     name="tpu_v5e", flops_per_s=197e12, mem_bytes=16 * GiB, mem_bw=819e9,
@@ -256,6 +301,12 @@ LAN_PI_PI = Link("lan_pi_pi", rtt_s=0.201e-3, bw_bytes_per_s=1 * Gbit,
                  per_msg_overhead_s=0.5e-3, energy_per_byte_j=12e-9)
 LAN_PI_GPU = Link("lan_pi_gpu", rtt_s=0.383e-3, bw_bytes_per_s=1 * Gbit,
                   per_msg_overhead_s=0.5e-3, energy_per_byte_j=12e-9)
+# Loopback TCP between processes on one host — the analytic stand-in for
+# the *measured* socket/shmem transports (typical: tens of µs RTT, a few
+# GB/s effective with serialization; no radio).  Planning numbers only —
+# the real transports record what the wire actually did.
+LOOPBACK = Link("loopback", rtt_s=60e-6, bw_bytes_per_s=2e9,
+                per_msg_overhead_s=30e-6, energy_per_byte_j=0.0)
 # Paper Sec. V-B: tc netem 200 ms RTT + 5 Mbit/s.
 DURESS = Link("duress", rtt_s=200e-3, bw_bytes_per_s=5 * Mbit,
               per_msg_overhead_s=0.5e-3, energy_per_byte_j=1e-6)

@@ -28,10 +28,17 @@ class Scenario:
     name: str
     devices: tuple[D.DeviceProfile, ...]
     links: tuple[D.AnyLink, ...]
+    # per-hop transport names (see runtime.transport.TRANSPORTS): None
+    # defers to the pipeline default ("emulated"); "socket"/"shmem" make
+    # the hop a *measured* real channel between worker processes
+    transports: tuple[str, ...] | None = None
 
     def __post_init__(self):
         if len(self.links) != len(self.devices) - 1:
             raise ValueError("need len(devices)-1 links")
+        if self.transports is not None and \
+                len(self.transports) != len(self.links):
+            raise ValueError("need one transport per link")
 
     @property
     def n_stages(self) -> int:
@@ -50,14 +57,26 @@ class Scenario:
     def with_link(self, i: int, link: D.AnyLink, name: str | None = None) -> "Scenario":
         links = list(self.links)
         links[i] = link
-        return Scenario(name or f"{self.name}+{link.name}", self.devices, tuple(links))
+        return Scenario(name or f"{self.name}+{link.name}", self.devices,
+                        tuple(links), self.transports)
+
+    def with_transport(self, transport: "str | tuple[str, ...]",
+                       name: str | None = None) -> "Scenario":
+        """Scenario with every hop (or a per-hop tuple) on ``transport``."""
+        if isinstance(transport, str):
+            transports = (transport,) * len(self.links)
+        else:
+            transports = tuple(transport)
+        return Scenario(name or self.name, self.devices, self.links,
+                        transports)
 
     def at(self, t: float = 0.0) -> "Scenario":
         """Static snapshot: every LinkTrace resolved to its link at ``t``."""
         if not self.time_varying:
             return self
         return Scenario(self.name, self.devices,
-                        tuple(D.link_at(l, t) for l in self.links))
+                        tuple(D.link_at(l, t) for l in self.links),
+                        self.transports)
 
 
 # --- the paper's testbed ---------------------------------------------------- #
@@ -112,6 +131,20 @@ def wan_ramp(base: Scenario, hop: int = 0, t_start: float = 2.0,
     return base.with_link(hop, trace, name=f"{base.name}_wan_ramp")
 
 
+# --- the real local testbed (measured transports) ---------------------------- #
+def local_chain(k: int = 3, transport: str = "socket") -> Scenario:
+    """k worker *processes* on this host, every hop a real measured
+    channel (loopback TCP by default, ``transport="shmem"`` for the
+    shared-memory ring).  The LOOPBACK link is only the analytic
+    stand-in the partitioner plans with — the pipeline measures the
+    actual wire."""
+    if k < 2:
+        raise ValueError("need k >= 2 stages")
+    return Scenario(f"local{k}_{transport}", (D.HOST_CPU,) * k,
+                    (D.LOOPBACK,) * (k - 1),
+                    transports=(transport,) * (k - 1))
+
+
 # --- TPU-scale analogues ----------------------------------------------------- #
 def pods(n_pods: int = 2, chips_per_pod: int = 256,
          link: D.Link = D.DCN) -> Scenario:
@@ -145,6 +178,10 @@ REGISTRY = {
     "pi_to_gpu_duress": lambda: duress(pi_to_gpu()),
     "pi_to_gpu_wan_ramp": lambda: wan_ramp(pi_to_gpu()),
     "pi_pi_gpu_wan_ramp": lambda: wan_ramp(pi_pi_gpu()),
+    "local3_socket": lambda: local_chain(3, "socket"),
+    "local3_shmem": lambda: local_chain(3, "shmem"),
+    "pi_pi_gpu_socket": lambda: pi_pi_gpu().with_transport(
+        "socket", name="pi_pi_gpu_socket"),
     "pods2": lambda: pods(2),
     "pods2_congested": lambda: pods_congested(2),
     "pods4": lambda: pods(4),

@@ -1,0 +1,25 @@
+"""Executable runtime: the measured half of the reproduction.
+
+Public API:
+    EdgePipeline, PipelineResult      — k-stage executable pipeline over
+                                        pluggable hop transports
+    AdaptiveRuntime, LoopRecord       — closed measure→estimate→re-solve→
+                                        migrate loop
+    Transport, Channel, TransferRecord,
+    register_transport, get_transport — the hop transport API
+                                        ("emulated" | "socket" | "shmem")
+    record_trace                      — measured records → replayable
+                                        LinkTrace (seed the emulator)
+"""
+from .adaptive import AdaptiveRuntime, LoopRecord
+from .edge import EdgePipeline, PipelineResult, StageStats, Worker
+from .transport import (Channel, HopSpec, TransferRecord, Transport,
+                        TransportError, TransportTimeout, get_transport,
+                        record_trace, register_transport)
+
+__all__ = [
+    "AdaptiveRuntime", "LoopRecord",
+    "EdgePipeline", "PipelineResult", "StageStats", "Worker",
+    "Channel", "HopSpec", "TransferRecord", "Transport", "TransportError",
+    "TransportTimeout", "get_transport", "record_trace", "register_transport",
+]

@@ -4,9 +4,13 @@ This wires the three halves of the system together into the loop the
 paper leaves as future work:
 
   1. the executable k-stage pipeline (``runtime.edge.EdgePipeline``)
-     records what every emulated hop *actually* did per transfer,
-  2. those observations feed one ``LinkEstimator`` per hop (EWMA RTT /
-     bandwidth — what a real runtime can see),
+     records what every hop *actually* did per transfer — the modeled
+     delay under the ``emulated`` transport, or the **measured**
+     wall-clock cost when the hops are real sockets / shared memory
+     between worker processes (``transport="socket"``/``"shmem"``),
+  2. those observations feed one ``LinkEstimator`` per hop (RTT /
+     per-message overhead / bandwidth fitted from observed (nbytes,
+     elapsed) pairs — what a real runtime can see),
   3. ``AdaptiveSplitter`` re-solves the whole chain with the estimated
      links (``partitioner.solve``: 2-way sweep, k-way enumeration, or
      Pareto DP as the problem size demands) and, when the predicted gain
@@ -61,6 +65,7 @@ class AdaptiveRuntime:
                  graph: BlockGraph | None = None, batch: int | None = None,
                  policy: Policy = "throughput",
                  backend: Backend | Sequence[Backend] = "lightweight",
+                 transport: str | Sequence[str] | None = None,
                  costs: CostTable | None = None, hysteresis: float = 0.10,
                  migration_cost_s: float = 0.25, check_every: int = 4,
                  alpha: float = 0.5, queue_depth: int = 2, seed: int = 0,
@@ -70,7 +75,8 @@ class AdaptiveRuntime:
         self._deploy_opts = dict(batch=batch, policy=policy, costs=costs,
                                  hysteresis=hysteresis,
                                  migration_cost_s=migration_cost_s,
-                                 backend=backend, queue_depth=queue_depth,
+                                 backend=backend, transport=transport,
+                                 queue_depth=queue_depth,
                                  alpha=alpha, seed=seed,
                                  energy_budget_j=energy_budget_j)
         self.check_every = check_every
@@ -102,6 +108,7 @@ class AdaptiveRuntime:
         self.splitter.history.append((init.partition, True))
         self.pipe = EdgePipeline(self._model, self._params, init.partition,
                                  self.scenario, backend=o["backend"],
+                                 transport=o["transport"],
                                  queue_depth=o["queue_depth"], seed=o["seed"])
         self.estimators = [LinkEstimator.from_link(l, alpha=o["alpha"])
                            for l in self.scenario.links]
@@ -119,12 +126,12 @@ class AdaptiveRuntime:
 
     def probe_rtt(self) -> None:
         """Send a header-only message down every hop — the emulated wire
-        charges RTT/2, giving the estimators a compute-free RTT sample."""
+        charges RTT/2, a real socket/shmem hop measures it — giving the
+        estimators a compute-free RTT sample."""
         if self.pipe is None:
             raise RuntimeError("pipeline not deployed yet — call run() "
                                "(or pass graph= and batch=) first")
-        for net in self.pipe.nets:
-            net.send(0)
+        self.pipe.probe()
 
     # ------------------------------------------------------------------ #
     def run(self, make_batch: Callable[[], object], n_batches: int,
@@ -149,11 +156,11 @@ class AdaptiveRuntime:
         prev = len(self.records)
         for b in range(prev, prev + n_batches):
             active_cuts = self.pipe.cuts
-            exe0 = [w.stats.exe_s for w in self.pipe.workers]
+            exe0 = [s.exe_s for s in self.pipe.stage_stats()]
             bytes0 = [net.total_bytes for net in self.pipe.nets]
             _, lat, _hops = self.pipe.run_one(x)
-            exe_d = [w.stats.exe_s - e0
-                     for w, e0 in zip(self.pipe.workers, exe0)]
+            exe_d = [s.exe_s - e0
+                     for s, e0 in zip(self.pipe.stage_stats(), exe0)]
             bytes_d = [net.total_bytes - b0
                        for net, b0 in zip(self.pipe.nets, bytes0)]
             energy, _ = self.pipe.stage_energy_model(exe_d, _hops, bytes_d)
@@ -179,6 +186,19 @@ class AdaptiveRuntime:
                 predicted_throughput=pred.throughput,
                 energy_j=energy, predicted_energy_j=pred.energy_j))
         return self.records[prev:]
+
+    # ------------------------------------------------------------------ #
+    def close(self) -> None:
+        """Tear down the pipeline (worker processes, channels); no-op
+        for thread-backed pipelines or before the first deploy."""
+        if self.pipe is not None:
+            self.pipe.close()
+
+    def __enter__(self) -> "AdaptiveRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------------ #
     @property

@@ -2,39 +2,42 @@
 (paper Fig. 1 / Alg. 1, generalized past the paper's 2-device testbed).
 
 This is the *measured* half of the reproduction: a real partitioned
-pipeline running on this host, with
+pipeline running on this host, one worker per stage executing its
+contiguous block range ``[cuts[i], cuts[i+1])``, with the hop layer
+behind the pluggable Transport API (``runtime.transport``):
 
-  * one threaded ``Worker`` per stage (threads standing in for the Pis /
-    the GPU server / pods), each executing its contiguous block range
-    ``[cuts[i], cuts[i+1])``, bounded queues between stages,
-  * an emulated network on every hop (``tc``-style: RTT/2 + bytes/bw
-    injected as wall-clock delay — exactly what the paper imposes with
-    Linux traffic control).  A hop may carry a static ``Link`` or a
-    time-varying ``LinkTrace``, which the emulator samples at the
-    pipeline clock on every transfer (WAN ramps, congestion spikes),
-  * **dual communication backends per hop**, mirroring the paper's
-    PyTorch-RPC vs. custom-socket study:
+  * ``emulated`` — stages are threads, every hop an ``EmulatedChannel``
+    (tc-style: RTT/2 + bytes/bw injected as wall-clock delay, static
+    ``Link`` or time-varying ``LinkTrace`` sampled at the pipeline clock
+    per transfer).  Backend cost is *modeled*.
+  * ``socket`` — stages are OS processes (``multiprocessing`` spawn),
+    every hop real TCP on loopback with the paper's lightweight wire
+    format.  Backend cost is *measured* per transfer.
+  * ``shmem`` — stages are processes, hops a shared-memory ring
+    (zero-copy local case).  Measured.
 
-      - ``lightweight``: the activation is handed to the next worker as a
-        device array, zero-copy, and each stage is one fused jitted
-        function (the paper's custom TCP backend with tensor
-        serialization only at the wire).
-      - ``rpc``: per-*block* call dispatch (module-granularity RPC), with
-        a full serialize → byte-buffer → deserialize round trip per hop
-        plus a per-call coordination overhead — the structural costs that
-        made PyTorch RPC slow in the paper (Sec. V-C).
+Orthogonally, **dual communication backends per stage** mirror the
+paper's PyTorch-RPC vs. custom-socket study:
+
+  - ``lightweight``: one fused jitted function per stage, activations
+    cross the hop as raw tensor bytes (header + payload only).
+  - ``rpc``: per-*block* call dispatch with a full serialize →
+    byte-buffer → deserialize round trip per hop plus a per-call
+    coordination overhead — the structural costs that made PyTorch RPC
+    slow in the paper (Sec. V-C).
 
 Steady-state throughput is measured by streaming batches through all
-stages concurrently (stage i+1 of batch b overlaps stage i of batch b+1),
-end-to-end latency by timing a lone batch through the empty pipeline —
-the paper's two metrics.  Every emulated transfer is recorded per hop so
-a closed adaptive loop (``runtime.adaptive``) can feed *observed* wire
-times back into ``LinkEstimator``s, and ``migrate`` re-instantiates the
-workers at a new cut vector without tearing the pipeline down.
+stages concurrently, end-to-end latency by timing a lone batch through
+the empty pipeline — the paper's two metrics.  Every transfer is
+recorded per hop (modeled delay under ``emulated``, measured wall-clock
+under ``socket``/``shmem``) so the closed adaptive loop
+(``runtime.adaptive``) feeds *observed* wire times into its
+``LinkEstimator``s, and ``migrate`` re-deploys a new cut vector without
+tearing the pipeline down — across threads or live worker processes.
 """
 from __future__ import annotations
 
-import pickle
+import dataclasses
 import queue
 import threading
 import time
@@ -42,11 +45,15 @@ from dataclasses import dataclass
 from typing import Callable, Literal, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..core.devices import AnyLink, Link, LinkTrace
 from ..core.scenarios import Scenario
+from . import transport as T
+from .transport import (BATCH, CLOCK, ERROR, PROBE, RECONFIG, STATS, STOP,
+                        WARMUP, Channel, HopMeter, HopSpec, TransferRecord,
+                        TransportError, TransportTimeout, _Serializer,
+                        get_transport)
 
 Backend = Literal["lightweight", "rpc"]
 
@@ -55,75 +62,32 @@ Backend = Literal["lightweight", "rpc"]
 RPC_PER_CALL_OVERHEAD_S = 200e-6
 
 
-class EmulatedLink:
-    """tc-netem analogue: sleeps RTT/2 + bytes/bw per message.
-
-    ``LinkTrace`` hops are sampled at the pipeline clock on every send
-    (with the trace's jitter, seeded deterministically), and every
-    transfer is recorded as ``(nbytes, elapsed_s, t_s)`` so the adaptive
-    loop can replay what the wire actually did."""
-
-    def __init__(self, link: AnyLink, clock: Callable[[], float] | None = None,
-                 seed: int = 0):
-        self.link = link
-        self._clock = clock or (lambda: 0.0)
-        self._rng = np.random.default_rng(seed)
-        self._lock = threading.Lock()
-        self.observations: list[tuple[int, float, float]] = []
-        # lifetime radio accounting (never drained): joules = link radio
-        # cost × bytes actually pushed through this hop
-        self.total_bytes: int = 0
-        self.total_energy_j: float = 0.0
-
-    def send(self, nbytes: int) -> float:
-        t = self._clock()
-        if isinstance(self.link, LinkTrace):
-            dt = self.link.transfer_time(nbytes, t, rng=self._rng)
-        else:
-            dt = self.link.transfer_time(nbytes)
-        time.sleep(dt)
-        with self._lock:
-            self.observations.append((nbytes, dt, t))
-            self.total_bytes += nbytes
-            self.total_energy_j += self.link.energy_per_byte_j * nbytes
-        return dt
-
-    def drain_observations(self) -> list[tuple[int, float, float]]:
-        with self._lock:
-            obs, self.observations = self.observations, []
-        return obs
-
-
-class _Serializer:
-    """RPC-style full serialize/deserialize round trip."""
-
-    @staticmethod
-    def dumps(x: jax.Array) -> bytes:
-        host = np.asarray(x)
-        return pickle.dumps((host.shape, str(host.dtype), host.tobytes()))
-
-    @staticmethod
-    def loads(buf: bytes) -> jax.Array:
-        shape, dtype, raw = pickle.loads(buf)
-        return jnp.asarray(np.frombuffer(raw, dtype=dtype).reshape(shape))
-
-
 @dataclass
 class StageStats:
     exe_s: float = 0.0
     net_s: float = 0.0
     calls: int = 0
+    cpu_s: float = 0.0              # worker CPU time (thread/process clock)
     cpu_pct: float = 0.0
     mem_pct: float = 0.0
 
 
 class Worker:
-    """One pipeline stage: executes blocks[lo:hi] of a CNNModel."""
+    """One pipeline stage: executes blocks[lo:hi] of a CNNModel.
+
+    ``cpu_clock`` attributes CPU time to this worker (default
+    ``process_time`` — XLA:CPU executes on an internal pool, which a
+    per-thread clock cannot see).  Attribution is exact when the worker
+    owns its process; under threads it is exact whenever stages run
+    sequentially (the latency phase), which is where ``measure`` reads
+    it — per-stage numbers either way, instead of one host-wide reading
+    broadcast to every stage."""
 
     def __init__(self, name: str, model, params, lo: int, hi: int,
-                 backend: Backend):
+                 backend: Backend, cpu_clock: Callable[[], float] | None = None):
         self.name, self.lo, self.hi, self.backend = name, lo, hi, backend
         self.stats = StageStats()
+        self._cpu_clock = cpu_clock or time.process_time
         sub = params[lo:hi]
         layers = [layer for (_, layer) in model.blocks[lo:hi]]
         if backend == "lightweight":
@@ -145,6 +109,7 @@ class Worker:
 
     def run(self, x):
         t0 = time.perf_counter()
+        c0 = self._cpu_clock()
         if self.backend == "rpc":
             for fn in self._fns:
                 # serialize/deserialize at every module-call boundary
@@ -155,6 +120,7 @@ class Worker:
             x = self._fns[0](x)
         x = jax.block_until_ready(x)
         self.stats.exe_s += time.perf_counter() - t0
+        self.stats.cpu_s += self._cpu_clock() - c0
         self.stats.calls += 1
         return x
 
@@ -168,35 +134,404 @@ class PipelineResult:
     stage_exe_s: tuple[float, ...]  # mean per-batch exe per stage
     net_s: float                    # mean per-batch wire time, all hops
     hop_net_s: tuple[float, ...] = ()   # mean per-batch wire time per hop
-    cpu_pct: tuple[float, ...] = ()
-    mem_pct: tuple[float, ...] = ()
+    cpu_pct: tuple[float, ...] = ()     # per-worker CPU util while executing
+    mem_pct: tuple[float, ...] = ()     # per-worker-host RSS share
     # modeled J/batch from *measured* stage times + wire bytes (scenario
     # device power × exe + idle × wire wait + radio × bytes); 0.0 when
     # the pipeline was built from bare links (no device power profile)
     energy_j: float = 0.0
     stage_energy_j: tuple[float, ...] = ()
+    transport: str = "emulated"     # per-hop transports, "+"-joined if mixed
 
 
+# --------------------------------------------------------------------------- #
+# Engines: where the workers live and how batches cross hops
+# --------------------------------------------------------------------------- #
+class _ThreadEngine:
+    """Stages as threads of this process, hops as EmulatedChannels —
+    the modeled path (and the only one a LinkTrace can drive)."""
+
+    def __init__(self, pipe: "EdgePipeline"):
+        self.pipe = pipe
+        tr = get_transport("emulated", clock=pipe.clock)
+        self.chans: list[T.EmulatedChannel] = [
+            tr.open(HopSpec(index=i, link=link,
+                            framing=("pickle" if pipe.backends[i] == "rpc"
+                                     else "raw"),
+                            depth=pipe.queue_depth, seed=pipe.seed + i))
+            for i, link in enumerate(pipe.links)]
+        self.workers: list[Worker] = []
+        self._build_workers()
+
+    @property
+    def nets(self):
+        return self.chans
+
+    def _build_workers(self, reuse: Sequence[Worker] = ()) -> None:
+        """Instantiate stage workers, reusing any existing worker whose
+        (block range, backend) is unchanged — its jitted functions stay
+        warm across a migration."""
+        pipe = self.pipe
+        pool = {(w.lo, w.hi, w.backend): w for w in reuse}
+        bounds = pipe.bounds()
+        self.workers = [
+            pool.get((bounds[i], bounds[i + 1], pipe.backends[i]))
+            or Worker(f"worker{i + 1}", pipe.model, pipe.params,
+                      bounds[i], bounds[i + 1], pipe.backends[i])
+            for i in range(pipe.n_stages)]
+
+    def warmup(self, x):
+        for w in self.workers:
+            x = w.warmup(x)
+        return x
+
+    def migrate(self) -> None:
+        self._build_workers(reuse=self.workers)
+
+    def probe(self) -> None:
+        for chan in self.chans:
+            chan.send(kind=PROBE)
+
+    def stage_stats(self) -> list[StageStats]:
+        return [dataclasses.replace(w.stats) for w in self.workers]
+
+    def reset_stats(self) -> None:
+        for w in self.workers:
+            w.stats = StageStats()
+
+    def set_epoch(self, _epoch: float) -> None:
+        pass                                  # channels read pipe.clock live
+
+    def run_one(self, x):
+        t0 = time.perf_counter()
+        hop_net: list[float] = []
+        for i, w in enumerate(self.workers):
+            x = w.run(x)
+            if i < len(self.chans):
+                rec = self.chans[i].send(x, kind=BATCH)
+                _, x = self.chans[i].recv()
+                hop_net.append(rec.elapsed_s)
+        return x, time.perf_counter() - t0, tuple(hop_net)
+
+    def stream(self, x, n_batches: int) -> float:
+        k = self.pipe.n_stages
+        if k == 1:
+            t0 = time.perf_counter()
+            for _ in range(n_batches):
+                self.workers[0].run(x)        # run() blocks until ready
+            return time.perf_counter() - t0
+
+        errors: list[BaseException] = []
+
+        def stage(i: int):
+            # on failure, keep draining the input channel so upstream
+            # producers never block on a full queue, and still forward
+            # the shutdown sentinel — a dead stage must not hang the run
+            failed = False
+            while True:
+                kind, item = self.chans[i - 1].recv()
+                if kind == STOP:
+                    if i < k - 1:
+                        self.chans[i].send(kind=STOP)
+                    return
+                if failed:
+                    continue
+                try:
+                    y = self.workers[i].run(item)
+                    if i < k - 1:
+                        self.chans[i].send(y, kind=BATCH)
+                    # last stage: run() already blocked until ready;
+                    # the output is complete and can be dropped
+                except BaseException as e:   # noqa: BLE001 — re-raised below
+                    errors.append(e)
+                    failed = True
+
+        threads = [threading.Thread(target=stage, args=(i,), daemon=True)
+                   for i in range(1, k)]
+        for t in threads:
+            t.start()
+        t0 = time.perf_counter()
+        try:
+            for _ in range(n_batches):
+                a = self.workers[0].run(x)
+                self.chans[0].send(a, kind=BATCH)
+        finally:
+            self.chans[0].send(kind=STOP)
+            for t in threads:
+                t.join()
+        if errors:
+            raise errors[0]
+        return time.perf_counter() - t0
+
+    def host_mem_pct(self) -> float:
+        import psutil
+        return psutil.Process().memory_percent()
+
+    def close(self) -> None:
+        pass
+
+
+class _ProcessEngine:
+    """Stages as spawned OS processes (``WorkerHost``s), hops as real
+    socket/shmem channels — the measured path.  The orchestrator feeds
+    stage 0 and drains stage k-1 over extra (non-scenario) channels and
+    harvests per-stage stats + per-hop TransferRecords over control
+    pipes whenever a STATS token traverses the chain."""
+
+    def __init__(self, pipe: "EdgePipeline"):
+        import multiprocessing as mp
+        self.pipe = pipe
+        self._ctx = mp.get_context("spawn")
+        self._stop = self._ctx.Event()
+        k = pipe.n_stages
+        self._meters = [HopMeter(l) for l in pipe.links]
+        self._stats = [StageStats() for _ in range(k)]
+        self._procs: list = []
+        self._ctrls: list = []
+        self._pairs: list = []
+        self._feed: Channel | None = None
+        self._result: Channel | None = None
+        try:
+            self._start(k)
+        except BaseException:
+            # partial standup must not leak live worker processes,
+            # sockets, or shmem segments — the caller gets no pipe
+            # object to close()
+            self.close()
+            raise
+
+    def _start(self, k: int) -> None:
+        pipe = self.pipe
+        # channel j carries stage j-1 -> stage j; j=0 is the orchestrator
+        # feed, j=k the result drain (neither is a scenario hop)
+        chan_names = ([pipe.transports[0], *pipe.transports,
+                       pipe.transports[-1]] if k > 1
+                      else [pipe.transport_names[0]] * 2)
+        trs = {n: get_transport(n, ctx=self._ctx) if n == "shmem"
+               else get_transport(n) for n in set(chan_names)}
+        for j in range(k + 1):
+            internal = 0 < j < k
+            framing = ("pickle" if 0 < j and pipe.backends[j - 1] == "rpc"
+                       else "raw")
+            spec = HopSpec(
+                index=j - 1,
+                link=pipe.links[j - 1] if internal else None,
+                framing=framing,
+                # the feed must hold a full stream window, or the
+                # orchestrator's send blocks where no liveness check runs
+                depth=(pipe.queue_depth if internal
+                       else max(pipe.queue_depth * k, 1)),
+                seed=pipe.seed + j, epoch=pipe.epoch,
+                scenario_hop=internal, send_timeout_s=pipe.timeout_s)
+            self._pairs.append(trs[chan_names[j]].open(spec).split())
+        self._feed = self._pairs[0][0]
+        self._result = self._pairs[k][1]
+
+        params_np = jax.tree.map(np.asarray, pipe.params)
+        child_ctrls = []
+        for i in range(k):
+            parent_c, child_c = self._ctx.Pipe()
+            self._ctrls.append(parent_c)
+            child_ctrls.append(child_c)
+            spec = {"stage": i, "n_stages": k, "model": pipe.model,
+                    "params": params_np, "bounds": pipe.bounds(),
+                    "backend": pipe.backends[i],
+                    "ingress": self._pairs[i][1],
+                    "egress": self._pairs[i + 1][0], "ctrl": child_c,
+                    "stop": self._stop, "epoch": pipe.epoch}
+            p = self._ctx.Process(target=T._worker_main, args=(spec,),
+                                  daemon=True, name=f"edge-worker{i}")
+            p.start()
+            self._procs.append(p)
+        # parent's copies of shipped endpoints must go away, or a dead
+        # worker's socket never reads as closed downstream
+        for c in child_ctrls:
+            c.close()
+        for j in range(k + 1):
+            if j != 0:
+                self._pairs[j][0].close()
+            if j != k:
+                self._pairs[j][1].close()
+        for i in range(k):
+            msg = self._ctrl_recv(i)
+            if msg[0] != "ready":
+                raise TransportError(f"worker {i} failed to start: {msg}")
+
+    # ------------------------------------------------------------------ #
+    @property
+    def nets(self):
+        return self._meters
+
+    def _check_alive(self) -> None:
+        for i, p in enumerate(self._procs):
+            if not p.is_alive():
+                raise TransportError(
+                    f"worker process {i} died (exitcode {p.exitcode})")
+
+    def _ctrl_recv(self, i: int, timeout: float | None = None):
+        deadline = time.perf_counter() + (timeout or self.pipe.timeout_s)
+        while True:
+            if self._ctrls[i].poll(0.05):
+                msg = self._ctrls[i].recv()
+                if msg[0] == "error":
+                    raise TransportError(msg[2])
+                return msg
+            self._check_alive()
+            if time.perf_counter() > deadline:
+                raise TransportError(f"worker {i}: control channel timeout")
+
+    def _await(self, expected: int):
+        deadline = time.perf_counter() + self.pipe.timeout_s
+        while True:
+            try:
+                kind, obj = self._result.recv(timeout=0.25)
+            except TransportTimeout:
+                self._check_alive()
+                if time.perf_counter() > deadline:
+                    raise TransportError(
+                        f"timed out waiting for "
+                        f"{T._KIND_NAMES[expected]}") from None
+                continue
+            if kind == ERROR:
+                raise TransportError(str(obj))
+            if kind == expected:
+                return obj
+            raise TransportError(
+                f"protocol error: got {T._KIND_NAMES[kind]} while waiting "
+                f"for {T._KIND_NAMES[expected]}")
+
+    def sync(self) -> dict[int, list[TransferRecord]]:
+        """Flush every stage's stats + ingress records to the
+        orchestrator; → {hop index: new records} for the scenario hops."""
+        self._feed.send(kind=STATS)
+        self._await(STATS)
+        new: dict[int, list[TransferRecord]] = {}
+        for i in range(self.pipe.n_stages):
+            _, stage, d, mem_pct, records = self._ctrl_recv(i)
+            acc = self._stats[stage]
+            acc.exe_s += d["exe_s"]
+            acc.calls += d["calls"]
+            acc.cpu_s += d["cpu_s"]
+            acc.mem_pct = mem_pct
+            if stage > 0:                     # stage i's ingress = hop i-1
+                self._meters[stage - 1].extend(records)
+                new[stage - 1] = [TransferRecord(*r) for r in records]
+        return new
+
+    # ------------------------------------------------------------------ #
+    def warmup(self, x):
+        self._feed.send(np.asarray(x), kind=WARMUP)
+        return self._await(WARMUP)
+
+    def migrate(self) -> None:
+        self._feed.send(self.pipe.bounds(), kind=RECONFIG)
+        self._await(RECONFIG)
+
+    def probe(self) -> None:
+        self._feed.send(kind=PROBE)
+        self._await(PROBE)
+        self.sync()
+
+    def stage_stats(self) -> list[StageStats]:
+        return [dataclasses.replace(s) for s in self._stats]
+
+    def reset_stats(self) -> None:
+        self.sync()                           # flush children first
+        self._stats = [StageStats() for _ in range(self.pipe.n_stages)]
+
+    def set_epoch(self, epoch: float) -> None:
+        self._feed.send(epoch, kind=CLOCK)
+        self._await(CLOCK)
+        self._feed.epoch = self._result.epoch = epoch
+
+    def run_one(self, x):
+        t0 = time.perf_counter()
+        self._feed.send(np.asarray(x), kind=BATCH)
+        y = self._await(BATCH)
+        latency = time.perf_counter() - t0
+        new = self.sync()
+        hop_net = tuple(
+            float(np.mean([r.elapsed_s for r in new.get(i, ())
+                           if r.nbytes > 0] or [0.0]))
+            for i in range(len(self._meters)))
+        return y, latency, hop_net
+
+    def stream(self, x, n_batches: int) -> float:
+        window = max(self.pipe.queue_depth * self.pipe.n_stages, 1)
+        xs = np.asarray(x)
+        sent = recvd = 0
+        t0 = time.perf_counter()
+        while recvd < n_batches:
+            if sent < n_batches and sent - recvd < window:
+                self._feed.send(xs, kind=BATCH)
+                sent += 1
+            else:
+                self._await(BATCH)
+                recvd += 1
+        total = time.perf_counter() - t0
+        self.sync()
+        return total
+
+    def host_mem_pct(self) -> float:
+        import psutil
+        return psutil.Process().memory_percent()
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._feed is not None:
+            try:
+                self._feed.send(kind=STOP)
+            except Exception:
+                pass
+        deadline = time.perf_counter() + 3.0
+        for p in self._procs:
+            p.join(max(deadline - time.perf_counter(), 0.1))
+        for p in self._procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(1.0)
+        for pair in self._pairs:              # idempotent; includes feed
+            for end in pair:                  # and result ends
+                try:
+                    end.close()
+                except Exception:
+                    pass
+        for c in self._ctrls:
+            try:
+                c.close()
+            except Exception:
+                pass
+
+
+# --------------------------------------------------------------------------- #
 class EdgePipeline:
     """Orchestrator (paper Alg. 1, k-stage): split the model at a cut
-    vector, deploy one worker per scenario device, stream batches through
-    per-hop emulated links, measure.
+    vector, deploy one worker per scenario device, stream batches
+    through per-hop channels, measure.
 
-    ``cuts``     — interior cut vector (k-1 ints, strictly increasing),
-                   or a single int for the classic 2-stage split.
-    ``scenario`` — a ``Scenario`` (device chain + per-hop links), a bare
-                   ``Link``/``LinkTrace`` (2-stage convenience), or a
-                   sequence of per-hop links.
-    ``backend``  — one backend for every stage, or a per-stage sequence.
+    ``cuts``      — interior cut vector (k-1 ints, strictly increasing),
+                    or a single int for the classic 2-stage split.
+    ``scenario``  — a ``Scenario`` (device chain + per-hop links), a bare
+                    ``Link``/``LinkTrace`` (2-stage convenience), or a
+                    sequence of per-hop links.
+    ``backend``   — one backend for every stage, or a per-stage sequence.
+    ``transport`` — hop transport: ``"emulated"`` (threads, modeled
+                    wire), ``"socket"``/``"shmem"`` (worker processes,
+                    measured wire), or a per-hop sequence; defaults to
+                    the scenario's ``transports`` else ``"emulated"``.
+                    ``"emulated"`` cannot mix with process transports.
 
     The legacy 2-stage keywords ``p=`` and ``link=`` are still accepted.
+    Process-backed pipelines hold OS resources — ``close()`` them (or
+    use the pipeline as a context manager).
     """
 
     def __init__(self, model, params, cuts=None, scenario=None,
                  backend: Backend | Sequence[Backend] = "lightweight",
+                 transport: str | Sequence[str] | None = None,
                  *, p: int | None = None, link: AnyLink | None = None,
                  queue_depth: int = 2, clock: Callable[[], float] | None = None,
-                 seed: int = 0):
+                 seed: int = 0, timeout_s: float = 180.0):
         if p is not None:
             cuts = p
         if link is not None:
@@ -217,6 +552,7 @@ class EdgePipeline:
             links = tuple(scenario)
 
         self.model, self.params = model, params
+        self.links = links
         self.n_stages = len(links) + 1
         if isinstance(backend, str):
             self.backends: tuple[Backend, ...] = (backend,) * self.n_stages
@@ -225,14 +561,48 @@ class EdgePipeline:
             if len(self.backends) != self.n_stages:
                 raise ValueError(f"{len(self.backends)} backends for "
                                  f"{self.n_stages} stages")
+
+        # per-hop transports: explicit arg > scenario.transports > emulated
+        if transport is None:
+            transport = (self.scenario.transports
+                         if self.scenario is not None
+                         and self.scenario.transports is not None
+                         else "emulated")
+        n_hops = max(self.n_stages - 1, 1)
+        if isinstance(transport, str):
+            names = (transport,) * n_hops
+        else:
+            names = tuple(transport)
+            if len(names) != n_hops:
+                raise ValueError(f"{len(names)} transports for {n_hops} hops")
+        process_based = {n: get_transport(n).process_based for n in set(names)}
+        if len(set(process_based.values())) > 1:
+            raise ValueError(
+                f"cannot mix the in-process 'emulated' transport with "
+                f"process transports in one pipeline: {names}")
+        if any(process_based.values()):
+            # a measured channel cannot follow a schedule; silently
+            # ignoring the trace would mislabel results as degraded
+            traced = [l.name for l in links if isinstance(l, LinkTrace)]
+            if traced:
+                raise ValueError(
+                    f"LinkTrace hops {traced} need the 'emulated' "
+                    f"transport — real {sorted(set(names))} channels "
+                    f"measure the wire, they cannot replay a schedule")
+        self.transport_names = names
+        self.transports = names[:self.n_stages - 1]   # () for k == 1
+
         self.queue_depth = queue_depth
+        self.timeout_s = timeout_s
+        self.seed = seed
         self._t0 = time.perf_counter()
+        self.epoch = self._t0
         self.clock = clock or (lambda: time.perf_counter() - self._t0)
-        self.nets = [EmulatedLink(l, self.clock, seed=seed + i)
-                     for i, l in enumerate(links)]
         self.migrations: list[tuple[float, tuple[int, ...], tuple[int, ...]]] = []
         self.cuts = self._check_cuts(cuts)
-        self._build_workers()
+        self._engine = (_ProcessEngine(self)
+                        if any(process_based.values()) else
+                        _ThreadEngine(self))
 
     # ------------------------------------------------------------------ #
     def _check_cuts(self, cuts) -> tuple[int, ...]:
@@ -250,19 +620,25 @@ class EdgePipeline:
                                  "(stages must be non-empty and ordered)")
         return cuts
 
-    def _build_workers(self, reuse: Sequence[Worker] = ()) -> None:
-        """Instantiate stage workers, reusing any existing worker whose
-        (block range, backend) is unchanged — its jitted functions stay
-        warm across a migration."""
-        pool = {(w.lo, w.hi, w.backend): w for w in reuse}
-        bounds = (0, *self.cuts, len(self.model.blocks))
-        self.workers = [
-            pool.get((bounds[i], bounds[i + 1], self.backends[i]))
-            or Worker(f"worker{i + 1}", self.model, self.params,
-                      bounds[i], bounds[i + 1], self.backends[i])
-            for i in range(self.n_stages)]
+    def bounds(self) -> tuple[int, ...]:
+        return (0, *self.cuts, len(self.model.blocks))
 
-    # legacy 2-stage accessors ----------------------------------------- #
+    # observation surface + legacy accessors ---------------------------- #
+    @property
+    def nets(self):
+        """Per-hop observation surface: live ``EmulatedChannel``s under
+        threads, harvested ``HopMeter``s under worker processes — either
+        way one object per hop with ``.link``/``drain_observations()``/
+        ``total_bytes``/``total_energy_j``."""
+        return self._engine.nets
+
+    @property
+    def workers(self) -> list[Worker]:
+        if not isinstance(self._engine, _ThreadEngine):
+            raise AttributeError("workers live in their own processes under "
+                                 f"transport={self.transport!r}")
+        return self._engine.workers
+
     @property
     def p(self) -> int:
         return self.cuts[0]
@@ -271,112 +647,72 @@ class EdgePipeline:
     def backend(self) -> str:
         return "+".join(sorted(set(self.backends)))
 
+    @property
+    def transport(self) -> str:
+        return "+".join(sorted(set(self.transport_names)))
+
     def reset_clock(self) -> None:
         """Restart the pipeline clock (trace time 0) — call before a run
         that should experience a LinkTrace from its beginning."""
         self._t0 = time.perf_counter()
+        self.epoch = self._t0
+        self._engine.set_epoch(self._t0)
+
+    # lifecycle --------------------------------------------------------- #
+    def close(self) -> None:
+        """Tear down worker hosts and channels (no-op for threads)."""
+        self._engine.close()
+
+    def __enter__(self) -> "EdgePipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------------ #
     def migrate(self, new_cuts, cost_s: float = 0.0) -> tuple[int, ...]:
-        """Live migration: re-instantiate the workers at ``new_cuts``.
+        """Live migration: re-deploy the workers at ``new_cuts``.
 
         ``cost_s`` is the one-off redeploy cost (weights moving to their
         new hosts) charged as wall-clock time, i.e. the splitter's
-        ``migration_cost_s``.  Link state (clock, traces, observations)
-        survives the migration."""
+        ``migration_cost_s``.  Hop state (clock, traces, observations)
+        survives the migration; under process transports each worker
+        host rebuilds its stage in place from a RECONFIG token."""
         new_cuts = self._check_cuts(new_cuts)
         if cost_s > 0.0:
             time.sleep(cost_s)
         self.migrations.append((self.clock(), self.cuts, new_cuts))
         self.cuts = new_cuts
-        self._build_workers(reuse=self.workers)
+        self._engine.migrate()
         return self.cuts
 
     # ------------------------------------------------------------------ #
-    def _hop(self, i: int, x) -> tuple[jax.Array, float]:
-        """Transfer ``x`` over hop i, in the sending stage's wire format."""
-        if self.backends[i] == "rpc":
-            buf = _Serializer.dumps(x)
-            dt = self.nets[i].send(len(buf))
-            return _Serializer.loads(buf), dt
-        dt = self.nets[i].send(x.size * x.dtype.itemsize)
-        return x, dt
-
     def warmup(self, x):
-        for i, w in enumerate(self.workers):
-            x = w.warmup(x)
-        return x
+        return self._engine.warmup(x)
+
+    def probe(self) -> None:
+        """Send a header-only message down every hop: emulated hops
+        charge RTT/2, real hops measure it — either way the estimators
+        get a compute-free RTT sample (an nbytes=0 observation)."""
+        self._engine.probe()
+
+    def stage_stats(self) -> list[StageStats]:
+        """Per-stage compute counters (snapshot), wherever the workers
+        live."""
+        return self._engine.stage_stats()
 
     def _reset_stats(self) -> None:
-        for w in self.workers:
-            w.stats = StageStats()
+        self._engine.reset_stats()
 
     def run_one(self, x) -> tuple[jax.Array, float, tuple[float, ...]]:
         """One batch through the empty pipeline →
         (out, end-to-end latency, per-hop wire times)."""
-        t0 = time.perf_counter()
-        hop_net: list[float] = []
-        for i, w in enumerate(self.workers):
-            x = w.run(x)
-            if i < len(self.nets):
-                x, dt = self._hop(i, x)
-                hop_net.append(dt)
-        return x, time.perf_counter() - t0, tuple(hop_net)
+        return self._engine.run_one(x)
 
     def stream(self, x, n_batches: int) -> float:
         """Push ``n_batches`` copies of ``x`` through all stages
         concurrently (bounded queues) → total wall time."""
-        k = self.n_stages
-        if k == 1:
-            t0 = time.perf_counter()
-            for _ in range(n_batches):
-                self.workers[0].run(x)      # run() blocks until ready
-            return time.perf_counter() - t0
-
-        qs = [queue.Queue(maxsize=self.queue_depth) for _ in range(k - 1)]
-        errors: list[BaseException] = []
-
-        def stage(i: int):
-            # on failure, keep draining the input queue so upstream
-            # producers never block on a full queue, and still forward
-            # the shutdown sentinel — a dead stage must not hang the run
-            failed = False
-            while True:
-                item = qs[i - 1].get()
-                if item is None:
-                    if i < k - 1:
-                        qs[i].put(None)
-                    return
-                if failed:
-                    continue
-                try:
-                    y = self.workers[i].run(item)
-                    if i < k - 1:
-                        y, _ = self._hop(i, y)
-                        qs[i].put(y)
-                    # last stage: run() already blocked until ready;
-                    # the output is complete and can be dropped
-                except BaseException as e:   # noqa: BLE001 — re-raised below
-                    errors.append(e)
-                    failed = True
-
-        threads = [threading.Thread(target=stage, args=(i,), daemon=True)
-                   for i in range(1, k)]
-        for t in threads:
-            t.start()
-        t0 = time.perf_counter()
-        try:
-            for _ in range(n_batches):
-                a = self.workers[0].run(x)
-                a, _ = self._hop(0, a)
-                qs[0].put(a)
-        finally:
-            qs[0].put(None)
-            for t in threads:
-                t.join()
-        if errors:
-            raise errors[0]
-        return time.perf_counter() - t0
+        return self._engine.stream(x, n_batches)
 
     def stage_energy_model(self, stage_exe_s: Sequence[float],
                             hop_net_s: Sequence[float],
@@ -389,18 +725,18 @@ class EdgePipeline:
         if self.scenario is None:
             return 0.0, ()
         from ..core.costmodel import _stage_energy
+        nets = self.nets
         per_stage = tuple(
             _stage_energy(dev, stage_exe_s[i],
                           hop_net_s[i] if i < len(hop_net_s) else 0.0,
                           hop_bytes[i] if i < len(hop_bytes) else 0.0,
-                          self.nets[i].link if i < len(self.nets) else None)
+                          nets[i].link if i < len(nets) else None)
             for i, dev in enumerate(self.scenario.devices))
         return sum(per_stage), per_stage
 
     # ------------------------------------------------------------------ #
     def measure(self, make_batch: Callable[[], jax.Array],
                 n_batches: int = 10, warmup: int = 1) -> PipelineResult:
-        import psutil
         x = make_batch()
         self.warmup(x)
         self._reset_stats()
@@ -420,21 +756,28 @@ class EdgePipeline:
             hop_t.append(hops)
         hop_bytes = [(net.total_bytes - b0) / len(lat)
                      for net, b0 in zip(self.nets, bytes0)]
+        # per-worker CPU utilisation while executing (process clock per
+        # worker; lone batches run stages one at a time, so attribution
+        # is exact even when the workers are threads of this process) —
+        # can exceed 100% when a stage's kernels use several cores
+        lat_stats = self.stage_stats()
+        cpu_pct = tuple(100.0 * s.cpu_s / max(s.exe_s, 1e-9)
+                        for s in lat_stats)
 
         # --- throughput: streamed, stages overlap -------------------- #
         self._reset_stats()
         # the latency phase advanced trace time (degraded lone batches
         # sleep); restart so both metrics sample the trace from t=0
         self.reset_clock()
-        psutil.cpu_percent(None)
-        p_mem = psutil.virtual_memory().percent
         total = self.stream(x, n_batches)
-        cpu = psutil.cpu_percent(None) * psutil.cpu_count()
+        stats = self.stage_stats()
         batch = x.shape[0]
         hop_net = tuple(float(np.mean([h[i] for h in hop_t]))
                         for i in range(len(self.nets)))
-        stage_exe = tuple(w.stats.exe_s / max(w.stats.calls, 1)
-                          for w in self.workers)
+        stage_exe = tuple(s.exe_s / max(s.calls, 1) for s in stats)
+        host_mem = self._engine.host_mem_pct()
+        mem_pct = tuple(s.mem_pct if s.mem_pct > 0 else host_mem
+                        for s in stats)
         energy, stage_energy = self.stage_energy_model(stage_exe, hop_net,
                                                        hop_bytes)
         return PipelineResult(
@@ -444,8 +787,9 @@ class EdgePipeline:
             stage_exe_s=stage_exe,
             net_s=float(sum(hop_net)),
             hop_net_s=hop_net,
-            cpu_pct=(cpu,) * self.n_stages,
-            mem_pct=(p_mem,) * self.n_stages,
+            cpu_pct=cpu_pct,
+            mem_pct=mem_pct,
             energy_j=energy,
             stage_energy_j=stage_energy,
+            transport=self.transport,
         )

@@ -19,6 +19,13 @@ Schedule (train, K stages, M microbatches, T = M+K-1 ticks):
   the next pod; pod 0 injects microbatch t+1.  Output microbatches are
   collected from the last pod (out_specs P('pod') + host-side slice) —
   exactly Alg. 1's worker→orchestrator return, at pod scale.
+
+Relation to the hop Transport API (``runtime.transport``): here the
+"transport" is the ``ppermute`` collective itself — XLA owns the wire,
+so per-hop cost is modeled by the DCN ``Link`` in the pod scenarios
+rather than recorded per transfer.  Folding these collectives in as a
+registered transport (so pod hops emit ``TransferRecord``s too) is the
+ROADMAP's "DCN at pod scale" follow-on.
 """
 from __future__ import annotations
 

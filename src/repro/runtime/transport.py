@@ -1,0 +1,714 @@
+"""Pluggable hop transports — the Transport/Channel API under EdgePipeline.
+
+The paper's headline toolchain contribution is *dual communication
+backends* whose overheads are measured, not modeled.  This module makes
+the hop layer first-class so backend cost can be either:
+
+  * **modeled** — ``emulated``: today's tc-netem analogue (sleep
+    RTT/2 + bytes/bw per message, ``LinkTrace`` sampling, jitter), with
+    stages as threads in this process; or
+  * **measured** — ``socket``: real TCP between ``multiprocessing``
+    worker processes on loopback, with the paper's lightweight wire
+    format (fixed header + raw tensor bytes); and ``shmem``: a
+    shared-memory ring between processes for the zero-copy local case.
+
+Every hop is a ``Channel`` (``send(payload, kind)`` / ``recv()`` /
+``close()`` / ``drain_records()``); a ``Transport`` opens one channel
+per hop (``open(hop) -> Channel``) and ``Channel.split()`` yields the
+(sender, receiver) ends to place in the two worker hosts.  Channels
+record every data transfer as a ``TransferRecord`` — emulated channels
+record the *injected* delay, socket/shmem channels record the
+*wall-clock* cost seen by the receiver (send-start timestamp rides in
+the message header; ``time.perf_counter`` is the system-wide monotonic
+clock on Linux, so sender/receiver stamps are comparable across
+processes).  Records feed the same ``LinkEstimator`` path either way,
+which is what lets the adaptive loop close over *observed* socket costs.
+
+Messages are typed (``BATCH``/``WARMUP``/``PROBE``/``RECONFIG``/
+``STATS``/``STOP``/``ERROR``/``CLOCK``) and control tokens flow in-band
+through the stage chain, so they stay ordered with the batches around
+them.  ``_worker_main`` is the per-stage process body: recv from the
+ingress channel, execute the stage's block range, send downstream,
+and flush stats/observations to the orchestrator over a control pipe
+when a ``STATS`` token passes through.
+
+``record_trace`` turns drained records from a *measured* channel into a
+replayable ``LinkTrace``, so real runs can seed the emulator.
+"""
+from __future__ import annotations
+
+import pickle
+import queue
+import socket as socketlib
+import struct
+import threading
+import time
+from abc import ABC, abstractmethod
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Sequence
+
+import numpy as np
+
+from ..core.devices import (AnyLink, Link, LinkTrace, attribute_bandwidth,
+                            fit_link_params)
+
+# message kinds (in-band, ordered with the batches around them)
+BATCH, WARMUP, PROBE, RECONFIG, STATS, STOP, ERROR, CLOCK = range(8)
+
+_KIND_NAMES = ("BATCH", "WARMUP", "PROBE", "RECONFIG", "STATS", "STOP",
+               "ERROR", "CLOCK")
+
+
+class TransportError(RuntimeError):
+    """A hop or worker host failed (peer closed, worker died, timeout)."""
+
+
+class TransportTimeout(TransportError):
+    """No message arrived within the requested window (retryable)."""
+
+
+class TransferRecord(NamedTuple):
+    """One observed transfer on a hop.  Tuple-compatible with the legacy
+    ``(nbytes, elapsed_s, t_s)`` observation triple."""
+
+    nbytes: int
+    elapsed_s: float
+    t_s: float
+
+
+@dataclass(frozen=True)
+class HopSpec:
+    """Static description of one hop, consumed by ``Transport.open``."""
+
+    index: int                      # hop number (-1 = orchestrator feed)
+    link: AnyLink | None = None     # the scenario link this hop models/labels
+    framing: str = "raw"            # "raw" (lightweight) | "pickle" (rpc)
+    depth: int = 2                  # bounded in-flight messages
+    seed: int = 0                   # jitter RNG seed (emulated)
+    epoch: float = 0.0              # perf_counter value at pipeline t=0
+    # False for the orchestrator's feed/result plumbing: those channels
+    # skip TransferRecord logging (nobody drains them, and they are not
+    # hops of the scenario being measured)
+    scenario_hop: bool = True
+    send_timeout_s: float = 180.0   # bound on blocking sends (shmem ring)
+
+
+# --------------------------------------------------------------------------- #
+# Wire framing
+# --------------------------------------------------------------------------- #
+class _Serializer:
+    """RPC-style full serialize/deserialize round trip."""
+
+    @staticmethod
+    def dumps(x) -> bytes:
+        host = np.asarray(x)
+        return pickle.dumps((host.shape, str(host.dtype), host.tobytes()))
+
+    @staticmethod
+    def loads(buf: bytes) -> np.ndarray:
+        shape, dtype, raw = pickle.loads(buf)
+        return np.frombuffer(raw, dtype=dtype).reshape(shape)
+
+
+def _encode(payload, framing: str) -> tuple[tuple, bytes]:
+    """→ (meta, wire bytes).  Arrays go as raw tensor bytes under the
+    lightweight framing, or through a full pickle round trip under the
+    rpc framing; non-array control payloads ride in the (small) meta."""
+    if payload is None:
+        return ("O", None), b""
+    if isinstance(payload, np.ndarray) or hasattr(payload, "dtype"):
+        if framing == "pickle":
+            return ("P",), _Serializer.dumps(payload)
+        host = np.ascontiguousarray(np.asarray(payload))
+        return ("R", host.shape, str(host.dtype)), host.tobytes()
+    return ("O", payload), b""
+
+
+def _decode(meta: tuple, payload: bytes):
+    tag = meta[0]
+    if tag == "R":
+        return np.frombuffer(payload, dtype=meta[2]).reshape(meta[1])
+    if tag == "P":
+        return _Serializer.loads(payload)
+    return meta[1]
+
+
+# --------------------------------------------------------------------------- #
+# Observation bookkeeping (shared by live channels and orchestrator meters)
+# --------------------------------------------------------------------------- #
+class HopObservations:
+    """Per-hop transfer log + lifetime radio accounting."""
+
+    def __init__(self, link: AnyLink | None = None):
+        self.link = link
+        self._lock = threading.Lock()
+        self.observations: list[TransferRecord] = []
+        self.total_bytes: int = 0
+        self.total_energy_j: float = 0.0
+
+    def record(self, nbytes: int, elapsed_s: float, t_s: float) -> TransferRecord:
+        rec = TransferRecord(int(nbytes), float(elapsed_s), float(t_s))
+        with self._lock:
+            self.observations.append(rec)
+            self.total_bytes += rec.nbytes
+            if self.link is not None:
+                self.total_energy_j += self.link.energy_per_byte_j * rec.nbytes
+        return rec
+
+    def extend(self, records: Sequence[tuple]) -> None:
+        for r in records:
+            self.record(*r)
+
+    def drain_observations(self) -> list[TransferRecord]:
+        with self._lock:
+            obs, self.observations = self.observations, []
+        return obs
+
+    # the Channel-API name for the same drain
+    drain_records = drain_observations
+
+    # channels cross process boundaries at spawn; runtime state stays home
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state.pop("_lock", None)
+        state["observations"] = []
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
+        self.observations = []
+
+
+class HopMeter(HopObservations):
+    """Orchestrator-side mirror of a process hop: harvested records land
+    here so ``pipe.nets`` has one observation surface per hop no matter
+    where the channel endpoints live."""
+
+
+# --------------------------------------------------------------------------- #
+# Channel interface + the three backends
+# --------------------------------------------------------------------------- #
+class Channel(HopObservations, ABC):
+    """One hop's message pipe.  ``measured`` says whether records are
+    wall-clock truth (socket/shmem) or modeled delay (emulated)."""
+
+    measured: bool = False
+
+    def __init__(self, hop: HopSpec):
+        super().__init__(hop.link)
+        self.hop = hop
+        self.epoch = hop.epoch
+
+    def now(self) -> float:
+        return time.perf_counter() - self.epoch
+
+    @abstractmethod
+    def send(self, payload=None, kind: int = BATCH) -> TransferRecord | None:
+        """Ship ``payload`` downstream; returns the TransferRecord when
+        the sending end is the one that measures (emulated), else None."""
+
+    @abstractmethod
+    def recv(self, timeout: float | None = None) -> tuple[int, object]:
+        """→ (kind, payload).  Raises TransportTimeout if nothing starts
+        arriving within ``timeout``; TransportError if the peer is gone."""
+
+    def split(self) -> "tuple[Channel, Channel]":
+        """→ (sender end, receiver end) for placement in two hosts.
+        In-process channels are their own other half."""
+        return self, self
+
+    def close(self) -> None:  # pragma: no cover - overridden where needed
+        pass
+
+
+class EmulatedChannel(Channel):
+    """tc-netem analogue (the former ``EmulatedLink``): sleeps
+    RTT/2 + bytes/bw per message, samples ``LinkTrace`` hops at the
+    pipeline clock, and hands arrays to the next thread through a
+    bounded queue — zero-copy under the lightweight framing, a full
+    serialize/deserialize round trip under the rpc framing."""
+
+    measured = False
+
+    def __init__(self, hop: HopSpec, clock: Callable[[], float] | None = None):
+        super().__init__(hop)
+        if hop.link is None:
+            raise ValueError("emulated transport needs a Link/LinkTrace per hop")
+        self._clock = clock or (lambda: 0.0)
+        self._rng = np.random.default_rng(hop.seed)
+        self._q: queue.Queue = queue.Queue(maxsize=max(hop.depth, 1))
+
+    def emulate(self, nbytes: int) -> float:
+        """Inject the modeled wire delay for ``nbytes`` and record it."""
+        t = self._clock()
+        if isinstance(self.link, LinkTrace):
+            dt = self.link.transfer_time(nbytes, t, rng=self._rng)
+        else:
+            dt = self.link.transfer_time(nbytes)
+        time.sleep(dt)
+        self.record(nbytes, dt, t)
+        return dt
+
+    def send(self, payload=None, kind: int = BATCH):
+        if kind in (BATCH, WARMUP):
+            if self.hop.framing == "pickle":
+                buf = _Serializer.dumps(payload)
+                nbytes, out = len(buf), _Serializer.loads(buf)
+            else:
+                host = np.asarray(payload)
+                nbytes, out = host.size * host.dtype.itemsize, payload
+            dt = self.emulate(nbytes)
+            self._q.put((kind, out))
+            return TransferRecord(nbytes, dt, self._clock())
+        if kind == PROBE:
+            # header-only message: charges RTT/2 (+ per-message overhead),
+            # recorded as an nbytes=0 observation; nothing to enqueue
+            dt = self.emulate(0)
+            return TransferRecord(0, dt, self._clock())
+        self._q.put((kind, payload))
+        return None
+
+    def recv(self, timeout: float | None = None):
+        try:
+            return self._q.get(timeout=timeout)
+        except queue.Empty:
+            raise TransportTimeout(f"hop {self.hop.index}: recv timed out") \
+                from None
+
+
+_HDR = struct.Struct("!BdI Q")        # kind, t_send, meta_len, payload_len
+
+
+class SocketChannel(Channel):
+    """Real TCP on loopback with the paper's lightweight wire format:
+    one fixed header (kind, send-start stamp, lengths) + small pickled
+    meta + raw tensor bytes.  The receiving end measures each data
+    transfer as wall-clock from the sender's send-start stamp through
+    full deserialization — serialization cost is *in* the number, which
+    is exactly the rpc-vs-lightweight difference the paper measures."""
+
+    measured = True
+
+    def __init__(self, hop: HopSpec, sock: socketlib.socket | None = None,
+                 _pair: tuple | None = None):
+        super().__init__(hop)
+        if sock is not None:
+            self._tx = self._rx = sock
+        elif _pair is not None:
+            self._tx, self._rx = _pair
+        else:
+            lst = socketlib.socket()
+            lst.bind(("127.0.0.1", 0))
+            lst.listen(1)
+            tx = socketlib.create_connection(lst.getsockname())
+            rx, _ = lst.accept()
+            lst.close()
+            self._tx, self._rx = tx, rx
+        for s in {self._tx, self._rx} - {None}:
+            s.setsockopt(socketlib.IPPROTO_TCP, socketlib.TCP_NODELAY, 1)
+
+    def split(self):
+        tx = SocketChannel(self.hop, _pair=(self._tx, None))
+        rx = SocketChannel(self.hop, _pair=(None, self._rx))
+        return tx, rx
+
+    def send(self, payload=None, kind: int = BATCH):
+        if self._tx is None:
+            raise TransportError(f"hop {self.hop.index}: receive-only end")
+        t0 = time.perf_counter()              # serialization counts
+        meta, data = _encode(payload, self.hop.framing)
+        mbuf = pickle.dumps(meta)
+        hdr = _HDR.pack(kind, t0, len(mbuf), len(data))
+        try:
+            self._tx.sendall(hdr + mbuf)
+            if data:
+                self._tx.sendall(data)
+        except OSError as e:
+            raise TransportError(
+                f"hop {self.hop.index}: peer gone ({e})") from e
+        return None
+
+    def _read_exact(self, n: int, timeout: float | None) -> bytes:
+        buf = bytearray()
+        self._rx.settimeout(timeout)
+        while len(buf) < n:
+            try:
+                chunk = self._rx.recv(min(n - len(buf), 1 << 20))
+            except socketlib.timeout:
+                if not buf:
+                    raise TransportTimeout(
+                        f"hop {self.hop.index}: recv timed out") from None
+                continue                      # mid-message: keep reading
+            except OSError as e:
+                raise TransportError(
+                    f"hop {self.hop.index}: peer gone ({e})") from e
+            if not chunk:
+                raise TransportError(f"hop {self.hop.index}: peer closed")
+            buf += chunk
+        return bytes(buf)
+
+    def recv(self, timeout: float | None = None):
+        if self._rx is None:
+            raise TransportError(f"hop {self.hop.index}: send-only end")
+        hdr = self._read_exact(_HDR.size, timeout)
+        kind, t0, mlen, plen = _HDR.unpack(hdr)
+        meta = pickle.loads(self._read_exact(mlen, None)) if mlen else ("O", None)
+        data = self._read_exact(plen, None) if plen else b""
+        payload = _decode(meta, data)
+        if kind in (BATCH, PROBE) and self.hop.scenario_hop:
+            self.record(plen, time.perf_counter() - t0,
+                        t0 - self.epoch)
+        return kind, payload
+
+    def close(self) -> None:
+        for s in (self._tx, self._rx):
+            if s is not None:
+                try:
+                    s.close()
+                except OSError:
+                    pass
+        self._tx = self._rx = None
+
+
+class ShmemChannel(Channel):
+    """Shared-memory ring between processes for the zero-copy local
+    case: payload bytes land in reusable ``SharedMemory`` slots, a
+    metadata queue carries (kind, meta, slot, nbytes, t_send), and a
+    free-slot queue provides ``depth``-bounded backpressure.  Slots grow
+    on demand (the sender replaces a too-small freed slot)."""
+
+    measured = True
+
+    def __init__(self, hop: HopSpec, ctx=None):
+        super().__init__(hop)
+        if ctx is None:
+            import multiprocessing as mp
+            ctx = mp.get_context("spawn")
+        self._meta_q = ctx.Queue()
+        self._free_q = ctx.Queue()
+        for _ in range(max(hop.depth, 1)):
+            self._free_q.put(None)            # tokens; None = no slot yet
+        self._pool: dict = {}                 # sender: name -> SharedMemory
+        self._attached: dict = {}             # receiver: name -> SharedMemory
+        self._role = "both"
+
+    def __getstate__(self):
+        state = super().__getstate__()
+        state["_pool"] = {}
+        state["_attached"] = {}
+        return state
+
+    def split(self):
+        import copy
+        tx, rx = copy.copy(self), copy.copy(self)
+        tx.__setstate__(tx.__getstate__())    # fresh caches/locks per end
+        rx.__setstate__(rx.__getstate__())
+        tx._role, rx._role = "send", "recv"
+        return tx, rx
+
+    def _get_slot(self, nbytes: int):
+        from multiprocessing import shared_memory
+        # depth-bounded backpressure, but never an unbounded block: a
+        # dead receiver returns no tokens, and a sender stuck here can
+        # hang an orchestrator whose liveness checks live on the recv
+        # path — so give up loudly after send_timeout_s
+        deadline = time.perf_counter() + self.hop.send_timeout_s
+        while True:
+            try:
+                token = self._free_q.get(timeout=0.5)
+                break
+            except queue.Empty:
+                if time.perf_counter() > deadline:
+                    raise TransportError(
+                        f"hop {self.hop.index}: no free shmem slot for "
+                        f"{self.hop.send_timeout_s:.0f}s (receiver gone?)"
+                    ) from None
+        if token is not None:
+            shm = self._pool.get(token)
+            if shm is not None and shm.size >= nbytes:
+                return token
+            if shm is not None:               # outgrown: replace the slot
+                shm.close()
+                try:
+                    shm.unlink()
+                except FileNotFoundError:
+                    pass
+                del self._pool[token]
+        shm = shared_memory.SharedMemory(create=True,
+                                         size=max(nbytes, 1 << 16))
+        self._pool[shm.name] = shm
+        return shm.name
+
+    def send(self, payload=None, kind: int = BATCH):
+        t0 = time.perf_counter()              # serialization + copy count
+        meta, data = _encode(payload, self.hop.framing)
+        name = None
+        if data:
+            name = self._get_slot(len(data))
+            self._pool[name].buf[:len(data)] = data
+        self._meta_q.put((kind, meta, name, len(data), t0))
+        return None
+
+    def _attach(self, name: str):
+        from multiprocessing import shared_memory
+        shm = self._attached.get(name)
+        if shm is None:
+            # NB: attaching re-registers the segment with the resource
+            # tracker, but worker hosts inherit the orchestrator's
+            # tracker, so the set-add is idempotent and the creator's
+            # unlink still unregisters exactly once
+            shm = shared_memory.SharedMemory(name=name)
+            self._attached[name] = shm
+        return shm
+
+    def recv(self, timeout: float | None = None):
+        try:
+            item = self._meta_q.get(timeout=timeout)
+        except queue.Empty:
+            raise TransportTimeout(
+                f"hop {self.hop.index}: recv timed out") from None
+        kind, meta, name, nbytes, t0 = item
+        data = b""
+        if name is not None:
+            shm = self._attach(name)
+            data = bytes(shm.buf[:nbytes])
+            self._free_q.put(name)
+        payload = _decode(meta, data)
+        if kind in (BATCH, PROBE) and self.hop.scenario_hop:
+            self.record(nbytes, time.perf_counter() - t0, t0 - self.epoch)
+        return kind, payload
+
+    def close(self) -> None:
+        for shm in self._attached.values():
+            try:
+                shm.close()
+            except Exception:
+                pass
+        for shm in self._pool.values():
+            try:
+                shm.close()
+                shm.unlink()
+            except Exception:
+                pass
+        self._pool.clear()
+        self._attached.clear()
+        for q in (self._meta_q, self._free_q):
+            try:
+                q.cancel_join_thread()
+            except Exception:
+                pass
+
+
+# --------------------------------------------------------------------------- #
+# Transport registry
+# --------------------------------------------------------------------------- #
+class Transport(ABC):
+    """A way to realize hops: opens one ``Channel`` per ``HopSpec``.
+    ``process_based`` says whether stages must live in worker processes
+    (socket/shmem) or threads of this process (emulated)."""
+
+    name: str = "?"
+    process_based: bool = False
+
+    @abstractmethod
+    def open(self, hop: HopSpec) -> Channel:
+        ...
+
+
+class EmulatedTransport(Transport):
+    name = "emulated"
+    process_based = False
+
+    def __init__(self, clock: Callable[[], float] | None = None):
+        self._clock = clock
+
+    def open(self, hop: HopSpec) -> Channel:
+        return EmulatedChannel(hop, clock=self._clock)
+
+
+class SocketTransport(Transport):
+    name = "socket"
+    process_based = True
+
+    def open(self, hop: HopSpec) -> Channel:
+        return SocketChannel(hop)
+
+
+class ShmemTransport(Transport):
+    name = "shmem"
+    process_based = True
+
+    def __init__(self, ctx=None):
+        self._ctx = ctx
+
+    def open(self, hop: HopSpec) -> Channel:
+        return ShmemChannel(hop, ctx=self._ctx)
+
+
+TRANSPORTS: dict[str, Callable[..., Transport]] = {
+    "emulated": EmulatedTransport,
+    "socket": SocketTransport,
+    "shmem": ShmemTransport,
+}
+
+
+def register_transport(name: str, factory: Callable[..., Transport]) -> None:
+    """Register a backend so scenarios/pipelines can name it."""
+    TRANSPORTS[name] = factory
+
+
+def get_transport(name: str, **kwargs) -> Transport:
+    try:
+        factory = TRANSPORTS[name]
+    except KeyError:
+        raise KeyError(f"unknown transport {name!r}; have "
+                       f"{sorted(TRANSPORTS)}") from None
+    return factory(**kwargs)
+
+
+# --------------------------------------------------------------------------- #
+# Worker host process body
+# --------------------------------------------------------------------------- #
+def _flush_stats(stage: int, worker, ingress: Channel):
+    """Drain this stage's compute stats + ingress observations into one
+    picklable control message, resetting both (delta semantics)."""
+    import psutil
+    from .edge import StageStats
+    s = worker.stats
+    worker.stats = StageStats()
+    records = [tuple(r) for r in ingress.drain_records()]
+    mem_pct = psutil.Process().memory_percent()
+    return ("stats", stage,
+            {"exe_s": s.exe_s, "calls": s.calls, "cpu_s": s.cpu_s},
+            mem_pct, records)
+
+
+def _worker_main(spec: dict) -> None:
+    """One pipeline stage as an OS process: recv → compute → send."""
+    from .edge import Worker
+
+    stage: int = spec["stage"]
+    ctrl = spec["ctrl"]
+    stop = spec["stop"]
+    ingress: Channel = spec["ingress"]
+    egress: Channel = spec["egress"]
+    bounds = tuple(spec["bounds"])
+    backend = spec["backend"]
+
+    def build(bounds):
+        return Worker(f"worker{stage + 1}", spec["model"], spec["params"],
+                      bounds[stage], bounds[stage + 1], backend,
+                      cpu_clock=time.process_time)
+
+    try:
+        worker = build(bounds)
+        ctrl.send(("ready", stage))
+        while not stop.is_set():
+            try:
+                kind, obj = ingress.recv(timeout=0.25)
+            except TransportTimeout:
+                continue
+            if kind == STOP:
+                egress.send(None, kind=STOP)
+                break
+            elif kind == BATCH:
+                egress.send(np.asarray(worker.run(obj)), kind=BATCH)
+            elif kind == WARMUP:
+                egress.send(np.asarray(worker.warmup(obj)), kind=WARMUP)
+            elif kind == PROBE:
+                egress.send(None, kind=PROBE)
+            elif kind == RECONFIG:
+                bounds = tuple(obj)
+                if (bounds[stage], bounds[stage + 1]) != (worker.lo, worker.hi):
+                    worker = build(bounds)
+                egress.send(obj, kind=RECONFIG)
+            elif kind == STATS:
+                ctrl.send(_flush_stats(stage, worker, ingress))
+                egress.send(obj, kind=STATS)
+            elif kind == CLOCK:
+                ingress.epoch = egress.epoch = float(obj)
+                egress.send(obj, kind=CLOCK)
+            elif kind == ERROR:               # propagate towards the sink
+                egress.send(obj, kind=ERROR)
+    except BaseException as e:  # noqa: BLE001 — reported, then the host exits
+        msg = f"stage {stage} ({type(e).__name__}): {e}"
+        for report in (lambda: ctrl.send(("error", stage, msg)),
+                       lambda: egress.send(msg, kind=ERROR)):
+            try:
+                report()
+            except Exception:
+                pass
+    finally:
+        ingress.close()
+        egress.close()
+
+
+# --------------------------------------------------------------------------- #
+# Trace recorder: measured records → replayable LinkTrace
+# --------------------------------------------------------------------------- #
+def record_trace(source, *, name: str = "recorded", bucket_s: float = 0.5,
+                 fallback: Link | None = None) -> LinkTrace:
+    """Convert drained ``TransferRecord``s from a real (measured)
+    channel into a replayable ``LinkTrace`` — measured runs seeding the
+    emulator.
+
+    Records are grouped into ``bucket_s`` windows of hop time; per
+    bucket the RTT comes from header-only probes (nbytes=0: elapsed ≈
+    one-way, so RTT = 2×mean) and the bandwidth from a least-squares
+    fit of elapsed = rtt/2 + overhead + nbytes/bw over the bucket's
+    data transfers (single-size buckets fall back to per-record
+    attribution).  Buckets inherit missing values from their
+    predecessor / the ``fallback`` link.
+
+    ``source`` is a Channel/HopObservations (drained) or an iterable of
+    ``(nbytes, elapsed_s, t_s)`` records.
+    """
+    if isinstance(source, HopObservations):
+        records = source.drain_records()
+        if fallback is None and isinstance(source.link, Link):
+            fallback = source.link
+    else:
+        records = [TransferRecord(*r) for r in source]
+    if not records:
+        raise ValueError("record_trace: no records to convert")
+    records = sorted(records, key=lambda r: r.t_s)
+
+    rtt = fallback.rtt_s if fallback is not None else None
+    overhead = fallback.per_msg_overhead_s if fallback is not None else 0.0
+    bw = fallback.bw_bytes_per_s if fallback is not None else None
+
+    knots: list[tuple[float, float, float]] = []
+    t0, t_end = records[0].t_s, records[-1].t_s
+    n_buckets = max(int((t_end - t0) / bucket_s) + 1, 1)
+    for b in range(n_buckets):
+        lo, hi = t0 + b * bucket_s, t0 + (b + 1) * bucket_s
+        group = [r for r in records
+                 if lo <= r.t_s < hi or (b == n_buckets - 1 and r.t_s == hi)]
+        if not group:
+            continue
+        probes = [r.elapsed_s for r in group if r.nbytes <= 0]
+        if probes:
+            rtt = 2.0 * float(np.mean(probes))
+        data = [r for r in group if r.nbytes > 0]
+        if data:
+            fit = fit_link_params([r.nbytes for r in data],
+                                  [r.elapsed_s for r in data], rtt or 0.0)
+            if fit is not None:               # joint fit: slope → 1/bw
+                bw, overhead = fit
+            else:                             # degenerate bucket: attribute
+                bw = float(np.mean([
+                    attribute_bandwidth(r.nbytes, r.elapsed_s, rtt or 0.0,
+                                        overhead) for r in data]))
+        if rtt is not None and bw is not None and bw > 0:
+            knots.append(((lo + min(hi, t_end)) / 2.0, float(rtt), float(bw)))
+    if not knots:
+        raise ValueError("record_trace: no bucket yielded both an RTT and "
+                         "a bandwidth estimate (need probes or a fallback "
+                         "link for the RTT)")
+    return LinkTrace(
+        name=name, schedule=tuple(knots),
+        per_msg_overhead_s=float(overhead),
+        energy_per_byte_j=(fallback.energy_per_byte_j
+                           if fallback is not None else 0.0),
+    )
