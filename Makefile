@@ -8,17 +8,22 @@
 #   make test            — tier-1 verify, the full suite (what CI runs)
 #   make bench-quick     — analytic benchmarks only (no wall-clock measuring)
 #   make bench-smoke     — 3-objective solver bench on a tiny graph (<30 s)
-#   make bench-transport — per-hop overhead, emulated vs real socket/shmem
-#                          processes on loopback (<30 s smoke tier)
+#   make bench-transport — per-hop overhead + payload-size sweep, emulated
+#                          vs real socket/shmem processes (<30 s smoke tier)
+#   make bench-transport-check
+#                        — fresh smoke measurement diffed against the
+#                          committed BENCH_transport.json; fails on a
+#                          >25% hop_us regression (the make-fast gate)
 #   make demo            — k-stage adaptive loop demo under a WAN ramp
 
 PY      ?= python
 PYTEST  ?= $(PY) -m pytest
 ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: fast test test-fast bench bench-quick bench-smoke bench-transport demo
+.PHONY: fast test test-fast bench bench-quick bench-smoke bench-transport \
+        bench-transport-check demo
 
-fast: test-fast bench-smoke bench-transport
+fast: test-fast bench-smoke bench-transport-check
 
 test:
 	$(ENV) $(PYTEST) -x -q
@@ -37,6 +42,9 @@ bench-smoke:
 
 bench-transport:
 	$(ENV) $(PY) -m benchmarks.transport_bench --smoke
+
+bench-transport-check:
+	$(ENV) $(PY) -m benchmarks.transport_bench --smoke --check
 
 demo:
 	$(ENV) $(PY) examples/kway_adaptive.py

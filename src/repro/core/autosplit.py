@@ -28,8 +28,8 @@ from typing import Literal, Sequence
 
 from .blocks import BlockGraph
 from .costmodel import CostTable, PipelineMetrics, evaluate_pipeline
-from .devices import (Link, LinkTrace, attribute_bandwidth, fit_link_params,
-                      link_at)
+from .devices import (Link, LinkTrace, attribute_bandwidth,
+                      fit_link_params_robust, link_at)
 from .pareto import knee_point
 from .partitioner import best_energy, best_latency, best_throughput, solve
 from .scenarios import Scenario
@@ -86,9 +86,12 @@ class LinkEstimator:
         self.bw_bytes_per_s = (1 - self.alpha) * self.bw_bytes_per_s + self.alpha * bw
 
     def _fit(self) -> bool:
-        """Joint least-squares of (overhead, bw) over the window; False
-        when the window is degenerate (single message size / bad slope)."""
-        fit = fit_link_params(self._nbytes, self._elapsed, self.rtt_s)
+        """Joint least-squares of (overhead, bw) over the window,
+        MAD-gated (``fit_link_params_robust``) so the heavy-tailed
+        records a *real* transport produces (scheduler preemption
+        inflating a few transfers) do not drag the slope; False when
+        the window is degenerate (single message size / bad slope)."""
+        fit = fit_link_params_robust(self._nbytes, self._elapsed, self.rtt_s)
         if fit is None:
             return False                       # keep the EWMA fallback
         bw, overhead = fit

@@ -179,6 +179,41 @@ def fit_link_params(nbytes_list, elapsed_list,
     return 1.0 / float(slope), max(float(intercept) - rtt_s / 2.0, 0.0)
 
 
+def fit_link_params_robust(nbytes_list, elapsed_list, rtt_s: float,
+                           n_iter: int = 3, k_mad: float = 4.0
+                           ) -> tuple[float, float] | None:
+    """Outlier-robust variant of ``fit_link_params`` for heavy-tailed
+    *measured* records (real socket/shmem transfers pick up scheduler
+    preemption and allocator hiccups that a plain least-squares fit
+    chases).  MAD-gated: fit, drop samples whose residual exceeds
+    ``k_mad`` × 1.4826 × MAD of the window's residuals, refit on the
+    survivors; repeat until stable.  A clean window has zero residual
+    spread, drops nothing, and degrades exactly to the plain fit."""
+    import numpy as np
+    xs = np.asarray(nbytes_list, dtype=float)
+    ys = np.asarray(elapsed_list, dtype=float)
+    fit = fit_link_params(xs, ys, rtt_s)
+    if fit is None:
+        return None
+    for _ in range(n_iter):
+        bw, overhead = fit
+        resid = ys - (rtt_s / 2.0 + overhead + xs / bw)
+        med = float(np.median(resid))
+        width = k_mad * 1.4826 * float(np.median(np.abs(resid - med)))
+        if width <= 0.0:
+            break                              # clean window: nothing to gate
+        keep = np.abs(resid - med) <= width
+        # never gate the window into degeneracy: the fit needs several
+        # samples across more than one message size
+        if keep.all() or keep.sum() < 4 or len(np.unique(xs[keep])) < 2:
+            break
+        refit = fit_link_params(xs[keep], ys[keep], rtt_s)
+        if refit is None:
+            break
+        fit = refit
+    return fit
+
+
 def attribute_bandwidth(nbytes: float, elapsed_s: float, rtt_s: float,
                         overhead_s: float = 0.0) -> float:
     """Single-transfer bandwidth attribution: serviceable time is

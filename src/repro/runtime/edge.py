@@ -322,7 +322,11 @@ class _ProcessEngine:
                 depth=(pipe.queue_depth if internal
                        else max(pipe.queue_depth * k, 1)),
                 seed=pipe.seed + j, epoch=pipe.epoch,
-                scenario_hop=internal, send_timeout_s=pipe.timeout_s)
+                scenario_hop=internal, send_timeout_s=pipe.timeout_s,
+                # every hop whose receiver is a worker loop may hand out
+                # transport-owned views; the result drain hands arrays
+                # back to user code, so it pays the one defensive copy
+                zero_copy=(j != k))
             self._pairs.append(trs[chan_names[j]].open(spec).split())
         self._feed = self._pairs[0][0]
         self._result = self._pairs[k][1]
@@ -496,6 +500,11 @@ class _ProcessEngine:
                     end.close()
                 except Exception:
                     pass
+        for pair in self._pairs:              # workers are joined: reclaim
+            try:                              # segments a killed worker
+                pair[0].reap()                # never cleaned up
+            except Exception:
+                pass
         for c in self._ctrls:
             try:
                 c.close()

@@ -9,8 +9,14 @@ the hop layer first-class so backend cost can be either:
     stages as threads in this process; or
   * **measured** — ``socket``: real TCP between ``multiprocessing``
     worker processes on loopback, with the paper's lightweight wire
-    format (fixed header + raw tensor bytes); and ``shmem``: a
-    shared-memory ring between processes for the zero-copy local case.
+    format (one packed ``struct`` header + raw tensor bytes, vectored
+    ``sendmsg``, reusable receive buffer); and ``shmem``: a doorbell
+    ring in shared memory for the zero-copy local case (packed
+    metadata records + seq-counter publish + socketpair doorbell, slot
+    segments that grow on demand, ``np.frombuffer`` receive views).
+    Pickle never touches the hot path on either backend — it survives
+    only as the escape hatch for exotic metadata and as the
+    deliberately heavyweight ``rpc`` framing under study.
 
 Every hop is a ``Channel`` (``send(payload, kind)`` / ``recv()`` /
 ``close()`` / ``drain_records()``); a ``Transport`` opens one channel
@@ -91,6 +97,19 @@ class HopSpec:
     # hops of the scenario being measured)
     scenario_hop: bool = True
     send_timeout_s: float = 180.0   # bound on blocking sends (shmem ring)
+    # zero-copy receive: the array handed out by recv() may be a view
+    # over transport-owned memory (a shmem slot / the reusable socket
+    # buffer) that is only valid until the *next* recv() on the channel.
+    # True for hops whose receiver consumes the batch immediately (the
+    # worker loop: run → block_until_ready → send precedes the next
+    # recv); False where the payload outlives the call (the result drain
+    # handing arrays back to user code), which buys one defensive copy.
+    zero_copy: bool = True
+    # shmem busy-poll window (µs) before a waiter parks on the doorbell.
+    # The default keeps idle waiters cheap; latency microbenches widen
+    # it so back-to-back transfers stay on the spin path instead of
+    # paying a scheduler wakeup per message.
+    spin_us: float = 80.0
 
 
 # --------------------------------------------------------------------------- #
@@ -110,20 +129,6 @@ class _Serializer:
         return np.frombuffer(raw, dtype=dtype).reshape(shape)
 
 
-def _encode(payload, framing: str) -> tuple[tuple, bytes]:
-    """→ (meta, wire bytes).  Arrays go as raw tensor bytes under the
-    lightweight framing, or through a full pickle round trip under the
-    rpc framing; non-array control payloads ride in the (small) meta."""
-    if payload is None:
-        return ("O", None), b""
-    if isinstance(payload, np.ndarray) or hasattr(payload, "dtype"):
-        if framing == "pickle":
-            return ("P",), _Serializer.dumps(payload)
-        host = np.ascontiguousarray(np.asarray(payload))
-        return ("R", host.shape, str(host.dtype)), host.tobytes()
-    return ("O", payload), b""
-
-
 def _decode(meta: tuple, payload: bytes):
     tag = meta[0]
     if tag == "R":
@@ -131,6 +136,97 @@ def _decode(meta: tuple, payload: bytes):
     if tag == "P":
         return _Serializer.loads(payload)
     return meta[1]
+
+
+# --------------------------------------------------------------------------- #
+# Packed framing — the zero-pickle fast path for the process transports.
+#
+# The common case (a contiguous tensor of a registered dtype, ≤ 8 dims)
+# travels as one fixed ``struct``-packed header plus the raw payload
+# bytes; ``pickle`` survives only as the escape hatch for exotic
+# metadata (unregistered dtypes, > 8 dims, the rpc framing's full
+# serialize round trip) and for non-array control payloads.
+# --------------------------------------------------------------------------- #
+_F_EMPTY, _F_RAW, _F_OBJ, _F_PICKLE = range(4)
+
+# dtypes the packed header can name by code; anything else escapes to
+# the pickled-meta path (order is wire format — append only)
+_DTYPES = ("float32", "float64", "float16", "bfloat16",
+           "int8", "int16", "int32", "int64",
+           "uint8", "uint16", "uint32", "uint64",
+           "bool", "complex64", "complex128")
+_DTYPE_CODE = {n: i for i, n in enumerate(_DTYPES)}
+_MAX_NDIM = 8
+
+
+def _dtype_of(code: int) -> np.dtype:
+    """Resolve a wire dtype code.  Extension dtypes (``bfloat16``) only
+    parse once ``ml_dtypes`` has registered them with numpy — a sender
+    that imported jax frames them as ``_F_RAW``, so a receiver that has
+    not must pull in the registration rather than fail the decode."""
+    name = _DTYPES[code]
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # noqa: F401 — import registers the dtype
+        return np.dtype(name)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length()
+
+
+def _frame(payload, framing: str) -> tuple[int, int, tuple, object, bytes]:
+    """→ (ftype, dtype code, shape, payload buffer, pickled meta).
+
+    The payload buffer is a ``memoryview`` over the source array where
+    possible, so socket sends can scatter-gather straight out of it and
+    shmem sends copy exactly once (into the slot)."""
+    if payload is None:
+        return _F_EMPTY, 0, (), b"", b""
+    if isinstance(payload, np.ndarray) or hasattr(payload, "dtype"):
+        if framing == "pickle":
+            return _F_PICKLE, 0, (), _Serializer.dumps(payload), \
+                pickle.dumps(("P",))
+        host = np.asarray(payload)
+        if not host.flags.c_contiguous:       # NB: ascontiguousarray would
+            host = np.ascontiguousarray(host)  # flatten 0-d shapes
+        code = _DTYPE_CODE.get(host.dtype.name, -1)
+        if code >= 0 and host.ndim <= _MAX_NDIM:
+            data = host.data.cast("B") if host.size else b""
+            return _F_RAW, code, host.shape, data, b""
+        return _F_PICKLE, 0, (), host.tobytes(), \
+            pickle.dumps(("R", host.shape, str(host.dtype)))
+    return _F_OBJ, 0, (), pickle.dumps(payload), b""
+
+
+def _unframe(ftype: int, code: int, shape: tuple, buf, meta_buf):
+    """Inverse of ``_frame`` over received buffers.  For ``_F_RAW`` the
+    result is a zero-copy ``np.frombuffer`` view over ``buf`` — the
+    caller decides whether that view may outlive the buffer."""
+    if ftype == _F_EMPTY:
+        return None
+    if ftype == _F_RAW:
+        return np.frombuffer(buf, dtype=_dtype_of(code)).reshape(shape)
+    if ftype == _F_OBJ:
+        return pickle.loads(buf)
+    return _decode(pickle.loads(meta_buf), bytes(buf))
+
+
+def as_jax(x):
+    """Ingest a (possibly transport-owned) numpy view into jax via
+    dlpack where available — the device put aliases host memory on the
+    CPU backend instead of copying.  Safe under the zero-copy lease
+    because the worker loop calls ``block_until_ready`` before the next
+    recv() releases the buffer.  Falls back to handing jax the ndarray
+    (one host copy at dispatch)."""
+    if isinstance(x, np.ndarray) and x.size:
+        try:
+            import jax.dlpack
+            return jax.dlpack.from_dlpack(x)
+        except Exception:
+            return x
+    return x
 
 
 # --------------------------------------------------------------------------- #
@@ -221,6 +317,12 @@ class Channel(HopObservations, ABC):
     def close(self) -> None:  # pragma: no cover - overridden where needed
         pass
 
+    def reap(self) -> None:
+        """Force-release any OS resources this hop may have left behind
+        even in *other* (possibly killed) processes — called by the
+        orchestrator after worker processes are joined.  No-op for
+        in-process channels."""
+
 
 class EmulatedChannel(Channel):
     """tc-netem analogue (the former ``EmulatedLink``): sleeps
@@ -277,16 +379,21 @@ class EmulatedChannel(Channel):
                 from None
 
 
-_HDR = struct.Struct("!BdI Q")        # kind, t_send, meta_len, payload_len
+# packed socket frame: ftype, kind, dtype code, ndim, meta_len, t_send,
+# payload_len, shape[8] — everything the common tensor case needs in one
+# fixed-size read, no pickled metadata on the wire (mlen = 0)
+_FHDR = struct.Struct("!BBbB I d Q 8q")
 
 
 class SocketChannel(Channel):
     """Real TCP on loopback with the paper's lightweight wire format:
-    one fixed header (kind, send-start stamp, lengths) + small pickled
-    meta + raw tensor bytes.  The receiving end measures each data
-    transfer as wall-clock from the sender's send-start stamp through
-    full deserialization — serialization cost is *in* the number, which
-    is exactly the rpc-vs-lightweight difference the paper measures."""
+    one fixed ``struct``-packed header + raw tensor bytes (pickled meta
+    only on the escape path), vectored header+payload writes via
+    ``sendmsg``, and a reusable preallocated receive buffer.  The
+    receiving end measures each data transfer as wall-clock from the
+    sender's send-start stamp through full deserialization —
+    serialization cost is *in* the number, which is exactly the
+    rpc-vs-lightweight difference the paper measures."""
 
     measured = True
 
@@ -307,6 +414,21 @@ class SocketChannel(Channel):
             self._tx, self._rx = tx, rx
         for s in {self._tx, self._rx} - {None}:
             s.setsockopt(socketlib.IPPROTO_TCP, socketlib.TCP_NODELAY, 1)
+        self._init_bufs()
+
+    def _init_bufs(self) -> None:
+        self._hbuf = bytearray(_FHDR.size)
+        self._rbuf = bytearray(1 << 16)       # reusable payload buffer
+
+    def __setstate__(self, state):
+        super().__setstate__(state)
+        self._init_bufs()
+
+    def __getstate__(self):
+        state = super().__getstate__()
+        state.pop("_hbuf", None)
+        state.pop("_rbuf", None)
+        return state
 
     def split(self):
         tx = SocketChannel(self.hop, _pair=(self._tx, None))
@@ -317,48 +439,69 @@ class SocketChannel(Channel):
         if self._tx is None:
             raise TransportError(f"hop {self.hop.index}: receive-only end")
         t0 = time.perf_counter()              # serialization counts
-        meta, data = _encode(payload, self.hop.framing)
-        mbuf = pickle.dumps(meta)
-        hdr = _HDR.pack(kind, t0, len(mbuf), len(data))
+        ftype, code, shape, data, meta = _frame(payload, self.hop.framing)
+        hdr = _FHDR.pack(ftype, kind, code, len(shape), len(meta), t0,
+                         len(data), *shape, *((0,) * (8 - len(shape))))
+        bufs = [memoryview(hdr)]
+        if meta:
+            bufs.append(memoryview(meta))
+        if len(data):
+            bufs.append(memoryview(data))
         try:
-            self._tx.sendall(hdr + mbuf)
-            if data:
-                self._tx.sendall(data)
+            while bufs:
+                n = self._tx.sendmsg(bufs)    # vectored: no concat copy
+                while bufs and n >= len(bufs[0]):
+                    n -= len(bufs.pop(0))
+                if bufs and n:
+                    bufs[0] = bufs[0][n:]
         except OSError as e:
             raise TransportError(
                 f"hop {self.hop.index}: peer gone ({e})") from e
         return None
 
-    def _read_exact(self, n: int, timeout: float | None) -> bytes:
-        buf = bytearray()
+    def _read_into(self, view: memoryview, timeout: float | None) -> None:
+        """Fill ``view`` exactly; the timeout bounds only the wait for
+        the first byte (mid-message reads keep going)."""
+        got, n = 0, len(view)
         self._rx.settimeout(timeout)
-        while len(buf) < n:
+        while got < n:
             try:
-                chunk = self._rx.recv(min(n - len(buf), 1 << 20))
+                k = self._rx.recv_into(view[got:])
             except socketlib.timeout:
-                if not buf:
+                if not got:
                     raise TransportTimeout(
                         f"hop {self.hop.index}: recv timed out") from None
                 continue                      # mid-message: keep reading
             except OSError as e:
                 raise TransportError(
                     f"hop {self.hop.index}: peer gone ({e})") from e
-            if not chunk:
+            if not k:
                 raise TransportError(f"hop {self.hop.index}: peer closed")
-            buf += chunk
-        return bytes(buf)
+            got += k
+            if got < n and self._rx.gettimeout() is not None:
+                self._rx.settimeout(None)     # header started arriving
 
     def recv(self, timeout: float | None = None):
         if self._rx is None:
             raise TransportError(f"hop {self.hop.index}: send-only end")
-        hdr = self._read_exact(_HDR.size, timeout)
-        kind, t0, mlen, plen = _HDR.unpack(hdr)
-        meta = pickle.loads(self._read_exact(mlen, None)) if mlen else ("O", None)
-        data = self._read_exact(plen, None) if plen else b""
-        payload = _decode(meta, data)
+        self._read_into(memoryview(self._hbuf), timeout)
+        (ftype, kind, code, ndim, mlen, t0, plen,
+         *shape) = _FHDR.unpack(self._hbuf)
+        meta = b""
+        if mlen:
+            meta = bytearray(mlen)
+            self._read_into(memoryview(meta), None)
+        if plen > len(self._rbuf):
+            self._rbuf = bytearray(_next_pow2(plen))
+        view = memoryview(self._rbuf)[:plen]
+        if plen:
+            self._read_into(view, None)
+        payload = _unframe(ftype, code, tuple(shape[:ndim]), view, meta)
+        if (ftype == _F_RAW and not self.hop.zero_copy
+                and isinstance(payload, np.ndarray)):
+            payload = payload.copy()          # outlives the reusable buffer
         if kind in (BATCH, PROBE) and self.hop.scenario_hop:
-            self.record(plen, time.perf_counter() - t0,
-                        t0 - self.epoch)
+            self.record(plen, time.perf_counter() - t0, t0 - self.epoch)
         return kind, payload
 
     def close(self) -> None:
@@ -371,33 +514,219 @@ class SocketChannel(Channel):
         self._tx = self._rx = None
 
 
+# shmem control ring: fixed-stride metadata records packed directly into
+# the shared control segment — ftype, kind, dtype code, ndim, slot index
+# (-1 = inline/none), meta_len, inline_len, t_send, nbytes, shape[8];
+# the rest of the stride is the inline area (pickled meta + small
+# payloads ride in the record itself, no slot round trip)
+_RREC = struct.Struct("<BBbB i I I d Q 8q")
+_STRIDE = 256
+_INLINE = _STRIDE - _RREC.size
+_BELL_CHUNK_S = 0.05    # re-check cadence while parked on the doorbell
+
+# shmem mappings that could not unmap at close() because user-held
+# zero-copy views still export their buffer — kept alive to silence
+# SharedMemory.__del__; the OS reclaims the pages at process exit
+_PINNED_MAPPINGS: list = []
+
+
 class ShmemChannel(Channel):
     """Shared-memory ring between processes for the zero-copy local
-    case: payload bytes land in reusable ``SharedMemory`` slots, a
-    metadata queue carries (kind, meta, slot, nbytes, t_send), and a
-    free-slot queue provides ``depth``-bounded backpressure.  Slots grow
-    on demand (the sender replaces a too-small freed slot)."""
+    case.  One control segment carries everything that used to ride two
+    ``mp.Queue``s (pickle + pipe + feeder thread per transfer):
+
+      * a single-producer/single-consumer **data ring** of packed
+        ``_RREC`` metadata records, published by bumping a seq counter
+        (write the record, then the counter — a lock-free doorbell);
+      * a **free ring** of slot indices flowing back from receiver to
+        sender (``depth``-bounded backpressure, slot reuse);
+      * a **slot name table** so payload slots can grow on demand (the
+        sender replaces a too-small slot and republishes its name).
+
+    Payload bytes land in per-slot ``SharedMemory`` segments (small
+    payloads inline in the record itself) and the receive path is
+    zero-copy: ``recv`` returns an ``np.frombuffer`` view over the
+    mapped slot, which stays leased — excluded from the free ring —
+    until the *next* ``recv`` (one extra slot backs the lease so the
+    ring keeps its nominal depth).  Waiters spin for ``hop.spin_us`` and
+    then park on a socketpair doorbell (the portable futex stand-in:
+    wakeup bytes persist, so the publish-then-ring protocol cannot lose
+    a wakeup), re-checking the counters every ``_BELL_CHUNK_S`` as a
+    liveness backstop."""
 
     measured = True
 
-    def __init__(self, hop: HopSpec, ctx=None):
-        super().__init__(hop)
-        if ctx is None:
-            import multiprocessing as mp
-            ctx = mp.get_context("spawn")
-        self._meta_q = ctx.Queue()
-        self._free_q = ctx.Queue()
-        for _ in range(max(hop.depth, 1)):
-            self._free_q.put(None)            # tokens; None = no slot yet
-        self._pool: dict = {}                 # sender: name -> SharedMemory
-        self._attached: dict = {}             # receiver: name -> SharedMemory
-        self._role = "both"
+    # control-segment offsets: the four seq counters live on their own
+    # cache lines, then the slot name table, free ring, and data ring
+    _DH, _DT, _FH, _FT = 0, 64, 128, 192
 
+    def __init__(self, hop: HopSpec, ctx=None):  # ctx kept for API compat
+        from multiprocessing import shared_memory
+        super().__init__(hop)
+        self._layout(max(hop.depth, 1))
+        self._ctl = shared_memory.SharedMemory(create=True,
+                                               size=self._ctl_size)
+        self._ctl_name = self._ctl.name
+        self._ctl_owner = True
+        # doorbells: (data send, data recv) + (free send, free recv)
+        self._bell_ds, self._bell_dr = socketlib.socketpair()
+        self._bell_fs, self._bell_fr = socketlib.socketpair()
+        for s in (self._bell_ds, self._bell_fs):
+            s.setblocking(False)
+        self._pool: dict = {}                 # sender: slot idx -> SharedMemory
+        self._attached: dict = {}             # receiver: idx -> (name, shm)
+        self._lease: int | None = None        # slot behind the last recv view
+        self._role = "both"
+        for i in range(self._n_slots):        # all slots start free (no
+            self._push_free(i, ring=False)    # segment until first use)
+
+    def _layout(self, depth: int) -> None:
+        self._depth = depth
+        self._spin_s = self.hop.spin_us * 1e-6
+        self._n_slots = depth + 1             # +1 backs the zero-copy lease
+        self._cap = _next_pow2(depth + 8)     # data ring: depth + control slack
+        self._fcap = _next_pow2(self._n_slots)
+        self._tab_off = 256
+        self._free_off = self._tab_off + 32 * self._n_slots
+        self._rec_off = -(-(self._free_off + 8 * self._fcap) // 64) * 64
+        self._ctl_size = self._rec_off + _STRIDE * self._cap
+
+    # -- counters + doorbells ------------------------------------------- #
+    def _ld(self, off: int) -> int:
+        return struct.unpack_from("<Q", self._ctl.buf, off)[0]
+
+    def _st(self, off: int, v: int) -> None:
+        struct.pack_into("<Q", self._ctl.buf, off, v)
+
+    @staticmethod
+    def _ring(bell) -> None:
+        try:
+            bell.send(b"\0")
+        except (BlockingIOError, OSError):
+            pass                              # buffered bytes already pending
+
+    def _wait(self, ready, bell, timeout: float | None, what: str,
+              err=TransportTimeout) -> None:
+        """Spin briefly, then park on the doorbell until ``ready()``."""
+        if ready():
+            return
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        spin_until = time.perf_counter() + self._spin_s
+        while True:
+            if ready():
+                return
+            now = time.perf_counter()
+            if now < spin_until:
+                continue
+            if deadline is not None and now >= deadline:
+                raise err(f"hop {self.hop.index}: {what}")
+            chunk = (_BELL_CHUNK_S if deadline is None
+                     else min(deadline - now, _BELL_CHUNK_S))
+            try:
+                bell.settimeout(chunk)
+                bell.recv(4096)               # drain coalesced rings too
+            except (socketlib.timeout, BlockingIOError):
+                pass
+            except OSError as e:
+                raise TransportError(
+                    f"hop {self.hop.index}: doorbell gone ({e})") from e
+
+    # -- free ring (receiver -> sender) --------------------------------- #
+    def _push_free(self, idx: int, ring: bool = True) -> None:
+        fh = self._ld(self._FH)
+        struct.pack_into("<Q", self._ctl.buf,
+                         self._free_off + (fh % self._fcap) * 8, idx)
+        self._st(self._FH, fh + 1)
+        if ring:
+            self._ring(self._bell_fs)
+
+    def _pop_free(self) -> int:
+        def ready():
+            avail = self._ld(self._FH) - self._ld(self._FT)
+            return 0 < avail <= self._n_slots  # clamp guards a torn read
+        self._wait(ready, self._bell_fr, self.hop.send_timeout_s,
+                   f"no free shmem slot for {self.hop.send_timeout_s:.0f}s "
+                   f"(receiver gone?)", err=TransportError)
+        ft = self._ld(self._FT)
+        idx = struct.unpack_from(
+            "<Q", self._ctl.buf, self._free_off + (ft % self._fcap) * 8)[0]
+        self._st(self._FT, ft + 1)
+        return int(idx)
+
+    # -- payload slots --------------------------------------------------- #
+    def _tab_name(self, idx: int) -> str:
+        off = self._tab_off + 32 * idx
+        return bytes(self._ctl.buf[off:off + 32]).rstrip(b"\0").decode()
+
+    def _get_slot(self, nbytes: int) -> tuple[int, memoryview]:
+        from multiprocessing import shared_memory
+        idx = self._pop_free()
+        shm = self._pool.get(idx)
+        if shm is None and (name := self._tab_name(idx)):
+            # a pre-split sender populated this slot; adopt it
+            try:
+                shm = self._pool[idx] = shared_memory.SharedMemory(name=name)
+            except FileNotFoundError:
+                shm = None
+        if shm is None or shm.size < nbytes:
+            if shm is not None:               # outgrown: replace the slot
+                shm.close()
+                try:
+                    shm.unlink()
+                except FileNotFoundError:
+                    pass
+            shm = shared_memory.SharedMemory(
+                create=True, size=_next_pow2(max(nbytes, 1 << 16)))
+            self._pool[idx] = shm
+            off = self._tab_off + 32 * idx    # republish before the record
+            name = shm.name.encode()
+            self._ctl.buf[off:off + 32] = name + b"\0" * (32 - len(name))
+        return idx, shm.buf
+
+    def _slot_view(self, idx: int, nbytes: int) -> memoryview:
+        from multiprocessing import shared_memory
+        name = self._tab_name(idx)
+        cached = self._attached.get(idx)
+        if cached is None or cached[0] != name:
+            if cached is not None:            # stale: the sender grew the slot
+                try:
+                    cached[1].close()
+                except BufferError:           # an older view still pins it
+                    _PINNED_MAPPINGS.append(cached[1])
+            try:
+                # NB: attaching re-registers the segment with the
+                # resource tracker, but worker hosts inherit the
+                # orchestrator's tracker, so the set-add is idempotent
+                # and the creator's unlink still unregisters exactly once
+                shm = shared_memory.SharedMemory(name=name)
+            except FileNotFoundError:
+                raise TransportError(
+                    f"hop {self.hop.index}: shmem slot {name!r} gone "
+                    f"(peer closed)") from None
+            cached = self._attached[idx] = (name, shm)
+        return cached[1].buf[:nbytes]
+
+    # -- lifecycle across processes / split ------------------------------ #
     def __getstate__(self):
         state = super().__getstate__()
+        state.pop("_ctl", None)
         state["_pool"] = {}
         state["_attached"] = {}
+        state["_lease"] = None
+        # the shipped copy inherits unlink duty for the control segment;
+        # this (parent) copy relinquishes it, so the parent closing its
+        # handles on shipped ends cannot yank the segment from under a
+        # worker that has not attached yet (double unlink is tolerated)
+        state["_ctl_owner"] = True
+        self._ctl_owner = False
         return state
+
+    def __setstate__(self, state):
+        from multiprocessing import shared_memory
+        super().__setstate__(state)
+        self._layout(self._depth)
+        self._ctl = shared_memory.SharedMemory(name=self._ctl_name)
 
     def split(self):
         import copy
@@ -405,99 +734,166 @@ class ShmemChannel(Channel):
         tx.__setstate__(tx.__getstate__())    # fresh caches/locks per end
         rx.__setstate__(rx.__getstate__())
         tx._role, rx._role = "send", "recv"
+        # each end keeps only its own doorbell fds, so closing one end
+        # (e.g. the parent's copy of a shipped end) cannot silence the
+        # other's bells
+        tx._bell_dr = tx._bell_fs = None
+        rx._bell_ds = rx._bell_fr = None
         return tx, rx
 
-    def _get_slot(self, nbytes: int):
-        from multiprocessing import shared_memory
-        # depth-bounded backpressure, but never an unbounded block: a
-        # dead receiver returns no tokens, and a sender stuck here can
-        # hang an orchestrator whose liveness checks live on the recv
-        # path — so give up loudly after send_timeout_s
-        deadline = time.perf_counter() + self.hop.send_timeout_s
-        while True:
-            try:
-                token = self._free_q.get(timeout=0.5)
-                break
-            except queue.Empty:
-                if time.perf_counter() > deadline:
-                    raise TransportError(
-                        f"hop {self.hop.index}: no free shmem slot for "
-                        f"{self.hop.send_timeout_s:.0f}s (receiver gone?)"
-                    ) from None
-        if token is not None:
-            shm = self._pool.get(token)
-            if shm is not None and shm.size >= nbytes:
-                return token
-            if shm is not None:               # outgrown: replace the slot
-                shm.close()
-                try:
-                    shm.unlink()
-                except FileNotFoundError:
-                    pass
-                del self._pool[token]
-        shm = shared_memory.SharedMemory(create=True,
-                                         size=max(nbytes, 1 << 16))
-        self._pool[shm.name] = shm
-        return shm.name
-
+    # -- hot path --------------------------------------------------------- #
     def send(self, payload=None, kind: int = BATCH):
         t0 = time.perf_counter()              # serialization + copy count
-        meta, data = _encode(payload, self.hop.framing)
-        name = None
-        if data:
-            name = self._get_slot(len(data))
-            self._pool[name].buf[:len(data)] = data
-        self._meta_q.put((kind, meta, name, len(data), t0))
+        ftype, code, shape, data, meta = _frame(payload, self.hop.framing)
+        nbytes, mlen = len(data), len(meta)
+        if mlen > _INLINE:
+            raise TransportError(
+                f"hop {self.hop.index}: {mlen} B of pickled metadata "
+                f"exceeds the {_INLINE} B inline area")
+        slot, ilen = -1, 0
+        if nbytes:
+            if mlen + nbytes <= _INLINE:
+                ilen = nbytes                 # small payload: ride inline
+            else:
+                slot, buf = self._get_slot(nbytes)
+                buf[:nbytes] = memoryview(data)
+        # 0 <= used: a torn read of the receiver-written tail counter
+        # must block the publish, never overwrite an unconsumed record
+        self._wait(lambda: 0 <= self._ld(self._DH) - self._ld(self._DT)
+                   < self._cap,
+                   self._bell_fr, self.hop.send_timeout_s,
+                   f"control ring full for {self.hop.send_timeout_s:.0f}s "
+                   f"(receiver gone?)", err=TransportError)
+        head = self._ld(self._DH)
+        base = self._rec_off + (head % self._cap) * _STRIDE
+        _RREC.pack_into(self._ctl.buf, base, ftype, kind, code, len(shape),
+                        slot, mlen, ilen, t0, nbytes,
+                        *shape, *((0,) * (8 - len(shape))))
+        inl = base + _RREC.size
+        if mlen:
+            self._ctl.buf[inl:inl + mlen] = meta
+        if ilen:
+            self._ctl.buf[inl + mlen:inl + mlen + ilen] = memoryview(data)
+        self._st(self._DH, head + 1)          # publish, then ring
+        self._ring(self._bell_ds)
         return None
 
-    def _attach(self, name: str):
-        from multiprocessing import shared_memory
-        shm = self._attached.get(name)
-        if shm is None:
-            # NB: attaching re-registers the segment with the resource
-            # tracker, but worker hosts inherit the orchestrator's
-            # tracker, so the set-add is idempotent and the creator's
-            # unlink still unregisters exactly once
-            shm = shared_memory.SharedMemory(name=name)
-            self._attached[name] = shm
-        return shm
-
     def recv(self, timeout: float | None = None):
-        try:
-            item = self._meta_q.get(timeout=timeout)
-        except queue.Empty:
-            raise TransportTimeout(
-                f"hop {self.hop.index}: recv timed out") from None
-        kind, meta, name, nbytes, t0 = item
-        data = b""
-        if name is not None:
-            shm = self._attach(name)
-            data = bytes(shm.buf[:nbytes])
-            self._free_q.put(name)
-        payload = _decode(meta, data)
+        if self._lease is not None:           # the handed-out view's slot
+            self._push_free(self._lease)      # is only reclaimed now
+            self._lease = None
+
+        def ready():
+            avail = self._ld(self._DH) - self._ld(self._DT)
+            return 0 < avail <= self._cap     # clamp guards a torn read
+        self._wait(ready, self._bell_dr, timeout, "recv timed out")
+        tail = self._ld(self._DT)
+        base = self._rec_off + (tail % self._cap) * _STRIDE
+        (ftype, kind, code, ndim, slot, mlen, ilen, t0, nbytes,
+         *shape) = _RREC.unpack_from(self._ctl.buf, base)
+        inl = base + _RREC.size
+        meta = bytes(self._ctl.buf[inl:inl + mlen]) if mlen else b""
+        if slot >= 0:
+            view = self._slot_view(slot, nbytes)
+            payload = _unframe(ftype, code, tuple(shape[:ndim]), view, meta)
+            if ftype == _F_RAW and self.hop.zero_copy:
+                self._lease = slot            # view stays valid until next recv
+            else:
+                if ftype == _F_RAW and isinstance(payload, np.ndarray):
+                    payload = payload.copy()  # outlives the slot
+                self._push_free(slot)
+        else:
+            # inline payloads are copied out — the ring record is reused
+            # after one wraparound, sooner than any lease could track
+            buf = bytes(self._ctl.buf[inl + mlen:inl + mlen + ilen])
+            payload = _unframe(ftype, code, tuple(shape[:ndim]), buf, meta)
+        was_full = self._ld(self._DH) - tail >= self._cap
+        self._st(self._DT, tail + 1)
+        if was_full:                          # unblock a ring-full sender
+            self._ring(self._bell_fs)
         if kind in (BATCH, PROBE) and self.hop.scenario_hop:
             self.record(nbytes, time.perf_counter() - t0, t0 - self.epoch)
         return kind, payload
 
     def close(self) -> None:
-        for shm in self._attached.values():
+        if self._lease is not None:
+            try:
+                self._push_free(self._lease)
+            except Exception:
+                pass
+            self._lease = None
+        for _, shm in self._attached.values():
             try:
                 shm.close()
+            except BufferError:
+                # a zero-copy view handed out by recv() still pins this
+                # mapping; park the object so its __del__ never runs (the
+                # pages are reclaimed at process exit — unlink already
+                # removed the name)
+                _PINNED_MAPPINGS.append(shm)
             except Exception:
                 pass
         for shm in self._pool.values():
             try:
+                shm.unlink()                  # before close: a pinned
+            except Exception:                 # mapping must not skip it
+                pass
+            try:
                 shm.close()
-                shm.unlink()
+            except BufferError:
+                _PINNED_MAPPINGS.append(shm)
             except Exception:
                 pass
         self._pool.clear()
         self._attached.clear()
-        for q in (self._meta_q, self._free_q):
+        ctl = getattr(self, "_ctl", None)
+        if ctl is not None:
             try:
-                q.cancel_join_thread()
+                ctl.close()
             except Exception:
                 pass
+            if self._ctl_owner:
+                try:
+                    ctl.unlink()
+                except FileNotFoundError:
+                    pass
+                except Exception:
+                    pass
+            self._ctl = None
+        for bell in (self._bell_ds, self._bell_dr,
+                     self._bell_fs, self._bell_fr):
+            if bell is not None:
+                try:
+                    bell.close()
+                except OSError:
+                    pass
+
+    def reap(self) -> None:
+        """Unlink the control segment and every slot named in its table
+        regardless of ownership or close() state — a SIGKILL'd worker
+        never ran close(), and its segments must not outlive the
+        pipeline.  Reattaches by name, so it works on any end."""
+        from multiprocessing import shared_memory
+        try:
+            ctl = shared_memory.SharedMemory(name=self._ctl_name)
+        except (FileNotFoundError, OSError):
+            return                            # already fully torn down
+        for i in range(self._n_slots):
+            off = self._tab_off + 32 * i
+            name = bytes(ctl.buf[off:off + 32]).rstrip(b"\0").decode()
+            if not name:
+                continue
+            try:
+                shm = shared_memory.SharedMemory(name=name)
+                shm.close()
+                shm.unlink()
+            except Exception:
+                pass
+        ctl.close()
+        try:
+            ctl.unlink()
+        except Exception:
+            pass
 
 
 # --------------------------------------------------------------------------- #
@@ -613,9 +1009,13 @@ def _worker_main(spec: dict) -> None:
                 egress.send(None, kind=STOP)
                 break
             elif kind == BATCH:
-                egress.send(np.asarray(worker.run(obj)), kind=BATCH)
+                # as_jax: dlpack-alias the (possibly shmem-slot-backed)
+                # view straight into jax; run() blocks until ready, so
+                # the compute is done before the next recv releases it
+                egress.send(np.asarray(worker.run(as_jax(obj))), kind=BATCH)
             elif kind == WARMUP:
-                egress.send(np.asarray(worker.warmup(obj)), kind=WARMUP)
+                egress.send(np.asarray(worker.warmup(as_jax(obj))),
+                            kind=WARMUP)
             elif kind == PROBE:
                 egress.send(None, kind=PROBE)
             elif kind == RECONFIG:
@@ -642,6 +1042,100 @@ def _worker_main(spec: dict) -> None:
     finally:
         ingress.close()
         egress.close()
+
+
+# --------------------------------------------------------------------------- #
+# Single-hop microbenchmark: one spawned sink process, receiver-measured
+# records — the payload-size sweep under ``benchmarks.transport_bench``
+# and the shmem-vs-socket regression guards in the test suite.
+# --------------------------------------------------------------------------- #
+def _sink_main(spec: dict) -> None:
+    """Receive-only host: drain a channel, flush its TransferRecords to
+    the parent over a control pipe on STATS, exit on STOP."""
+    chan: Channel = spec["chan"]
+    ctrl = spec["ctrl"]
+    try:
+        ctrl.send(("ready",))
+        while True:
+            try:
+                kind, _ = chan.recv(timeout=0.25)
+            except TransportTimeout:
+                continue
+            if kind == STOP:
+                break
+            if kind == STATS:
+                ctrl.send([tuple(r) for r in chan.drain_records()])
+            elif kind in (BATCH, WARMUP):
+                ctrl.send(0)                  # credit back to the sender
+    finally:
+        chan.close()
+        ctrl.close()
+
+
+def measure_hop(transport: str, sizes: Sequence[int], n_per_size: int = 20,
+                warmup: int | None = None, depth: int = 4,
+                framing: str = "raw", timeout_s: float = 60.0,
+                spin_us: float = 500.0) -> dict[int, list[float]]:
+    """Stream float32 payloads of each size in ``sizes`` over one real
+    hop to a spawned sink process → {nbytes: receiver-measured elapsed
+    seconds per transfer}.  The sink credits each message back over a
+    control pipe and the sender waits for the credit, so every transfer
+    measures true per-hop cost — without the credit, a fast sender
+    queues messages in the transport and later transfers absorb the
+    queueing delay of everything ahead of them.  Sizes run
+    smallest-first over one channel, so the sweep also exercises shmem
+    slot growth in place."""
+    import multiprocessing as mp
+    if warmup is None:
+        # every shmem slot must be grown *and* first-touched at each
+        # size before timing starts, or the timed window carries
+        # hundreds of µs of page faults per cold slot
+        warmup = depth + 3
+    ctx = mp.get_context("spawn")
+    chan = get_transport(transport).open(
+        HopSpec(index=0, framing=framing, depth=depth,
+                send_timeout_s=timeout_s,
+                # wide spin window: the credit round trip must land in
+                # it, or the per-hop number degenerates into a
+                # scheduler-wakeup benchmark (bimodal under load)
+                spin_us=spin_us))
+    tx, rx = chan.split()
+    parent_c, child_c = ctx.Pipe()
+    proc = ctx.Process(target=_sink_main, args=({"chan": rx, "ctrl": child_c},),
+                       daemon=True, name=f"hop-sink-{transport}")
+    proc.start()
+    child_c.close()
+    out: dict[int, list[float]] = {}
+    try:
+        rx.close()                            # parent's copy of the far end
+        if not parent_c.poll(timeout_s):
+            raise TransportError(f"{transport} sink failed to start")
+        parent_c.recv()
+        for nbytes in sorted(sizes):
+            x = np.zeros(max(nbytes // 4, 1), dtype=np.float32)
+            for i in range(warmup + n_per_size):
+                tx.send(x, kind=WARMUP if i < warmup else BATCH)
+                if not parent_c.poll(timeout_s):
+                    raise TransportError(f"{transport} sink stalled")
+                parent_c.recv()
+            tx.send(kind=STATS)
+            if not parent_c.poll(timeout_s):
+                raise TransportError(f"{transport} sink stopped responding")
+            recs = [TransferRecord(*r) for r in parent_c.recv()]
+            out[nbytes] = [r.elapsed_s for r in recs if r.nbytes == x.nbytes]
+    finally:
+        try:
+            tx.send(kind=STOP)
+        except Exception:
+            pass
+        proc.join(5.0)
+        if proc.is_alive():
+            proc.terminate()
+            proc.join(1.0)
+        tx.close()
+        tx.reap()
+        parent_c.close()
+    return out
 
 
 # --------------------------------------------------------------------------- #
