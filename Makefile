@@ -14,6 +14,13 @@
 #                        — fresh smoke measurement diffed against the
 #                          committed BENCH_transport.json; fails on a
 #                          >25% hop_us regression (the make-fast gate)
+#   make bench-stream    — streaming-session bench: pipelined steady state
+#                          per transport + mid-stream migration dip
+#                          (<30 s smoke tier, writes BENCH_stream.json)
+#   make bench-stream-check
+#                        — fresh smoke measurement diffed against the
+#                          committed BENCH_stream.json; fails on a
+#                          steady-state throughput regression (make-fast)
 #   make demo            — k-stage adaptive loop demo under a WAN ramp
 
 PY      ?= python
@@ -21,9 +28,9 @@ PYTEST  ?= $(PY) -m pytest
 ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: fast test test-fast bench bench-quick bench-smoke bench-transport \
-        bench-transport-check demo
+        bench-transport-check bench-stream bench-stream-check demo
 
-fast: test-fast bench-smoke bench-transport-check
+fast: test-fast bench-smoke bench-transport-check bench-stream-check
 
 test:
 	$(ENV) $(PYTEST) -x -q
@@ -45,6 +52,12 @@ bench-transport:
 
 bench-transport-check:
 	$(ENV) $(PY) -m benchmarks.transport_bench --smoke --check
+
+bench-stream:
+	$(ENV) $(PY) -m benchmarks.stream_bench --smoke
+
+bench-stream-check:
+	$(ENV) $(PY) -m benchmarks.stream_bench --check
 
 demo:
 	$(ENV) $(PY) examples/kway_adaptive.py

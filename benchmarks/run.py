@@ -20,6 +20,7 @@ def main() -> None:
     from . import energy_front as E
     from . import kway_runtime as K
     from . import paper_tables as P
+    from . import stream_bench as S
     from . import tpu_pod_pareto as T
     from . import transport_bench as TR
 
@@ -37,9 +38,10 @@ def main() -> None:
         "energy_front": E.energy_front,
         "pareto_bench": E.pareto_bench,
         "transport_overhead": TR.transport_overhead,
+        "stream_session": S.stream_throughput,
     }
     measured = {"fig2", "fig7", "kway_front", "kway_adaptive",
-                "transport_overhead"}
+                "transport_overhead", "stream_session"}
     rows: list[str] = []
     for name, fn in benches.items():
         if args.only and args.only not in name:

@@ -1,0 +1,277 @@
+"""Streaming-session benchmark: pipelined steady state + migration dip.
+
+Two views of the Session API, both written to ``BENCH_stream.json``:
+
+  * **steady** — pipelined steady-state throughput (img/s) per
+    transport, measured twice over the same pipeline: through a raw
+    ``Session`` (PinnedController) and through the legacy ``stream()``
+    shim.  The ratio is the acceptance number for the API redesign —
+    the shim must cost nothing (it *is* a session underneath).
+  * **migration** — a mid-stream ``Session.migrate`` under each policy
+    (``drain`` flushes the pipeline first, ``drop`` sends the RECONFIG
+    token chasing the in-flight batches): per-batch windowed throughput
+    around the move gives the dip (fraction of steady state) and the
+    recovery time (back above 90 % of steady).
+
+    PYTHONPATH=src python -m benchmarks.stream_bench [--smoke] [--check]
+
+``--smoke`` shrinks batch counts and runs the migration study on the
+emulated transport only (< 30 s, the ``make bench-stream`` target).
+``--check`` runs a fresh smoke measurement and diffs it against the
+*committed* ``BENCH_stream.json`` (no overwrite), failing on a large
+steady-state regression — the ``make bench-stream-check`` / ``make
+fast`` gate.  Process-transport numbers are normalized by the same-run
+emulated control so ambient load on a shared host does not read as a
+code regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.transport_bench import _tiny_model  # same reference model
+
+BENCH_JSON = Path("BENCH_stream.json")
+
+TRANSPORTS = ("emulated", "socket", "shmem")
+POLICIES = ("drain", "drop")
+CUT, CUT2 = 2, 3
+
+# --check tolerances: a transport's fresh steady-state img/s must stay
+# above committed / CHECK_REL after normalizing by the same-run
+# emulated control; the session-vs-stream parity ratio is a within-run
+# invariant (the shim *is* a session underneath, so any true drift is a
+# structural regression — an accidental barrier or per-batch overhead
+# in one path).  Parity is measured as the median of adjacent-in-time
+# trial ratios, which cancels most ambient load; observed spread on a
+# loaded 2-core host is ~0.6–1.25, and the gate retries 3×, so the
+# bound below flags a persistent ~1.4× divergence without flaking on
+# one unlucky window.
+CHECK_REL = 1.6
+CHECK_PARITY = (0.7, 1.43)
+CHECK_MAX_LOAD = 1.6
+
+
+def _pipe(model, params, transport):
+    from repro.core.devices import LOOPBACK
+    from repro.runtime import EdgePipeline
+    return EdgePipeline(model, params, CUT, [LOOPBACK], transport=transport)
+
+
+def steady_state(model, params, x, transport: str, n_batches: int,
+                 trials: int = 3) -> dict:
+    """Pipelined img/s via a raw Session vs the stream() shim.
+
+    Trials interleave the two modes and the best (= least-preempted)
+    run per mode is reported — on a small shared host the run-to-run
+    scheduler noise is far larger than any session-vs-shim difference,
+    and the best-of is the intrinsic cost of each path."""
+    batch = x.shape[0]
+    sess, strm = [], []
+    with _pipe(model, params, transport) as pipe:
+        pipe.warmup(x)
+        pipe.stream(x, max(n_batches // 4, 2))     # settle caches/pages
+        for _ in range(trials):
+            with pipe.session(keep_results=False) as s:
+                t0 = time.perf_counter()
+                for _ in range(n_batches):
+                    s.submit(x)
+                s.drain()
+                sess.append(n_batches * batch / (time.perf_counter() - t0))
+            strm.append(n_batches * batch / pipe.stream(x, n_batches))
+    return {
+        "session_ips": float(max(sess)),
+        "stream_ips": float(max(strm)),
+        # the acceptance number: stream() is a thin shim over Session,
+        # so this must sit near 1.0.  Median of per-trial (adjacent in
+        # time) ratios — adjacent runs share the ambient load, so the
+        # quotient cancels most of the scheduler noise the best-of
+        # numbers above cannot
+        "ratio": float(np.median([a / max(b, 1e-9)
+                                  for a, b in zip(sess, strm)])),
+    }
+
+
+def migration_dip(model, params, x, transport: str, policy: str,
+                  n_batches: int, cost_s: float = 0.05) -> dict:
+    """Windowed throughput around a mid-stream migration → dip depth +
+    recovery time."""
+    batch = x.shape[0]
+    with _pipe(model, params, transport) as pipe:
+        pipe.warmup(x)
+        pipe.stream(x, max(n_batches // 4, 2))
+        with pipe.session(keep_results=False, inflight=4,
+                          policy=policy, window=6) as s:
+            for i in range(n_batches):
+                if i == n_batches // 2:
+                    s.migrate(CUT2, cost_s=cost_s)
+                s.submit(x)
+            s.drain()
+        recs = s.records
+        t_mig = pipe.migrations[-1][0]
+    mid = n_batches // 2
+    pre = [r.throughput for r in recs[:mid] if r.throughput > 0]
+    post = [r for r in recs[mid:] if r.throughput > 0]
+    steady = float(np.median(pre)) if pre else 0.0
+    dip = float(min((r.throughput for r in post), default=0.0))
+    recovery_s = None
+    for r in post:
+        if r.throughput >= 0.9 * steady:
+            recovery_s = max(float(r.t_s - t_mig), 0.0)
+            break
+    return {
+        "policy": policy,
+        "steady_ips": steady,
+        "dip_ips": dip,
+        "dip_frac": float(dip / max(steady, 1e-9)),
+        "migration_cost_s": cost_s,
+        "recovery_s": recovery_s,
+        "batch": batch,
+    }
+
+
+def _measure(smoke: bool, write: bool = True,
+             out_path: Path = BENCH_JSON,
+             steady_only: bool = False) -> tuple[list[str], dict]:
+    import jax
+    model = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    n_steady = 24 if smoke else 80
+    n_mig = 36 if smoke else 80
+    mig_transports = () if steady_only else (
+        ("emulated",) if smoke else TRANSPORTS)
+    if smoke and not steady_only:
+        print("[smoke: migration study on the emulated transport only — "
+              "run without --smoke for the full matrix]")
+
+    rows: list[str] = []
+    results = {"model": model.name, "batch": 2, "cut": CUT,
+               "n_batches": n_steady, "steady": {}, "migration": {}}
+
+    print("== pipelined steady state (session vs stream() shim) ==")
+    for transport in TRANSPORTS:
+        # the committed (full) run needs enough adjacent-pair samples
+        # for the parity median to converge — single ratios swing
+        # 0.4–2× with ambient load on a small host, the 9-trial median
+        # sits at ~1.0
+        r = steady_state(model, params, x, transport, n_steady,
+                         trials=3 if smoke else 9)
+        results["steady"][transport] = r
+        print(f"  {transport:>8}  session {r['session_ips']:8.1f} img/s  "
+              f"stream-shim {r['stream_ips']:8.1f} img/s  "
+              f"ratio {r['ratio']:.3f}")
+        rows.append(f"stream/steady_{transport},{r['session_ips']:.3f},"
+                    f"ratio={r['ratio']:.3f}")
+
+    if mig_transports:
+        print("== mid-stream migration: throughput dip and recovery ==")
+    for transport in mig_transports:
+        for policy in POLICIES:
+            r = migration_dip(model, params, x, transport, policy, n_mig)
+            results["migration"][f"{transport}/{policy}"] = r
+            rec = ("n/a" if r["recovery_s"] is None
+                   else f"{r['recovery_s'] * 1e3:7.1f} ms")
+            print(f"  {transport:>8}/{policy:<5}  steady "
+                  f"{r['steady_ips']:8.1f} img/s  dip "
+                  f"{r['dip_frac'] * 100:5.1f}%  recovery {rec}")
+            rows.append(f"stream/migrate_{transport}_{policy},"
+                        f"{r['steady_ips']:.3f},"
+                        f"dip_frac={r['dip_frac']:.3f}")
+    if write:
+        out_path.write_text(json.dumps(results, indent=1))
+        print(f"[wrote {out_path}]")
+    return rows, results
+
+
+def stream_throughput(smoke: bool = False) -> list[str]:
+    """Harness entrypoint (benchmarks.run): measure + write the JSON."""
+    rows, _ = _measure(smoke=smoke)
+    return rows
+
+
+def _check_one(fresh: dict, ref: dict) -> tuple[list[str], float]:
+    bad: list[str] = []
+    f_st, r_st = fresh.get("steady", {}), ref.get("steady", {})
+    # emulated is the in-run load control: its throughput is modeled
+    # sleeps + tiny-model compute, and ambient load moves it together
+    # with the process transports
+    load = (r_st.get("emulated", {}).get("session_ips", 1.0)
+            / max(f_st.get("emulated", {}).get("session_ips", 1.0), 1e-9))
+    for transport in TRANSPORTS:
+        f, r = f_st.get(transport), r_st.get(transport)
+        if not f or not r:
+            bad.append(f"steady/{transport}: missing from fresh or ref")
+            continue
+        allowed = r["session_ips"] / load / CHECK_REL
+        if f["session_ips"] < allowed:
+            bad.append(
+                f"steady/{transport}: {f['session_ips']:.1f} img/s vs "
+                f"committed {r['session_ips']:.1f} / load x{load:.2f} = "
+                f"{allowed:.1f} allowed")
+        lo, hi = CHECK_PARITY
+        if not (lo <= f["ratio"] <= hi):
+            bad.append(f"parity/{transport}: session/stream ratio "
+                       f"{f['ratio']:.3f} outside [{lo}, {hi}]")
+    return bad, load
+
+
+def check(ref_path: Path = BENCH_JSON) -> int:
+    """Fresh smoke measurement vs the committed reference → exit code.
+    Retries before failing; skips loudly when the host is starved."""
+    if not ref_path.exists():
+        print(f"[check] no committed {ref_path}; run the bench first")
+        return 2
+    ref = json.loads(ref_path.read_text())
+    if not ref.get("steady"):
+        print(f"[check] committed {ref_path} has no steady block; "
+              f"regenerate it with `make bench-stream` first")
+        return 2
+    loads: list[float] = []
+    for attempt in (1, 2, 3):
+        # the gate reads only the steady block — skip the (slow)
+        # migration-dip study entirely on every attempt
+        _, fresh = _measure(smoke=True, write=False, steady_only=True)
+        bad, load = _check_one(fresh, ref)
+        loads.append(load)
+        if not bad:
+            print(f"[check] OK — no steady-state regression vs {ref_path}")
+            return 0
+        print(f"[check] attempt {attempt}: {len(bad)} regression(s) "
+              f"(emulated control at x{load:.2f} committed)")
+        for b in bad:
+            print(f"    {b}")
+    if min(loads) > CHECK_MAX_LOAD:
+        print(f"[check] SKIPPED — the emulated control ran >= "
+              f"x{min(loads):.1f} slower than committed on every attempt: "
+              f"the host is starved and wall-clock throughput here cannot "
+              f"tell a regression from scheduler starvation.")
+        return 0
+    print(f"[check] FAIL — steady-state throughput regressed vs {ref_path}")
+    return 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run (< 30 s) that still writes "
+                         "BENCH_stream.json")
+    ap.add_argument("--check", action="store_true",
+                    help="measure fresh and diff against the committed "
+                         "BENCH_stream.json (no overwrite)")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check())
+    rows = stream_throughput(smoke=args.smoke)
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,7 @@ Public API:
 from .blocks import Block, BlockGraph, chain
 from .costmodel import CostTable, PipelineMetrics, StageMetrics, evaluate_pipeline
 from .devices import (DeviceProfile, Link, LinkTrace, link_at, ramp_trace,
-                      step_trace)
+                      sawtooth_trace, spike_trace, step_trace)
 from .pareto import (ENERGY, LATENCY, THROUGHPUT, Objective, dominates,
                      hypervolume, is_on_front, knee_point, pareto_front,
                      resolve_objectives)
@@ -32,7 +32,8 @@ from . import devices, scenarios, profiler
 __all__ = [
     "Block", "BlockGraph", "chain",
     "CostTable", "PipelineMetrics", "StageMetrics", "evaluate_pipeline",
-    "DeviceProfile", "Link", "LinkTrace", "link_at", "ramp_trace", "step_trace",
+    "DeviceProfile", "Link", "LinkTrace", "link_at", "ramp_trace",
+    "sawtooth_trace", "spike_trace", "step_trace",
     "Objective", "LATENCY", "THROUGHPUT", "ENERGY", "resolve_objectives",
     "dominates", "hypervolume", "is_on_front", "knee_point", "pareto_front",
     "best_energy", "best_latency", "best_throughput", "dp_front_kway", "solve",

@@ -15,7 +15,11 @@ work; we implement it:
     max-throughput / min-energy / knee), and migrates only when the
     predicted gain beats a hysteresis threshold (migration = redeploying
     weights, which has a real cost the runtime charges via
-    ``migration_cost_s``).  An ``energy_budget_j`` (joules/batch) turns
+    ``migration_cost_s`` — and a *joule* cost, ``migration_energy_j``:
+    the moved blocks' weights crossing each hop at its radio price;
+    with ``amortize_horizon_s`` set, both must be amortized by the
+    predicted per-batch savings within the horizon before the splitter
+    will move).  An ``energy_budget_j`` (joules/batch) turns
     any policy into a constrained pick: candidates above the budget are
     dropped before the policy chooses, falling back to the least-energy
     point when nothing fits — a battery-bound Pi deployment re-solving
@@ -116,6 +120,16 @@ class AdaptiveSplitter:
     hysteresis: float = 0.10          # required relative improvement
     migration_cost_s: float = 1.0     # one-off cost of moving the split
     energy_budget_j: float | None = None   # max joules/batch (None = unbounded)
+    # energy-aware migration hysteresis: when set, a candidate split must
+    # amortize *both* migration currencies within this horizon — the
+    # wall-clock redeploy cost (``migration_cost_s``) out of its per-batch
+    # time saving, and the joules of shipping the moved weights over the
+    # crossed hops (``migration_energy_j``) out of its per-batch energy
+    # saving.  None keeps the plain relative-gain hysteresis.
+    amortize_horizon_s: float | None = None
+    # the energy charge computed for the last accepted migration (J);
+    # the runtime charges/records it alongside migration_cost_s
+    last_migration_cost_j: float = 0.0
     # charge orchestrator dispatch/return IO in the model?  True for the
     # paper's analytic studies; the executable runtime has no dispatch
     # hop, so the closed loop (runtime.adaptive) solves with False to
@@ -176,6 +190,51 @@ class AdaptiveSplitter:
         return solve(self.graph, scen, batch=self.batch, costs=self.costs,
                      include_io=self.include_io, objectives=objectives)
 
+    def migration_energy_j(self, old: tuple[int, ...],
+                           new: tuple[int, ...]) -> float:
+        """Joules to redeploy from cuts ``old`` to ``new``: every block
+        that changes stage ships its weights across the hops between its
+        old and new host, at each crossed hop's ``energy_per_byte_j``."""
+        links = [link_at(l, 0.0) for l in self.scenario.links]
+        n = len(self.graph.blocks)
+        ob, nb = (0, *old, n), (0, *new, n)
+
+        def stage_of(bounds, b):
+            for s in range(len(bounds) - 1):
+                if bounds[s] <= b < bounds[s + 1]:
+                    return s
+            raise ValueError(f"block {b} outside bounds {bounds}")
+
+        total = 0.0
+        for b, blk in enumerate(self.graph.blocks):
+            s0, s1 = stage_of(ob, b), stage_of(nb, b)
+            for hop in range(min(s0, s1), max(s0, s1)):
+                total += links[hop].energy_per_byte_j * blk.weight_bytes
+        return total
+
+    def _amortizes(self, cur: PipelineMetrics, cand: PipelineMetrics,
+                   cost_j: float) -> bool:
+        """Does the candidate pay back both migration currencies within
+        ``amortize_horizon_s``?  Batches served in the horizon come from
+        the candidate's own throughput (the post-migration rate)."""
+        horizon = self.amortize_horizon_s
+        if horizon is None:
+            return True
+        batch_time = self.batch / max(cand.throughput, 1e-12)
+        n = max(horizon / max(batch_time, 1e-12), 0.0)
+        # time currency: per-batch serving-time saving must cover the
+        # redeploy stall within the horizon (vacuously true for a free
+        # move — an energy-motivated migration may well be time-neutral)
+        t_cur = self.batch / max(cur.throughput, 1e-12)
+        if (self.migration_cost_s > 0.0
+                and (t_cur - batch_time) * n < self.migration_cost_s):
+            return False
+        # energy currency: per-batch joule saving must cover the weight
+        # shipment (vacuously true for a free move)
+        if cost_j > 0.0 and (cur.energy_j - cand.energy_j) * n < cost_j:
+            return False
+        return True
+
     def _reprice(self, partition: tuple[int, ...],
                  scen: Scenario) -> PipelineMetrics | None:
         """Re-evaluate the *current* cuts under new conditions; None when
@@ -203,9 +262,12 @@ class AdaptiveSplitter:
         scen = self._with_links(links)
         cand = self._pick(self._solve_points(scen))
         migrated = False
+        self.last_migration_cost_j = 0.0
         if self.current is None:
             self.current, migrated = cand, True
         elif cand.partition != self.current.partition:
+            cost_j = self.migration_energy_j(self.current.partition,
+                                             cand.partition)
             # re-price the *current* split under the new conditions
             cur = self._reprice(self.current.partition, scen)
             if cur is None:
@@ -215,14 +277,19 @@ class AdaptiveSplitter:
                   and cur.energy_j > self.energy_budget_j >= cand.energy_j):
                 # current split violates the energy budget and the
                 # candidate fits: a constraint breach overrides hysteresis
+                # (and the amortization gate — staying put keeps burning
+                # over-budget joules every batch)
                 self.current, migrated = cand, True
             else:
                 old, new = self._objective(cur), self._objective(cand)
                 gain = (old - new) / max(abs(old), 1e-12)
-                if gain > self.hysteresis:
+                if gain > self.hysteresis and self._amortizes(cur, cand,
+                                                              cost_j):
                     self.current, migrated = cand, True
                 else:
                     self.current = cur
+            if migrated:
+                self.last_migration_cost_j = cost_j
         else:
             self.current = cand
         self.history.append((self.current.partition, migrated))

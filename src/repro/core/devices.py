@@ -263,6 +263,51 @@ def step_trace(name: str, before: Link, after: Link, t_step: float,
     )
 
 
+def sawtooth_trace(name: str, good: Link, bad: Link, period_s: float,
+                   n_periods: int = 4, duty: float = 0.6,
+                   jitter: float = 0.0) -> LinkTrace:
+    """LTE-like sawtooth: each period ramps from ``good`` down to ``bad``
+    over ``duty`` of the period, then snaps back — the cell-handover /
+    scheduler-rotation pattern measured WAN traces show.  Keeps
+    ``good``'s per-message overhead and radio energy throughout."""
+    if period_s <= 0 or not (0.0 < duty < 1.0):
+        raise ValueError("need period_s > 0 and 0 < duty < 1")
+    eps = 1e-9
+    knots: list[tuple[float, float, float]] = []
+    for p in range(n_periods):
+        t0 = p * period_s
+        knots.append((t0, good.rtt_s, good.bw_bytes_per_s))
+        knots.append((t0 + duty * period_s, bad.rtt_s, bad.bw_bytes_per_s))
+        knots.append((t0 + duty * period_s + eps,
+                      good.rtt_s, good.bw_bytes_per_s))
+    knots.append((n_periods * period_s, good.rtt_s, good.bw_bytes_per_s))
+    return LinkTrace(name=name, schedule=tuple(knots),
+                     per_msg_overhead_s=good.per_msg_overhead_s,
+                     jitter=jitter,
+                     energy_per_byte_j=good.energy_per_byte_j)
+
+
+def spike_trace(name: str, base: Link, spike: Link, t_start: float,
+                t_peak: float, t_end: float,
+                jitter: float = 0.0) -> LinkTrace:
+    """Congestion ramp-and-recover: ``base`` until ``t_start``, degrades
+    linearly to ``spike`` at ``t_peak``, recovers linearly back to
+    ``base`` by ``t_end``, then holds ``base`` — one congestion event
+    the adaptive loop should enter *and leave* (migrate out, migrate
+    back)."""
+    if not (t_start < t_peak < t_end):
+        raise ValueError("need t_start < t_peak < t_end")
+    return LinkTrace(
+        name=name,
+        schedule=((t_start, base.rtt_s, base.bw_bytes_per_s),
+                  (t_peak, spike.rtt_s, spike.bw_bytes_per_s),
+                  (t_end, base.rtt_s, base.bw_bytes_per_s)),
+        per_msg_overhead_s=base.per_msg_overhead_s,
+        jitter=jitter,
+        energy_per_byte_j=base.energy_per_byte_j,
+    )
+
+
 # --------------------------------------------------------------------------- #
 # The paper's testbed (calibrated) and the TPU target.
 # --------------------------------------------------------------------------- #

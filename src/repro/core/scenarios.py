@@ -131,6 +131,47 @@ def wan_ramp(base: Scenario, hop: int = 0, t_start: float = 2.0,
     return base.with_link(hop, trace, name=f"{base.name}_wan_ramp")
 
 
+# --- curated WAN trace mini-library ------------------------------------------ #
+# Named, replayable time-varying links for adaptive-under-streaming
+# studies: each is a factory so every caller gets a fresh (immutable)
+# LinkTrace.  ``traces.get(name)`` / the scenario registry's
+# ``pi_pi_gpu_<trace>`` entries put them on hop 0 of the 3-stage chain.
+TRACES = {
+    # healthy LAN until t=3 s, then the paper's tc-netem duress — the
+    # Sec. V-B experiment as a trace (sharpest possible degradation)
+    "wan_step_drop": lambda: D.step_trace(
+        "wan_step_drop", D.LAN_PI_GPU, D.DURESS, t_step=3.0, jitter=0.03),
+    # LTE-like sawtooth: 4 s cells, each ramping LAN→duress over 60 %
+    # of the period then snapping back (handover recovery)
+    "lte_sawtooth": lambda: D.sawtooth_trace(
+        "lte_sawtooth", D.LAN_PI_GPU, D.DURESS, period_s=4.0, n_periods=4,
+        duty=0.6, jitter=0.05),
+    # one congestion event: clean until t=2 s, fully congested by t=4 s,
+    # recovered by t=7 s — the loop should migrate out *and back*
+    "congestion_spike": lambda: D.spike_trace(
+        "congestion_spike", D.LAN_PI_GPU, D.DURESS, t_start=2.0, t_peak=4.0,
+        t_end=7.0, jitter=0.05),
+    # slow monotone collapse (the registry wan-ramp shape, jittered)
+    "wan_slow_ramp": lambda: D.ramp_trace(
+        "wan_slow_ramp", D.LAN_PI_GPU, D.DURESS, t_start=2.0, t_end=8.0,
+        jitter=0.05),
+}
+
+
+def get_trace(name: str) -> D.LinkTrace:
+    try:
+        return TRACES[name]()
+    except KeyError:
+        raise KeyError(f"unknown trace {name!r}; have "
+                       f"{sorted(TRACES)}") from None
+
+
+def with_trace(base: Scenario, trace_name: str, hop: int = 0) -> Scenario:
+    """``base`` with the named curated trace on hop ``hop``."""
+    return base.with_link(hop, get_trace(trace_name),
+                          name=f"{base.name}_{trace_name}")
+
+
 # --- the real local testbed (measured transports) ---------------------------- #
 def local_chain(k: int = 3, transport: str = "socket") -> Scenario:
     """k worker *processes* on this host, every hop a real measured
@@ -178,6 +219,10 @@ REGISTRY = {
     "pi_to_gpu_duress": lambda: duress(pi_to_gpu()),
     "pi_to_gpu_wan_ramp": lambda: wan_ramp(pi_to_gpu()),
     "pi_pi_gpu_wan_ramp": lambda: wan_ramp(pi_pi_gpu()),
+    "pi_pi_gpu_step_drop": lambda: with_trace(pi_pi_gpu(), "wan_step_drop"),
+    "pi_pi_gpu_lte_sawtooth": lambda: with_trace(pi_pi_gpu(), "lte_sawtooth"),
+    "pi_pi_gpu_congestion_spike": lambda: with_trace(pi_pi_gpu(),
+                                                     "congestion_spike"),
     "local3_socket": lambda: local_chain(3, "socket"),
     "local3_shmem": lambda: local_chain(3, "shmem"),
     "pi_pi_gpu_socket": lambda: pi_pi_gpu().with_transport(

@@ -3,22 +3,34 @@
 Public API:
     EdgePipeline, PipelineResult      — k-stage executable pipeline over
                                         pluggable hop transports
-    AdaptiveRuntime, LoopRecord       — closed measure→estimate→re-solve→
-                                        migrate loop
+    Session, Controller,
+    PinnedController,
+    AdaptiveController, LoopRecord,
+    MigrationPolicy                   — the streaming Session API: one
+                                        always-pipelined entrypoint
+                                        (``EdgePipeline.session``) with
+                                        pluggable controllers and
+                                        in-flight drain/drop migration
+    AdaptiveRuntime                   — closed measure→estimate→re-solve→
+                                        migrate loop (a Session shim)
     Transport, Channel, TransferRecord,
     register_transport, get_transport — the hop transport API
                                         ("emulated" | "socket" | "shmem")
     record_trace                      — measured records → replayable
                                         LinkTrace (seed the emulator)
 """
-from .adaptive import AdaptiveRuntime, LoopRecord
+from .adaptive import AdaptiveRuntime
 from .edge import EdgePipeline, PipelineResult, StageStats, Worker
+from .session import (AdaptiveController, Controller, LoopRecord,
+                      MigrationPolicy, PinnedController, Session)
 from .transport import (Channel, HopSpec, TransferRecord, Transport,
                         TransportError, TransportTimeout, get_transport,
                         record_trace, register_transport)
 
 __all__ = [
     "AdaptiveRuntime", "LoopRecord",
+    "Session", "Controller", "PinnedController", "AdaptiveController",
+    "MigrationPolicy",
     "EdgePipeline", "PipelineResult", "StageStats", "Worker",
     "Channel", "HopSpec", "TransferRecord", "Transport", "TransportError",
     "TransportTimeout", "get_transport", "record_trace", "register_transport",

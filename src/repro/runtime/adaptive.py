@@ -14,24 +14,25 @@ paper leaves as future work:
   3. ``AdaptiveSplitter`` re-solves the whole chain with the estimated
      links (``partitioner.solve``: 2-way sweep, k-way enumeration, or
      Pareto DP as the problem size demands) and, when the predicted gain
-     clears hysteresis, the pipeline live-migrates to the new cut vector,
-     charging ``migration_cost_s`` of wall-clock for the redeploy.
+     clears hysteresis (and, with ``amortize_horizon_s`` set, amortizes
+     both the redeploy stall *and* the weights-over-the-wire joules
+     within the horizon), the pipeline live-migrates to the new cut
+     vector.
 
-Under a ``LinkTrace`` (WAN ramp, congestion spike) the loop therefore
-does exactly what Sec. V-B argues a deployment must: notice the wire
-degrading and move the split, while the run is in flight.
+The loop itself is now a thin shim: ``AdaptiveRuntime.run`` opens a
+:class:`~repro.runtime.session.Session` with an ``AdaptiveController``
+— the same machinery that drives adaptive *streaming* (batches in
+flight during migration).  ``run`` keeps the legacy batch-synchronous
+cadence (``inflight=1``); pass ``inflight > 1`` for the pipelined loop,
+or use ``EdgePipeline.session`` directly.
 
 Energy rides the same loop: every batch's joules are modeled from the
-*measured* per-stage compute times (device active power × exe + idle
-power during the wire waits + radio cost × bytes actually sent), and an
-``energy_budget_j`` makes the re-solve constrained — splits above the
-budget are discarded before the policy picks, so a WAN ramp that makes
-the current split energy-hungry triggers a migration even when raw
-throughput would not justify one.
+*measured* per-stage compute times, and an ``energy_budget_j`` makes
+the re-solve constrained — a budget breach overrides both hysteresis
+and the amortization gate.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Callable, Sequence
 
 from ..core.autosplit import AdaptiveSplitter, LinkEstimator, Policy
@@ -39,27 +40,14 @@ from ..core.blocks import BlockGraph
 from ..core.costmodel import CostTable
 from ..core.scenarios import Scenario
 from .edge import Backend, EdgePipeline
+from .session import AdaptiveController, LoopRecord, MigrationPolicy
 
-
-@dataclass(frozen=True)
-class LoopRecord:
-    """One batch through the adaptive loop."""
-
-    batch_idx: int
-    t_s: float                      # pipeline-clock time after the batch
-    cuts: tuple[int, ...]           # active cut vector for this batch
-    latency_s: float                # measured end-to-end latency
-    migrated: bool                  # did this step trigger a migration
-    migration_cost_s: float         # redeploy cost charged (0 if none)
-    predicted_latency_s: float      # splitter's model of the active cuts
-    predicted_throughput: float
-    energy_j: float = 0.0           # modeled J for this batch (measured exe)
-    predicted_energy_j: float = 0.0  # splitter's model of the active cuts
+__all__ = ["AdaptiveRuntime", "LoopRecord", "AdaptiveController"]
 
 
 class AdaptiveRuntime:
     """Owns an EdgePipeline + AdaptiveSplitter + per-hop LinkEstimators
-    and runs them as one loop."""
+    and runs them as one loop (a Session with an AdaptiveController)."""
 
     def __init__(self, model, params, scenario: Scenario, *,
                  graph: BlockGraph | None = None, batch: int | None = None,
@@ -69,7 +57,8 @@ class AdaptiveRuntime:
                  costs: CostTable | None = None, hysteresis: float = 0.10,
                  migration_cost_s: float = 0.25, check_every: int = 4,
                  alpha: float = 0.5, queue_depth: int = 2, seed: int = 0,
-                 energy_budget_j: float | None = None):
+                 energy_budget_j: float | None = None,
+                 amortize_horizon_s: float | None = None):
         self._model, self._params = model, params
         self.scenario = scenario
         self._deploy_opts = dict(batch=batch, policy=policy, costs=costs,
@@ -78,7 +67,8 @@ class AdaptiveRuntime:
                                  backend=backend, transport=transport,
                                  queue_depth=queue_depth,
                                  alpha=alpha, seed=seed,
-                                 energy_budget_j=energy_budget_j)
+                                 energy_budget_j=energy_budget_j,
+                                 amortize_horizon_s=amortize_horizon_s)
         self.check_every = check_every
         self.records: list[LoopRecord] = []
         self.graph: BlockGraph | None = graph
@@ -102,7 +92,8 @@ class AdaptiveRuntime:
             graph, self.scenario, batch=o["batch"], policy=o["policy"],
             costs=o["costs"], hysteresis=o["hysteresis"],
             migration_cost_s=o["migration_cost_s"], include_io=False,
-            energy_budget_j=o["energy_budget_j"])
+            energy_budget_j=o["energy_budget_j"],
+            amortize_horizon_s=o["amortize_horizon_s"])
         init = self.splitter.solve()
         self.splitter.current = init
         self.splitter.history.append((init.partition, True))
@@ -114,16 +105,6 @@ class AdaptiveRuntime:
                            for l in self.scenario.links]
 
     # ------------------------------------------------------------------ #
-    def _ingest_observations(self) -> None:
-        """Feed each hop's recorded transfers into its estimator.
-        Zero-byte messages are RTT probes (header-only ≈ one-way RTT/2)."""
-        for est, net in zip(self.estimators, self.pipe.nets):
-            for nbytes, dt, _t in net.drain_observations():
-                if nbytes <= 0:
-                    est.observe(0, 2.0 * dt, is_rtt_probe=True)
-                else:
-                    est.observe(nbytes, dt)
-
     def probe_rtt(self) -> None:
         """Send a header-only message down every hop — the emulated wire
         charges RTT/2, a real socket/shmem hop measures it — giving the
@@ -135,14 +116,17 @@ class AdaptiveRuntime:
 
     # ------------------------------------------------------------------ #
     def run(self, make_batch: Callable[[], object], n_batches: int,
-            probe: bool = True) -> list[LoopRecord]:
+            probe: bool = True, *, inflight: int = 1,
+            migration_policy: MigrationPolicy = "drain") -> list[LoopRecord]:
         """Drive ``n_batches`` through the pipeline, re-solving every
-        ``check_every`` batches.  Each check first RTT-probes every hop
-        (unless ``probe=False``) — without fresh RTT samples the
-        estimator attributes queueing delay to bandwidth and small
-        transfers make the estimate collapse.  Returns this call's
-        per-batch records (``self.records`` accumulates across calls);
-        migrations are also visible in ``self.pipe.migrations``."""
+        ``check_every`` batches (each check RTT-probes every hop first
+        unless ``probe=False`` — without fresh RTT samples the estimator
+        attributes queueing delay to bandwidth).  ``inflight=1`` is the
+        legacy batch-synchronous cadence; larger keeps the pipeline full
+        while the loop adapts, migrating under ``migration_policy``.
+        Returns this call's per-batch records (``self.records``
+        accumulates across calls); migrations are also visible in
+        ``self.pipe.migrations``."""
         x = make_batch()
         if self.pipe is None:
             # model the batches actually being served: infer resolution
@@ -154,37 +138,16 @@ class AdaptiveRuntime:
         self.pipe.warmup(x)
         self.pipe.reset_clock()
         prev = len(self.records)
-        for b in range(prev, prev + n_batches):
-            active_cuts = self.pipe.cuts
-            exe0 = [s.exe_s for s in self.pipe.stage_stats()]
-            bytes0 = [net.total_bytes for net in self.pipe.nets]
-            _, lat, _hops = self.pipe.run_one(x)
-            exe_d = [s.exe_s - e0
-                     for s, e0 in zip(self.pipe.stage_stats(), exe0)]
-            bytes_d = [net.total_bytes - b0
-                       for net, b0 in zip(self.pipe.nets, bytes0)]
-            energy, _ = self.pipe.stage_energy_model(exe_d, _hops, bytes_d)
-            # the model's view of the cuts this batch actually ran under
-            # (captured before any re-solve below replaces it)
-            pred = self.splitter.current
-            migrated, cost = False, 0.0
-            if (b + 1) % self.check_every == 0:
-                if probe:
-                    self.probe_rtt()
-                self._ingest_observations()
-                m, migrated = self.splitter.step(self.estimators)
-                if migrated and m.partition != self.pipe.cuts:
-                    cost = self.splitter.migration_cost_s
-                    self.pipe.migrate(m.partition, cost_s=cost)
-                    # warm the new placement before cutover (shadow-deploy
-                    # style) so jit compile doesn't pollute the next batch
-                    self.pipe.warmup(x)
-            self.records.append(LoopRecord(
-                batch_idx=b, t_s=self.pipe.clock(), cuts=active_cuts,
-                latency_s=lat, migrated=migrated, migration_cost_s=cost,
-                predicted_latency_s=pred.latency_s,
-                predicted_throughput=pred.throughput,
-                energy_j=energy, predicted_energy_j=pred.energy_j))
+        ctrl = AdaptiveController(self.splitter, self.estimators,
+                                  check_every=self.check_every, probe=probe,
+                                  batch_offset=prev)
+        with self.pipe.session(ctrl, inflight=inflight,
+                               policy=migration_policy,
+                               keep_results=False) as s:
+            for _ in range(n_batches):
+                s.submit(x)
+            s.drain()
+            self.records.extend(s.records)
         return self.records[prev:]
 
     # ------------------------------------------------------------------ #

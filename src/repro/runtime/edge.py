@@ -26,14 +26,18 @@ paper's PyTorch-RPC vs. custom-socket study:
     coordination overhead — the structural costs that made PyTorch RPC
     slow in the paper (Sec. V-C).
 
-Steady-state throughput is measured by streaming batches through all
-stages concurrently, end-to-end latency by timing a lone batch through
-the empty pipeline — the paper's two metrics.  Every transfer is
-recorded per hop (modeled delay under ``emulated``, measured wall-clock
-under ``socket``/``shmem``) so the closed adaptive loop
-(``runtime.adaptive``) feeds *observed* wire times into its
-``LinkEstimator``s, and ``migrate`` re-deploys a new cut vector without
-tearing the pipeline down — across threads or live worker processes.
+Execution is always pipelined: the streaming ``Session`` API
+(``EdgePipeline.session``, ``runtime.session``) feeds batches into the
+concurrent stage chain and hands results back in order, with pluggable
+controllers deciding when to re-solve and migrate mid-stream.
+``run_one`` (the paper's lone-batch latency metric) and ``stream``
+(steady-state throughput) are thin shims over one-deep / full-window
+sessions.  Every transfer is recorded per hop (modeled delay under
+``emulated``, measured wall-clock under ``socket``/``shmem``) so the
+closed adaptive loop (``runtime.adaptive``) feeds *observed* wire times
+into its ``LinkEstimator``s, and migration re-deploys a new cut vector
+without tearing the pipeline down — across threads or live worker
+processes, with batches in flight.
 """
 from __future__ import annotations
 
@@ -153,15 +157,19 @@ class _ThreadEngine:
 
     def __init__(self, pipe: "EdgePipeline"):
         self.pipe = pipe
+        self.chans: list[T.EmulatedChannel] = self._open_chans()
+        self.workers: list[Worker] = []
+        self._build_workers()
+
+    def _open_chans(self) -> "list[T.EmulatedChannel]":
+        pipe = self.pipe
         tr = get_transport("emulated", clock=pipe.clock)
-        self.chans: list[T.EmulatedChannel] = [
+        return [
             tr.open(HopSpec(index=i, link=link,
                             framing=("pickle" if pipe.backends[i] == "rpc"
                                      else "raw"),
                             depth=pipe.queue_depth, seed=pipe.seed + i))
             for i, link in enumerate(pipe.links)]
-        self.workers: list[Worker] = []
-        self._build_workers()
 
     @property
     def nets(self):
@@ -190,7 +198,9 @@ class _ThreadEngine:
 
     def probe(self) -> None:
         for chan in self.chans:
-            chan.send(kind=PROBE)
+            chan.send(kind=PROBE)             # records the RTT sample …
+            chan.recv()                       # … and consumes the token
+                                              # (no session thread to)
 
     def stage_stats(self) -> list[StageStats]:
         return [dataclasses.replace(w.stats) for w in self.workers]
@@ -202,66 +212,108 @@ class _ThreadEngine:
     def set_epoch(self, _epoch: float) -> None:
         pass                                  # channels read pipe.clock live
 
-    def run_one(self, x):
-        t0 = time.perf_counter()
-        hop_net: list[float] = []
-        for i, w in enumerate(self.workers):
-            x = w.run(x)
-            if i < len(self.chans):
-                rec = self.chans[i].send(x, kind=BATCH)
-                _, x = self.chans[i].recv()
-                hop_net.append(rec.elapsed_s)
-        return x, time.perf_counter() - t0, tuple(hop_net)
-
-    def stream(self, x, n_batches: int) -> float:
-        k = self.pipe.n_stages
-        if k == 1:
-            t0 = time.perf_counter()
-            for _ in range(n_batches):
-                self.workers[0].run(x)        # run() blocks until ready
-            return time.perf_counter() - t0
-
-        errors: list[BaseException] = []
-
-        def stage(i: int):
-            # on failure, keep draining the input channel so upstream
-            # producers never block on a full queue, and still forward
-            # the shutdown sentinel — a dead stage must not hang the run
-            failed = False
-            while True:
-                kind, item = self.chans[i - 1].recv()
-                if kind == STOP:
-                    if i < k - 1:
-                        self.chans[i].send(kind=STOP)
-                    return
-                if failed:
-                    continue
-                try:
-                    y = self.workers[i].run(item)
-                    if i < k - 1:
-                        self.chans[i].send(y, kind=BATCH)
-                    # last stage: run() already blocked until ready;
-                    # the output is complete and can be dropped
-                except BaseException as e:   # noqa: BLE001 — re-raised below
-                    errors.append(e)
-                    failed = True
-
-        threads = [threading.Thread(target=stage, args=(i,), daemon=True)
-                   for i in range(1, k)]
-        for t in threads:
+    # session primitives: persistent stage threads, in-band tokens ------- #
+    def session_open(self) -> None:
+        self._feed: queue.Queue = queue.Queue()
+        self._out: queue.Queue = queue.Queue()
+        self._sthreads = [
+            threading.Thread(target=self._stage_loop, args=(i,), daemon=True,
+                             name=f"session-stage{i}")
+            for i in range(self.pipe.n_stages)]
+        for t in self._sthreads:
             t.start()
-        t0 = time.perf_counter()
+
+    def _stage_loop(self, i: int) -> None:
+        """One pipeline stage as a session thread: recv → handle → send,
+        every control token flowing in-band with the batches around it
+        (the thread-engine mirror of ``transport._worker_main``)."""
+        pipe = self.pipe
+        k = pipe.n_stages
+        last = i == k - 1
+        recv = self._feed.get if i == 0 else \
+            (lambda _c=self.chans[i - 1]: _c.recv())
+        if last:
+            def send(obj, kind):
+                self._out.put((kind, obj))
+        else:
+            def send(obj, kind, _c=self.chans[i]):
+                _c.send(obj, kind=kind)
+        failed = False
+        while True:
+            kind, obj = recv()
+            if kind == STOP:
+                send(None, STOP)
+                return
+            if failed:                        # drain so upstream never
+                continue                      # blocks on a full queue
+            try:
+                if kind == BATCH:
+                    send(self.workers[i].run(obj), BATCH)
+                elif kind == WARMUP:
+                    send(self.workers[i].warmup(obj), WARMUP)
+                elif kind == RECONFIG:
+                    bounds = tuple(obj)
+                    w = self.workers[i]
+                    if (bounds[i], bounds[i + 1]) != (w.lo, w.hi):
+                        self.workers[i] = Worker(
+                            f"worker{i + 1}", pipe.model, pipe.params,
+                            bounds[i], bounds[i + 1], pipe.backends[i])
+                    send(obj, RECONFIG)
+                elif kind == PROBE:
+                    send(None, PROBE)         # emulates 0 bytes per hop
+                else:                         # STATS / CLOCK: pass-through
+                    send(obj, kind)
+            except BaseException as e:        # noqa: BLE001 — reported
+                failed = True
+                # in-process: ship the exception object itself, so the
+                # session re-raises the caller's own type with its
+                # traceback (process workers can only send strings)
+                self._out.put((ERROR, e))
+
+    def submit(self, x) -> None:
+        self._feed.put((BATCH, x))
+
+    def submit_token(self, kind: int, obj=None) -> None:
+        self._feed.put((kind, obj))
+
+    def poll(self, timeout: float):
         try:
-            for _ in range(n_batches):
-                a = self.workers[0].run(x)
-                self.chans[0].send(a, kind=BATCH)
-        finally:
-            self.chans[0].send(kind=STOP)
-            for t in threads:
-                t.join()
-        if errors:
-            raise errors[0]
-        return time.perf_counter() - t0
+            return self._out.get(timeout=timeout)
+        except queue.Empty:
+            raise TransportTimeout("session: no result arrived") from None
+
+    def harvest(self) -> None:
+        pass                                  # stats/records are live
+
+    def max_inflight(self) -> int | None:
+        return None                           # the feed queue is unbounded
+
+    def session_close(self, failed: bool = False) -> None:
+        try:
+            self._feed.put((STOP, None))
+        except Exception:
+            pass
+        deadline = time.perf_counter() + 5.0
+        for t in self._sthreads:
+            t.join(max(deadline - time.perf_counter(), 0.05))
+        stragglers = any(t.is_alive() for t in self._sthreads)
+        self._sthreads = []
+        if stragglers:
+            # a stage still computing can push its finished batch (and
+            # the forwarded STOP) into the channels *after* this close —
+            # orphan them so a later session cannot consume leftovers
+            # (the straggler blocks or writes into the abandoned queue,
+            # which dies with its daemon thread)
+            self.chans = self._open_chans()
+            return
+        # threads are gone: a clean close left the channels empty (STOP
+        # reached _out); after a failure, drop what draining left behind
+        for chan in self.chans:
+            try:
+                while True:
+                    chan._q.get_nowait()
+            except queue.Empty:
+                pass
 
     def host_mem_pct(self) -> float:
         import psutil
@@ -272,6 +324,7 @@ class _ThreadEngine:
 
 
 class _ProcessEngine:
+    results_persist = True      # the worker loop outlives any session
     """Stages as spawned OS processes (``WorkerHost``s), hops as real
     socket/shmem channels — the measured path.  The orchestrator feeds
     stage 0 and drains stage k-1 over extra (non-scenario) channels and
@@ -409,6 +462,14 @@ class _ProcessEngine:
         orchestrator; → {hop index: new records} for the scenario hops."""
         self._feed.send(kind=STATS)
         self._await(STATS)
+        return self.harvest()
+
+    def harvest(self) -> dict[int, list[TransferRecord]]:
+        """The control-pipe half of ``sync``: collect the per-stage
+        flushes a ``STATS`` token (already seen at the result end)
+        caused.  Every worker sends its control message *before*
+        forwarding the token, so all k messages are in flight by the
+        time the token exits the chain."""
         new: dict[int, list[TransferRecord]] = {}
         for i in range(self.pipe.n_stages):
             _, stage, d, mem_pct, records = self._ctrl_recv(i)
@@ -421,6 +482,36 @@ class _ProcessEngine:
                 self._meters[stage - 1].extend(records)
                 new[stage - 1] = [TransferRecord(*r) for r in records]
         return new
+
+    # session primitives: the worker loop is already persistent --------- #
+    def session_open(self) -> None:
+        pass
+
+    def submit(self, x) -> None:
+        self._feed.send(np.asarray(x), kind=BATCH)
+
+    def submit_token(self, kind: int, obj=None) -> None:
+        self._feed.send(obj, kind=kind)
+
+    def poll(self, timeout: float):
+        deadline = time.perf_counter() + timeout
+        while True:
+            try:
+                return self._result.recv(timeout=0.25)
+            except TransportTimeout:
+                self._check_alive()
+                if time.perf_counter() > deadline:
+                    raise
+
+    def max_inflight(self) -> int | None:
+        # the feed channel's depth is what the orchestrator can always
+        # stuff without blocking, whatever the workers are doing; a
+        # submit window beyond it could park the feed send with the
+        # result channel full and nobody pumping
+        return max(self.pipe.queue_depth * self.pipe.n_stages, 1)
+
+    def session_close(self, failed: bool = False) -> None:
+        pass
 
     # ------------------------------------------------------------------ #
     def warmup(self, x):
@@ -447,34 +538,6 @@ class _ProcessEngine:
         self._feed.send(epoch, kind=CLOCK)
         self._await(CLOCK)
         self._feed.epoch = self._result.epoch = epoch
-
-    def run_one(self, x):
-        t0 = time.perf_counter()
-        self._feed.send(np.asarray(x), kind=BATCH)
-        y = self._await(BATCH)
-        latency = time.perf_counter() - t0
-        new = self.sync()
-        hop_net = tuple(
-            float(np.mean([r.elapsed_s for r in new.get(i, ())
-                           if r.nbytes > 0] or [0.0]))
-            for i in range(len(self._meters)))
-        return y, latency, hop_net
-
-    def stream(self, x, n_batches: int) -> float:
-        window = max(self.pipe.queue_depth * self.pipe.n_stages, 1)
-        xs = np.asarray(x)
-        sent = recvd = 0
-        t0 = time.perf_counter()
-        while recvd < n_batches:
-            if sent < n_batches and sent - recvd < window:
-                self._feed.send(xs, kind=BATCH)
-                sent += 1
-            else:
-                self._await(BATCH)
-                recvd += 1
-        total = time.perf_counter() - t0
-        self.sync()
-        return total
 
     def host_mem_pct(self) -> float:
         import psutil
@@ -608,6 +671,8 @@ class EdgePipeline:
         self.epoch = self._t0
         self.clock = clock or (lambda: time.perf_counter() - self._t0)
         self.migrations: list[tuple[float, tuple[int, ...], tuple[int, ...]]] = []
+        self.migration_costs_j: list[float] = []   # parallel to migrations
+        self._session = None                  # the live Session, if any
         self.cuts = self._check_cuts(cuts)
         self._engine = (_ProcessEngine(self)
                         if any(process_based.values()) else
@@ -663,13 +728,55 @@ class EdgePipeline:
     def reset_clock(self) -> None:
         """Restart the pipeline clock (trace time 0) — call before a run
         that should experience a LinkTrace from its beginning."""
+        self._assert_idle("reset_clock")
         self._t0 = time.perf_counter()
         self.epoch = self._t0
         self._engine.set_epoch(self._t0)
 
+    def _assert_idle(self, what: str) -> None:
+        if self._session is not None and not self._session.closed:
+            raise RuntimeError(
+                f"{what}() needs the pipeline to itself, but a Session is "
+                f"open — drive the stream through the session (or close "
+                f"it) instead")
+
+    # the streaming entrypoint ------------------------------------------ #
+    def session(self, controller=None, *, inflight: int | None = None,
+                policy: str = "drain", window: int = 16,
+                keep_results: bool = True, record_cap: int | None = None):
+        """Open a streaming :class:`~repro.runtime.session.Session` —
+        the one always-pipelined entrypoint ``run_one``/``stream``/
+        ``AdaptiveRuntime.run`` are now shims over.
+
+        ``controller`` — a ``Controller`` (default ``PinnedController``:
+        record, never migrate); ``inflight`` — max batches in the
+        pipeline at once (default ``queue_depth × n_stages``);
+        ``policy`` — mid-stream migration policy, ``"drain"`` (flush
+        first) or ``"drop"`` (in-band ``RECONFIG`` chases the in-flight
+        batches); ``keep_results=False`` discards outputs (throughput
+        runs)."""
+        self._assert_idle("session")
+        from .session import Session
+        return Session(self, controller, inflight=inflight, policy=policy,
+                       window=window, keep_results=keep_results,
+                       record_cap=record_cap)
+
+    def _note_migration(self, new_cuts: tuple[int, ...],
+                        cost_j: float = 0.0) -> None:
+        """Shared migration bookkeeping (sessions reconfigure in-band
+        and only need the log + cut flip)."""
+        self.migrations.append((self.clock(), self.cuts, new_cuts))
+        self.cuts = new_cuts
+        self.migration_costs_j.append(cost_j)
+
     # lifecycle --------------------------------------------------------- #
     def close(self) -> None:
         """Tear down worker hosts and channels (no-op for threads)."""
+        if self._session is not None and not self._session.closed:
+            try:
+                self._session.close()
+            except Exception:
+                pass
         self._engine.close()
 
     def __enter__(self) -> "EdgePipeline":
@@ -686,23 +793,29 @@ class EdgePipeline:
         new hosts) charged as wall-clock time, i.e. the splitter's
         ``migration_cost_s``.  Hop state (clock, traces, observations)
         survives the migration; under process transports each worker
-        host rebuilds its stage in place from a RECONFIG token."""
+        host rebuilds its stage in place from a RECONFIG token.
+
+        This is the *quiescent* path; mid-stream migration (batches in
+        flight) goes through ``Session.migrate`` with an explicit
+        drain-vs-drop policy."""
+        self._assert_idle("migrate")
         new_cuts = self._check_cuts(new_cuts)
         if cost_s > 0.0:
             time.sleep(cost_s)
-        self.migrations.append((self.clock(), self.cuts, new_cuts))
-        self.cuts = new_cuts
+        self._note_migration(new_cuts)
         self._engine.migrate()
         return self.cuts
 
     # ------------------------------------------------------------------ #
     def warmup(self, x):
+        self._assert_idle("warmup")
         return self._engine.warmup(x)
 
     def probe(self) -> None:
         """Send a header-only message down every hop: emulated hops
         charge RTT/2, real hops measure it — either way the estimators
         get a compute-free RTT sample (an nbytes=0 observation)."""
+        self._assert_idle("probe")
         self._engine.probe()
 
     def stage_stats(self) -> list[StageStats]:
@@ -715,13 +828,36 @@ class EdgePipeline:
 
     def run_one(self, x) -> tuple[jax.Array, float, tuple[float, ...]]:
         """One batch through the empty pipeline →
-        (out, end-to-end latency, per-hop wire times)."""
-        return self._engine.run_one(x)
+        (out, end-to-end latency, per-hop wire times).
+
+        Compatibility shim: a lone batch is a one-deep Session."""
+        self._assert_idle("run_one")
+        wire0 = [(n.total_transfers, n.total_elapsed_s) for n in self.nets]
+        with self.session(inflight=1) as s:
+            seq = s.submit(x)
+            (y,) = s.drain()
+            s.checkpoint(probe=False)         # process hops: flush records
+            latency = s.latency_of(seq)
+        hop_net = tuple(
+            (n.total_elapsed_s - e0) / max(n.total_transfers - t0, 1)
+            for n, (t0, e0) in zip(self.nets, wire0))
+        return y, latency, hop_net
 
     def stream(self, x, n_batches: int) -> float:
         """Push ``n_batches`` copies of ``x`` through all stages
-        concurrently (bounded queues) → total wall time."""
-        return self._engine.stream(x, n_batches)
+        concurrently (bounded in-flight window) → total wall time.
+
+        Compatibility shim over :meth:`session` (deprecated for new
+        code: open a session and ``submit``/``results`` directly)."""
+        self._assert_idle("stream")
+        with self.session(keep_results=False) as s:
+            t0 = time.perf_counter()
+            for _ in range(n_batches):
+                s.submit(x)
+            s.drain()
+            total = time.perf_counter() - t0
+            s.checkpoint(probe=False)         # flush stats for measure()
+        return total
 
     def stage_energy_model(self, stage_exe_s: Sequence[float],
                             hop_net_s: Sequence[float],
@@ -746,6 +882,7 @@ class EdgePipeline:
     # ------------------------------------------------------------------ #
     def measure(self, make_batch: Callable[[], jax.Array],
                 n_batches: int = 10, warmup: int = 1) -> PipelineResult:
+        self._assert_idle("measure")
         x = make_batch()
         self.warmup(x)
         self._reset_stats()

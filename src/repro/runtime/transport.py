@@ -241,12 +241,20 @@ class HopObservations:
         self.observations: list[TransferRecord] = []
         self.total_bytes: int = 0
         self.total_energy_j: float = 0.0
+        # lifetime data-transfer counters (nbytes > 0 only): deltas give
+        # mean per-transfer wire time over any window *without* draining
+        # the observation log out from under the estimators
+        self.total_transfers: int = 0
+        self.total_elapsed_s: float = 0.0
 
     def record(self, nbytes: int, elapsed_s: float, t_s: float) -> TransferRecord:
         rec = TransferRecord(int(nbytes), float(elapsed_s), float(t_s))
         with self._lock:
             self.observations.append(rec)
             self.total_bytes += rec.nbytes
+            if rec.nbytes > 0:
+                self.total_transfers += 1
+                self.total_elapsed_s += rec.elapsed_s
             if self.link is not None:
                 self.total_energy_j += self.link.energy_per_byte_j * rec.nbytes
         return rec
@@ -353,7 +361,7 @@ class EmulatedChannel(Channel):
         return dt
 
     def send(self, payload=None, kind: int = BATCH):
-        if kind in (BATCH, WARMUP):
+        if kind == BATCH:
             if self.hop.framing == "pickle":
                 buf = _Serializer.dumps(payload)
                 nbytes, out = len(buf), _Serializer.loads(buf)
@@ -365,8 +373,10 @@ class EmulatedChannel(Channel):
             return TransferRecord(nbytes, dt, self._clock())
         if kind == PROBE:
             # header-only message: charges RTT/2 (+ per-message overhead),
-            # recorded as an nbytes=0 observation; nothing to enqueue
+            # recorded as an nbytes=0 observation; the token traverses
+            # in-band so a streaming session can forward it hop by hop
             dt = self.emulate(0)
+            self._q.put((PROBE, None))
             return TransferRecord(0, dt, self._clock())
         self._q.put((kind, payload))
         return None

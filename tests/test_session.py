@@ -1,0 +1,368 @@
+"""Streaming Session API: ordered pipelined results, in-flight
+migration over every transport under both drain/drop policies, failure
+propagation from ``results()``, controller records, the energy-aware
+migration amortization gate, and the curated WAN trace library.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Block, BlockGraph, Scenario, scenarios
+from repro.core.autosplit import AdaptiveSplitter, LinkEstimator
+from repro.core.costmodel import PipelineMetrics
+from repro.core.devices import DURESS, LAN_PI_GPU, DeviceProfile, Link
+from repro.models.cnn import zoo
+from repro.runtime import (AdaptiveController, AdaptiveRuntime, EdgePipeline,
+                           LoopRecord, PinnedController, TransportError,
+                           record_trace)
+
+
+def _tiny_model():
+    """A 5-block CNN that jit-compiles in a blink — sessions and
+    migrations are the thing under test, not the compute."""
+    from repro.models.cnn.layers import (Conv2D, Flatten, Linear, Pool,
+                                         ReLU, Sequential)
+    from repro.models.cnn.zoo import CNNModel
+    blocks = [
+        ("conv0", Sequential([Conv2D(3, 8, 3, 1, 1), ReLU()])),
+        ("conv1", Sequential([Conv2D(8, 8, 3, 1, 1), ReLU()])),
+        ("pool", Pool("max", 2, 2)),
+        ("conv2", Sequential([Conv2D(8, 16, 3, 1, 1), ReLU()])),
+        ("head", Sequential([Flatten(), Linear(16 * 16 * 16, 10)])),
+    ]
+    return CNNModel("tinycnn", blocks, input_hw=32)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    m = _tiny_model()
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _batches(n, batch=2, hw=32):
+    """n distinct inputs — distinctness is what makes loss/duplication/
+    reordering detectable at the output."""
+    return [jax.random.normal(jax.random.PRNGKey(100 + i), (batch, hw, hw, 3))
+            for i in range(n)]
+
+
+# --------------------------------------------------------------------------- #
+# Session basics (emulated)
+# --------------------------------------------------------------------------- #
+def test_session_ordered_results_and_interleaving(tiny):
+    m, params = tiny
+    xs = _batches(6)
+    refs = [np.asarray(m.apply(params, x)) for x in xs]
+    pipe = EdgePipeline(m, params, 2, [LAN_PI_GPU])
+    pipe.warmup(xs[0])
+    with pipe.session(inflight=3) as s:
+        it = s.results()
+        for i in range(3):
+            s.submit(xs[i])
+        got = [next(it)]                      # consume mid-stream …
+        for i in range(3, 6):
+            s.submit(xs[i])                   # … and keep submitting
+        got += list(it)
+    assert len(got) == 6
+    for ref, y in zip(refs, got):
+        assert np.allclose(ref, y, atol=1e-5)
+    # one LoopRecord per batch, in batch order, from the controller
+    assert [r.batch_idx for r in s.records] == list(range(6))
+    assert all(isinstance(r, LoopRecord) and r.latency_s > 0
+               for r in s.records)
+    assert s.records[-1].throughput > 0       # windowed, measured
+
+
+def test_session_refuses_sync_calls_while_open(tiny):
+    m, params = tiny
+    pipe = EdgePipeline(m, params, 2, [LAN_PI_GPU])
+    x = _batches(1)[0]
+    pipe.warmup(x)
+    with pipe.session() as s:
+        s.submit(x)
+        with pytest.raises(RuntimeError, match="Session is open"):
+            pipe.run_one(x)
+        with pytest.raises(RuntimeError, match="Session is open"):
+            pipe.migrate(3)
+        s.drain()
+    # released: synchronous entrypoints work again
+    y, _, _ = pipe.run_one(x)
+    assert y is not None
+
+
+def test_session_rejects_bad_policy_and_nesting(tiny):
+    m, params = tiny
+    pipe = EdgePipeline(m, params, 2, [LAN_PI_GPU])
+    with pytest.raises(ValueError, match="policy"):
+        pipe.session(policy="teleport")
+    with pipe.session() as s:
+        with pytest.raises(RuntimeError, match="Session is open"):
+            pipe.session()
+        # the per-call override is validated too — a typo must not
+        # silently fall through to drop semantics
+        with pytest.raises(ValueError, match="policy"):
+            s.migrate(3, policy="flush")
+
+
+def test_stage_exception_type_survives_the_session(tiny):
+    """A stage raising under the thread engine must surface as the
+    *original* exception type (legacy run_one/stream behaviour), not a
+    flattened TransportError string."""
+    m, params = tiny
+    x = _batches(1)[0]
+    pipe = EdgePipeline(m, params, 2, [LAN_PI_GPU])
+    pipe.warmup(x)
+
+    def boom(_):
+        raise ZeroDivisionError("stage blew up")
+
+    pipe._engine.workers[1].run = boom
+    with pytest.raises(ZeroDivisionError, match="stage blew up"):
+        with pipe.session() as s:
+            s.submit(x)
+            s.drain()
+
+
+# --------------------------------------------------------------------------- #
+# In-flight migration matrix: transports × policies
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("transport", ["emulated", "socket", "shmem"])
+@pytest.mark.parametrize("policy", ["drain", "drop"])
+def test_migration_mid_stream_loses_nothing(tiny, transport, policy):
+    """The acceptance matrix: migrate() firing with batches in flight
+    must lose, duplicate, and reorder nothing, on modeled threads and
+    real worker processes alike, under both the flush-first and the
+    in-band-token policy."""
+    m, params = tiny
+    xs = _batches(10)
+    refs = [np.asarray(m.apply(params, x)) for x in xs]
+    with EdgePipeline(m, params, 2, [LAN_PI_GPU],
+                      transport=transport) as pipe:
+        pipe.warmup(xs[0])
+        with pipe.session(inflight=4, policy=policy) as s:
+            for x in xs[:4]:
+                s.submit(x)                   # fill the pipeline …
+            s.migrate(3, cost_s=0.0)          # … then move the cut
+            for x in xs[4:]:
+                s.submit(x)
+            got = s.drain()
+        assert pipe.cuts == (3,)
+        assert len(pipe.migrations) == 1
+    assert len(got) == len(xs)                # nothing lost or duplicated
+    for i, (ref, y) in enumerate(zip(refs, got)):
+        assert np.allclose(ref, y, atol=1e-5), \
+            f"batch {i} wrong under {transport}/{policy} (reordered?)"
+
+
+@pytest.mark.parametrize("transport", ["socket", "shmem"])
+def test_worker_death_mid_stream_raises_from_results(tiny, transport):
+    """A worker process dying with batches in flight must surface as
+    TransportError from the session (submit backpressure or results()),
+    not hang."""
+    m, params = tiny
+    x = _batches(1)[0]
+    pipe = EdgePipeline(m, params, (2, 3), scenarios.get("pi_pi_gpu"),
+                        transport=transport)
+    try:
+        pipe.warmup(x)
+        t0 = time.perf_counter()
+        with pytest.raises(TransportError, match="died|closed|gone"):
+            with pipe.session(inflight=4) as s:
+                s.submit(x)
+                list(s.results())             # healthy round first
+                pipe._engine._procs[1].terminate()
+                pipe._engine._procs[1].join(5.0)
+                for _ in range(8):
+                    s.submit(x)
+                list(s.results())
+        assert time.perf_counter() - t0 < 30.0
+    finally:
+        pipe.close()
+
+
+# --------------------------------------------------------------------------- #
+# Adaptive under streaming
+# --------------------------------------------------------------------------- #
+def test_adaptive_controller_migrates_with_batches_in_flight():
+    """The tentpole behaviour: the closed loop runs *inside* the
+    pipelined stream (inflight > 1) and still chases a degrading
+    LinkTrace to a cheaper-wire cut vector."""
+    m = zoo.get("mobilenetv2")
+    params = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    scen = scenarios.wan_ramp(scenarios.get("pi_pi_gpu"), hop=0,
+                              t_start=0.05, t_end=0.4, jitter=0.05)
+    with AdaptiveRuntime(m, params, scen, batch=x.shape[0],
+                         policy="throughput", check_every=3,
+                         migration_cost_s=0.02, alpha=0.6) as rt:
+        recs = rt.run(lambda: x, n_batches=12, inflight=3,
+                      migration_policy="drop")
+        assert len(recs) == 12
+        assert [r.batch_idx for r in recs] == list(range(12))
+        assert len(rt.pipe.migrations) >= 1
+        start, final = recs[0].cuts, rt.pipe.cuts
+        assert final != start
+        assert rt.graph.cut_bytes(final[0]) <= rt.graph.cut_bytes(start[0])
+        # in-stream migration charged both currencies on its record
+        mig = [r for r in recs if r.migration_cost_s > 0]
+        assert mig and all(r.migration_cost_j >= 0 for r in mig)
+        # pipelined records carry a measured windowed throughput
+        assert any(r.throughput > 0 for r in recs)
+
+
+def test_pinned_controller_never_migrates(tiny):
+    m, params = tiny
+    xs = _batches(8)
+    pipe = EdgePipeline(m, params, 2, [LAN_PI_GPU])
+    pipe.warmup(xs[0])
+    with pipe.session(PinnedController(), inflight=4) as s:
+        for x in xs:
+            s.submit(x)
+        s.drain()
+    assert pipe.migrations == []
+    assert len(s.records) == 8
+    assert all(not r.migrated and r.migration_cost_s == 0 for r in s.records)
+
+
+# --------------------------------------------------------------------------- #
+# Energy-aware migration hysteresis (amortization gate)
+# --------------------------------------------------------------------------- #
+def _graph_and_scenario():
+    # activation bytes shrink with depth, so a degraded wire pushes the
+    # optimal cut later while a healthy one balances compute
+    blocks = tuple(Block(f"b{i}", flops=1e7, weight_bytes=1_000_000,
+                         out_bytes=50_000 * (6 - i)) for i in range(6))
+    g = BlockGraph("toy", blocks, input_bytes=300_000, output_bytes=100)
+    devs = (DeviceProfile("d0", flops_per_s=1e9, mem_bytes=10**12,
+                          idle_w=1.0, active_w=5.0),) * 2
+    link = Link("l0", rtt_s=1e-3, bw_bytes_per_s=1e8,
+                energy_per_byte_j=1e-6)
+    return g, Scenario("toy2", devs, (link,))
+
+
+def test_migration_energy_is_weights_over_crossed_hops():
+    g, scen = _graph_and_scenario()
+    sp = AdaptiveSplitter(g, scen, batch=2)
+    # moving the cut 2 -> 4 ships blocks 2 and 3 across hop 0
+    expect = 2 * 1_000_000 * 1e-6
+    assert sp.migration_energy_j((2,), (4,)) == pytest.approx(expect)
+    assert sp.migration_energy_j((4,), (2,)) == pytest.approx(expect)
+    assert sp.migration_energy_j((3,), (3,)) == 0.0
+
+
+def _metrics(partition, latency_s, throughput, energy_j):
+    return PipelineMetrics(partition=partition, latency_s=latency_s,
+                           throughput=throughput, stages=(), net_s=0.0,
+                           feasible=True, energy_j=energy_j)
+
+
+def test_amortization_gate_blocks_and_admits():
+    g, scen = _graph_and_scenario()
+    sp = AdaptiveSplitter(g, scen, batch=2, migration_cost_s=1.0,
+                          amortize_horizon_s=10.0)
+    cur = _metrics((2,), 1.0, 1.0, 10.0)      # 2 s/batch at batch=2
+    cand = _metrics((4,), 0.5, 4.0, 9.0)      # 0.5 s/batch, saves 1 J/batch
+    # horizon serves ~20 batches: 1.5 s/batch time saving >> 1 s cost,
+    # 1 J/batch energy saving >> 2 J weight shipment
+    assert sp._amortizes(cur, cand, cost_j=2.0)
+    # an enormous weight shipment cannot be amortized in 10 s
+    assert not sp._amortizes(cur, cand, cost_j=100.0)
+    # nor can the redeploy stall when the horizon is tiny
+    sp.amortize_horizon_s = 1e-3
+    assert not sp._amortizes(cur, cand, cost_j=0.0)
+    # no horizon = no gate (legacy behaviour)
+    sp.amortize_horizon_s = None
+    assert sp._amortizes(cur, cand, cost_j=1e9)
+
+
+def test_step_respects_amortization_and_charges_cost_j():
+    """An attractive candidate must be rejected while its weight
+    shipment cannot pay back, and accepted (with last_migration_cost_j
+    set) when the gate is off."""
+    g, scen = _graph_and_scenario()
+    degraded = Link("bad", rtt_s=0.2, bw_bytes_per_s=1e5,
+                    energy_per_byte_j=1e-6)
+
+    def run_once(horizon):
+        sp = AdaptiveSplitter(g, scen, batch=2, policy="throughput",
+                              hysteresis=0.01, migration_cost_s=0.0,
+                              amortize_horizon_s=horizon)
+        est = LinkEstimator.from_link(degraded)   # start under duress
+        sp.step(est)
+        start = sp.current.partition
+        est2 = LinkEstimator.from_link(scen.links[0])  # wire recovered
+        m, migrated = sp.step(est2)
+        return sp, start, migrated
+
+    sp, start, migrated = run_once(horizon=None)
+    assert migrated and sp.current.partition != start
+    assert sp.last_migration_cost_j > 0       # weights crossed the hop
+    # an absurdly short horizon blocks the same move
+    sp2, start2, migrated2 = run_once(horizon=1e-9)
+    assert not migrated2 and sp2.current.partition == start2
+    assert sp2.last_migration_cost_j == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# Curated WAN trace mini-library
+# --------------------------------------------------------------------------- #
+def test_trace_registry_entries():
+    for name in ("wan_step_drop", "lte_sawtooth", "congestion_spike",
+                 "wan_slow_ramp"):
+        tr = scenarios.get_trace(name)
+        assert tr.name == name
+        assert tr.transfer_time(1e5) > 0
+    with pytest.raises(KeyError, match="unknown trace"):
+        scenarios.get_trace("carrier-pigeon")
+    for sname in ("pi_pi_gpu_step_drop", "pi_pi_gpu_lte_sawtooth",
+                  "pi_pi_gpu_congestion_spike"):
+        scen = scenarios.get(sname)
+        assert scen.time_varying and scen.n_stages == 3
+
+
+def test_trace_shapes():
+    saw = scenarios.get_trace("lte_sawtooth")
+    # within each 4 s period: healthy at the start, degraded at 60 %
+    assert saw.at(0.0).bw_bytes_per_s == pytest.approx(
+        LAN_PI_GPU.bw_bytes_per_s)
+    assert saw.at(2.4).bw_bytes_per_s == pytest.approx(
+        DURESS.bw_bytes_per_s, rel=0.01)
+    assert saw.at(4.0).bw_bytes_per_s == pytest.approx(
+        LAN_PI_GPU.bw_bytes_per_s, rel=0.01)
+    spike = scenarios.get_trace("congestion_spike")
+    assert spike.at(0.0).rtt_s == pytest.approx(LAN_PI_GPU.rtt_s)
+    assert spike.at(4.0).rtt_s == pytest.approx(DURESS.rtt_s)
+    assert spike.at(10.0).rtt_s == pytest.approx(LAN_PI_GPU.rtt_s)
+
+
+def _synth_records(trace, t0, t1, n=40):
+    """Sample a trace the way a measured channel would record it."""
+    recs, sizes = [], [1e4, 1e5, 1e6]
+    for i in range(n):
+        t = t0 + (t1 - t0) * i / max(n - 1, 1)
+        if i % 4 == 0:
+            recs.append((0, trace.at(t).rtt_s / 2.0, t))
+        else:
+            nb = sizes[i % len(sizes)]
+            recs.append((int(nb), trace.at(t).transfer_time(nb), t))
+    return recs
+
+
+def test_record_trace_roundtrip_on_curated_traces():
+    """Records synthesized from a curated trace, fed through
+    ``record_trace``, must reproduce the trace's regimes — measured
+    runs can seed the emulator with any library shape."""
+    tr = scenarios.get_trace("wan_step_drop")       # step at t=3
+    recs = _synth_records(tr, 0.0, 2.8) + _synth_records(tr, 3.2, 8.0)
+    rt = record_trace(recs, name="rt", bucket_s=1.0)
+    assert rt.at(0.5).rtt_s == pytest.approx(LAN_PI_GPU.rtt_s, rel=0.15)
+    assert rt.at(7.0).rtt_s == pytest.approx(DURESS.rtt_s, rel=0.15)
+    assert rt.at(7.0).bw_bytes_per_s == pytest.approx(
+        DURESS.bw_bytes_per_s, rel=0.3)
+    spike = scenarios.get_trace("congestion_spike")  # peak at t=4
+    recs = _synth_records(spike, 0.0, 10.0, n=120)
+    rs = record_trace(recs, name="rs", bucket_s=1.0)
+    assert rs.at(4.0).rtt_s > 5 * rs.at(0.5).rtt_s   # the event is there
+    assert rs.at(9.5).rtt_s < rs.at(4.0).rtt_s / 5   # and it recovers
