@@ -21,6 +21,15 @@
 #                        — fresh smoke measurement diffed against the
 #                          committed BENCH_stream.json; fails on a
 #                          steady-state throughput regression (make-fast)
+#   make bench-codec     — per-hop wire codec bench: bytes-on-wire /
+#                          hop-µs / accuracy per codec per size per
+#                          transport + the duress-WAN paced gate + the
+#                          adaptive WAN-dip study (writes BENCH_codec.json)
+#   make bench-codec-check
+#                        — re-measures the codec gate quantities and
+#                          fails unless int8 holds ≥3.5× wire reduction
+#                          and strictly beats `none` on the paced WAN
+#                          hop (the make-fast gate)
 #   make demo            — k-stage adaptive loop demo under a WAN ramp
 
 PY      ?= python
@@ -28,9 +37,11 @@ PYTEST  ?= $(PY) -m pytest
 ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: fast test test-fast bench bench-quick bench-smoke bench-transport \
-        bench-transport-check bench-stream bench-stream-check demo
+        bench-transport-check bench-stream bench-stream-check \
+        bench-codec bench-codec-check demo
 
-fast: test-fast bench-smoke bench-transport-check bench-stream-check
+fast: test-fast bench-smoke bench-transport-check bench-stream-check \
+      bench-codec-check
 
 test:
 	$(ENV) $(PYTEST) -x -q
@@ -58,6 +69,12 @@ bench-stream:
 
 bench-stream-check:
 	$(ENV) $(PY) -m benchmarks.stream_bench --check
+
+bench-codec:
+	$(ENV) $(PY) -m benchmarks.codec_bench --smoke
+
+bench-codec-check:
+	$(ENV) $(PY) -m benchmarks.codec_bench --check
 
 demo:
 	$(ENV) $(PY) examples/kway_adaptive.py

@@ -17,6 +17,7 @@ def main() -> None:
                     help="skip the measured (wall-clock) benches")
     args = ap.parse_args()
 
+    from . import codec_bench as C
     from . import energy_front as E
     from . import kway_runtime as K
     from . import paper_tables as P
@@ -39,9 +40,10 @@ def main() -> None:
         "pareto_bench": E.pareto_bench,
         "transport_overhead": TR.transport_overhead,
         "stream_session": S.stream_throughput,
+        "codec_overhead": C.codec_overhead,
     }
     measured = {"fig2", "fig7", "kway_front", "kway_adaptive",
-                "transport_overhead", "stream_session"}
+                "transport_overhead", "stream_session", "codec_overhead"}
     rows: list[str] = []
     for name, fn in benches.items():
         if args.only and args.only not in name:

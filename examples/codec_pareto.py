@@ -1,0 +1,136 @@
+"""Accuracy as the fourth Pareto axis: per-hop wire codecs end to end.
+
+Three acts on the 3-stage pi→pi→gpu chain:
+
+  1. **Calibrate** — measure what each codec actually does to the model
+     output at every cut (top-1 agreement on a held batch), the table
+     the solver consumes instead of nominal codec figures.
+  2. **Solve** — the joint partition × per-hop-codec search
+     (``solve_with_codecs``, 4 objectives) under healthy links and
+     under the paper's duress WAN: healthy links don't pay for lossy
+     wire, so the front collapses to full fidelity; under duress the
+     front becomes an accuracy/latency *staircase* — each accuracy
+     floor buys a different latency, and the floor picks the step.
+  3. **Stream** — an ``AdaptiveController`` whose splitter searches the
+     same codec menu live: the ``congestion_spike`` trace degrades
+     hop 0, the controller coarsens the wire codec in-band (charged
+     like a migration), and the stream keeps its latency SLO at a
+     fidelity the accuracy floor still permits.
+
+    PYTHONPATH=src python examples/codec_pareto.py
+"""
+import time
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from repro.core import scenarios
+from repro.core.autosplit import AdaptiveSplitter
+from repro.core.codecs import calibrate_codecs, codec_wire_bytes
+from repro.core.partitioner import solve_with_codecs
+from repro.models.cnn.layers import (Conv2D, Flatten, Linear, Pool, ReLU,
+                                     Sequential)
+from repro.models.cnn.zoo import CNNModel
+from repro.runtime import AdaptiveController, EdgePipeline
+
+BATCH = 2
+MENU = ("none", "int8", "fp8", "topk")
+
+m = CNNModel("tinycnn", [
+    ("conv0", Sequential([Conv2D(3, 8, 3, 1, 1), ReLU()])),
+    ("conv1", Sequential([Conv2D(8, 8, 3, 1, 1), ReLU()])),
+    ("pool", Pool("max", 2, 2)),
+    ("conv2", Sequential([Conv2D(8, 16, 3, 1, 1), ReLU()])),
+    ("head", Sequential([Flatten(), Linear(16 * 16 * 16, 10)])),
+], input_hw=32)
+params = m.init(jax.random.PRNGKey(0))
+graph = m.block_graph(input_hw=32)
+x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, 32, 32, 3))
+
+# --- 1. measured degradation per (cut, codec) ------------------------------- #
+held = jax.random.normal(jax.random.PRNGKey(7), (8, 32, 32, 3))
+cal = calibrate_codecs(m, params, held)
+print("measured top-1 agreement per cut (held batch of 8):")
+print(f"  {'cut':>4} " + "".join(f"{c:>7}" for c in MENU[1:]))
+for cut in range(1, len(m.blocks)):
+    row = "".join(f"{cal.accuracy(cut, c):7.3f}" for c in MENU[1:])
+    print(f"  {cut:>4} {row}")
+
+# --- 2. the 4-objective front: healthy vs duress ---------------------------- #
+base = scenarios.get("pi_pi_gpu")
+for scen in (base, scenarios.duress(base)):
+    front = solve_with_codecs(graph, scen, codec_choices=MENU, batch=BATCH,
+                              include_io=False, objectives=4,
+                              calibration=cal)
+    print(f"\n4-objective front on {scen.name} "
+          f"({len(front)} points; latency-sorted):")
+    print(f"  {'cuts':>9} {'codecs':>16} {'lat ms':>8} {'img/s':>7} "
+          f"{'mJ':>7} {'acc':>6}")
+    for p in sorted(front, key=lambda p: p.latency_s):
+        print(f"  {str(p.partition):>9} {'/'.join(p.codecs):>16} "
+              f"{p.latency_s * 1e3:8.2f} {p.throughput:7.1f} "
+              f"{p.energy_j * 1e3:7.2f} {p.accuracy:6.3f}")
+
+# the staircase: under duress, each accuracy floor buys a latency step.
+# The *measured* table above says int8/fp8 are lossless on this tiny
+# model (top-1 agreement 1.0), so with calibration the floor never
+# bites — good news, but it hides the mechanism.  Run the same sweep on
+# the conservative nominal codec figures (what the solver uses when no
+# calibration exists: int8 0.99, fp8 0.995, topk 0.97 per coded hop) to
+# see each floor buy a different latency step.
+duress = scenarios.duress(base)
+print(f"\naccuracy/latency staircase on {duress.name} "
+      f"(best latency per floor, nominal codec figures):")
+for floor in (None, 0.95, 0.99, 0.999, 1.0):
+    front = solve_with_codecs(graph, duress, codec_choices=MENU,
+                              batch=BATCH, include_io=False, objectives=4,
+                              accuracy_floor=floor)
+    best = min(front, key=lambda p: p.latency_s)
+    tag = "none" if floor is None else f"{floor:.3f}"
+    print(f"  floor {tag:>5}: cuts={best.partition} "
+          f"codecs={'/'.join(best.codecs):>12}  "
+          f"lat={best.latency_s * 1e3:7.2f}ms  acc={best.accuracy:.4f}")
+
+# --- 3. live coarsening through the congestion spike ------------------------ #
+scen = scenarios.get("pi_pi_gpu_congestion_spike")
+splitter = AdaptiveSplitter(graph, scen, batch=BATCH, policy="latency",
+                            include_io=False, hysteresis=0.10,
+                            codec_choices=("none", "int8", "topk"),
+                            accuracy_floor=0.95, calibration=cal)
+# deploy uncoded: on the healthy LAN the packed wire buys too little to
+# clear the hysteresis — the spike is what will coarsen it
+init = replace(splitter, codec_choices=None).solve()
+splitter.current = init
+print(f"\nstreaming through {scen.name}: deployed cuts={init.partition} "
+      f"codecs=none (floor 0.95 — topk is excluded by calibration)")
+
+ctrl = AdaptiveController(splitter, check_every=2, probe=False)
+N, WINDOW = 45, 5
+with EdgePipeline(m, params, init.partition, scen) as pipe:
+    pipe.warmup(x)
+    pipe.reset_clock()
+    with pipe.session(ctrl, inflight=2, policy="drop", window=WINDOW) as s:
+        for _ in range(N):
+            s.submit(x)
+            time.sleep(0.1)               # let the trace clock advance
+        for _ in s.results():
+            pass
+    recs = sorted(s.records, key=lambda r: r.t_s)
+    print(f"{'t':>7} {'cuts':>9} {'codecs':>12} {'lat ms':>8}")
+    for i in range(0, len(recs), WINDOW):
+        w = recs[i:i + WINDOW]
+        r = w[-1]
+        mig = "  << codec switch" if any(
+            q.migrated and q.migration_cost_s for q in w) else ""
+        lat = float(np.median([q.latency_s for q in w]) * 1e3)
+        print(f"{r.t_s:6.2f}s {str(r.cuts):>9} {'/'.join(r.codecs):>12} "
+              f"{lat:8.1f}{mig}")
+    switched = [r for r in recs if r.migration_cost_s > 0]
+    for r in switched:
+        print(f"\nswitch at t={r.t_s:.2f}s -> codecs {'/'.join(r.codecs)}: "
+              f"charged {r.migration_cost_s * 1e3:.0f} ms "
+              f"(RECONFIG + in-band warmup)")
+    print(f"hop-0 wire bytes/sample: "
+          f"{graph.cut_bytes(recs[0].cuts[0])} -> "
+          f"{int(codec_wire_bytes(recs[-1].codecs[0], graph.cut_bytes(recs[-1].cuts[0])))}")

@@ -31,11 +31,13 @@ from dataclasses import dataclass, field
 from typing import Literal, Sequence
 
 from .blocks import BlockGraph
+from .codecs import CodecCalibration
 from .costmodel import CostTable, PipelineMetrics, evaluate_pipeline
 from .devices import (Link, LinkTrace, attribute_bandwidth,
                       fit_link_params_robust, link_at)
 from .pareto import knee_point
-from .partitioner import best_energy, best_latency, best_throughput, solve
+from .partitioner import (best_accuracy, best_energy, best_latency,
+                          best_throughput, solve, solve_with_codecs)
 from .scenarios import Scenario
 
 Policy = Literal["latency", "throughput", "energy", "knee"]
@@ -118,8 +120,29 @@ class AdaptiveSplitter:
     policy: Policy = "knee"
     costs: CostTable | None = None
     hysteresis: float = 0.10          # required relative improvement
-    migration_cost_s: float = 1.0     # one-off cost of moving the split
+    # one-off wall-clock cost of moving the split.  None (the default)
+    # computes it per candidate move: the moved blocks' weight bytes
+    # crossing each hop at that hop's *current estimated* transfer time,
+    # plus ``migration_overhead_s``.  A float pins the legacy constant.
+    migration_cost_s: float | None = None
+    # fixed redeploy overhead (process teardown/rebuild, jit re-warm)
+    # added on top of the weight-shipping time when the cost is computed;
+    # also the full charge of a codec-only switch (no weights move, but
+    # the RECONFIG + in-band WARMUP still cost real time)
+    migration_overhead_s: float = 0.05
     energy_budget_j: float | None = None   # max joules/batch (None = unbounded)
+    # joint partition × per-hop codec search: when set, every step
+    # re-solves over this codec menu (``partitioner.solve_with_codecs``)
+    # and a migration may change codecs, cuts, or both — congestion
+    # coarsens the wire, recovery refines it.  None pins the scenario's
+    # declared codecs (or uncoded).
+    codec_choices: Sequence[str] | None = None
+    # minimum predicted end-task fidelity: candidates below the floor
+    # are dropped before the policy picks (mirroring energy_budget_j)
+    accuracy_floor: float | None = None
+    # measured per-cut per-codec degradation table (core.codecs
+    # .calibrate_codecs); None falls back to nominal codec figures
+    calibration: CodecCalibration | None = None
     # energy-aware migration hysteresis: when set, a candidate split must
     # amortize *both* migration currencies within this horizon — the
     # wall-clock redeploy cost (``migration_cost_s``) out of its per-batch
@@ -127,8 +150,9 @@ class AdaptiveSplitter:
     # crossed hops (``migration_energy_j``) out of its per-batch energy
     # saving.  None keeps the plain relative-gain hysteresis.
     amortize_horizon_s: float | None = None
-    # the energy charge computed for the last accepted migration (J);
-    # the runtime charges/records it alongside migration_cost_s
+    # the charges computed for the last accepted migration; the runtime
+    # charges/records them (wall-clock stall + weights-over-wire joules)
+    last_migration_cost_s: float = 0.0
     last_migration_cost_j: float = 0.0
     # charge orchestrator dispatch/return IO in the model?  True for the
     # paper's analytic studies; the executable runtime has no dispatch
@@ -140,6 +164,10 @@ class AdaptiveSplitter:
 
     def _pick(self, points) -> PipelineMetrics:
         feas = [p for p in points if p.feasible] or points
+        if self.accuracy_floor is not None:
+            within = [p for p in feas if p.accuracy >= self.accuracy_floor]
+            # nothing above the floor: degrade to the most-accurate point
+            feas = within or [best_accuracy(feas)]
         if self.energy_budget_j is not None:
             within = [p for p in feas if p.energy_j <= self.energy_budget_j]
             # nothing under budget: degrade to the least-energy point
@@ -181,21 +209,33 @@ class AdaptiveSplitter:
         return self._pick(self._solve_points(self._with_links(link)))
 
     def _solve_points(self, scen: Scenario):
+        if self.codec_choices is not None:
+            # joint partition × codec search keeps all four axes so the
+            # accuracy trades stay visible to _pick
+            return solve_with_codecs(
+                self.graph, scen, self.codec_choices, batch=self.batch,
+                costs=self.costs, include_io=self.include_io, objectives=4,
+                calibration=self.calibration,
+                accuracy_floor=self.accuracy_floor)
         # when energy drives the pick (policy or budget), the DP path must
         # keep the energy axis, or energy-optimal splits get pruned as
-        # (latency, throughput)-dominated before _pick ever sees them
+        # (latency, throughput)-dominated before _pick ever sees them;
+        # an accuracy constraint likewise needs the accuracy axis kept
         objectives = (("latency", "throughput", "energy")
                       if self.policy == "energy"
                       or self.energy_budget_j is not None else None)
+        if self.accuracy_floor is not None or self.calibration is not None:
+            objectives = 4
         return solve(self.graph, scen, batch=self.batch, costs=self.costs,
-                     include_io=self.include_io, objectives=objectives)
+                     include_io=self.include_io, objectives=objectives,
+                     calibration=self.calibration,
+                     accuracy_floor=self.accuracy_floor)
 
-    def migration_energy_j(self, old: tuple[int, ...],
-                           new: tuple[int, ...]) -> float:
-        """Joules to redeploy from cuts ``old`` to ``new``: every block
-        that changes stage ships its weights across the hops between its
-        old and new host, at each crossed hop's ``energy_per_byte_j``."""
-        links = [link_at(l, 0.0) for l in self.scenario.links]
+    def _moved_bytes(self, old: tuple[int, ...],
+                     new: tuple[int, ...]) -> dict[int, float]:
+        """Weight bytes crossing each hop when redeploying ``old`` →
+        ``new``: every block that changes stage ships its weights across
+        the hops between its old and new host.  → {hop index: bytes}."""
         n = len(self.graph.blocks)
         ob, nb = (0, *old, n), (0, *new, n)
 
@@ -205,29 +245,54 @@ class AdaptiveSplitter:
                     return s
             raise ValueError(f"block {b} outside bounds {bounds}")
 
-        total = 0.0
+        moved: dict[int, float] = {}
         for b, blk in enumerate(self.graph.blocks):
             s0, s1 = stage_of(ob, b), stage_of(nb, b)
             for hop in range(min(s0, s1), max(s0, s1)):
-                total += links[hop].energy_per_byte_j * blk.weight_bytes
-        return total
+                moved[hop] = moved.get(hop, 0.0) + blk.weight_bytes
+        return moved
+
+    def migration_energy_j(self, old: tuple[int, ...],
+                           new: tuple[int, ...]) -> float:
+        """Joules to redeploy from cuts ``old`` to ``new``: the moved
+        weight bytes at each crossed hop's ``energy_per_byte_j``."""
+        links = [link_at(l, 0.0) for l in self.scenario.links]
+        return sum(links[hop].energy_per_byte_j * nbytes
+                   for hop, nbytes in self._moved_bytes(old, new).items())
+
+    def migration_time_s(self, old: tuple[int, ...], new: tuple[int, ...],
+                         links: Sequence[Link] | None = None) -> float:
+        """Wall-clock to redeploy ``old`` → ``new``: the moved weight
+        bytes crossing each hop at its transfer time under ``links``
+        (the step's fitted estimates; defaults to the scenario's nominal
+        links), plus the fixed ``migration_overhead_s``.  A configured
+        ``migration_cost_s`` constant overrides the computation."""
+        if self.migration_cost_s is not None:
+            return self.migration_cost_s
+        if links is None:
+            links = [link_at(l, 0.0) for l in self.scenario.links]
+        return self.migration_overhead_s + sum(
+            links[hop].transfer_time(nbytes)
+            for hop, nbytes in self._moved_bytes(old, new).items()
+            if nbytes > 0)
 
     def _amortizes(self, cur: PipelineMetrics, cand: PipelineMetrics,
-                   cost_j: float) -> bool:
+                   cost_j: float, cost_s: float | None = None) -> bool:
         """Does the candidate pay back both migration currencies within
         ``amortize_horizon_s``?  Batches served in the horizon come from
         the candidate's own throughput (the post-migration rate)."""
         horizon = self.amortize_horizon_s
         if horizon is None:
             return True
+        if cost_s is None:
+            cost_s = self.migration_time_s(cur.partition, cand.partition)
         batch_time = self.batch / max(cand.throughput, 1e-12)
         n = max(horizon / max(batch_time, 1e-12), 0.0)
         # time currency: per-batch serving-time saving must cover the
         # redeploy stall within the horizon (vacuously true for a free
         # move — an energy-motivated migration may well be time-neutral)
         t_cur = self.batch / max(cur.throughput, 1e-12)
-        if (self.migration_cost_s > 0.0
-                and (t_cur - batch_time) * n < self.migration_cost_s):
+        if cost_s > 0.0 and (t_cur - batch_time) * n < cost_s:
             return False
         # energy currency: per-batch joule saving must cover the weight
         # shipment (vacuously true for a free move)
@@ -235,17 +300,21 @@ class AdaptiveSplitter:
             return False
         return True
 
-    def _reprice(self, partition: tuple[int, ...],
-                 scen: Scenario) -> PipelineMetrics | None:
-        """Re-evaluate the *current* cuts under new conditions; None when
-        the cut vector is no longer valid for the graph/chain (e.g. the
-        graph or pipeline depth changed between steps)."""
+    def _reprice(self, partition: tuple[int, ...], scen: Scenario,
+                 codecs: Sequence[str] | None = None
+                 ) -> PipelineMetrics | None:
+        """Re-evaluate the *current* cuts (and codecs) under new
+        conditions; None when the cut vector is no longer valid for the
+        graph/chain (e.g. the graph or pipeline depth changed between
+        steps)."""
         static = scen.at(0.0)
         try:
             return evaluate_pipeline(self.graph, partition, static.devices,
                                      static.links, batch=self.batch,
                                      costs=self.costs,
-                                     include_io=self.include_io)
+                                     include_io=self.include_io,
+                                     codecs=codecs,
+                                     calibration=self.calibration)
         except ValueError:
             return None
 
@@ -262,14 +331,22 @@ class AdaptiveSplitter:
         scen = self._with_links(links)
         cand = self._pick(self._solve_points(scen))
         migrated = False
+        self.last_migration_cost_s = 0.0
         self.last_migration_cost_j = 0.0
         if self.current is None:
             self.current, migrated = cand, True
-        elif cand.partition != self.current.partition:
+        elif (cand.partition != self.current.partition
+              or cand.codecs != self.current.codecs):
             cost_j = self.migration_energy_j(self.current.partition,
                                              cand.partition)
-            # re-price the *current* split under the new conditions
-            cur = self._reprice(self.current.partition, scen)
+            # codec-only switches move no weights: cost_s degrades to the
+            # fixed overhead (still charged — RECONFIG + WARMUP are real)
+            cost_s = self.migration_time_s(self.current.partition,
+                                           cand.partition, links)
+            # re-price the *current* split (and codecs) under the new
+            # conditions
+            cur = self._reprice(self.current.partition, scen,
+                                codecs=self.current.codecs or None)
             if cur is None:
                 # current cuts are stale/invalid — must migrate
                 self.current, migrated = cand, True
@@ -284,11 +361,13 @@ class AdaptiveSplitter:
                 old, new = self._objective(cur), self._objective(cand)
                 gain = (old - new) / max(abs(old), 1e-12)
                 if gain > self.hysteresis and self._amortizes(cur, cand,
-                                                              cost_j):
+                                                              cost_j,
+                                                              cost_s=cost_s):
                     self.current, migrated = cand, True
                 else:
                     self.current = cur
             if migrated:
+                self.last_migration_cost_s = cost_s
                 self.last_migration_cost_j = cost_j
         else:
             self.current = cand

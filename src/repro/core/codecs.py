@@ -1,0 +1,312 @@
+"""Per-hop wire codecs: registry, analytic byte model, calibration.
+
+A ``Codec`` is a lossy (or identity) transform applied to activation
+payloads at a hop, declared per hop the way ``Scenario.transports``
+declares backends.  The same object serves three layers:
+
+  * **runtime** — ``encode``/``decode`` run the Pallas pack/unpack
+    kernels (``kernels/codec_pack.py``) on host arrays; the transport
+    calls them from ``_frame``/``_unframe`` and ships the packed
+    payload with the codec's wire code in the frame header;
+  * **analytic** — ``wire_bytes`` predicts the packed payload size
+    exactly (header + packed elements), so the partitioner's predicted
+    hop bytes agree with the measured ``TransferRecord.wire_bytes``;
+  * **accuracy** — a calibration pass (``calibrate_codecs``) measures
+    per-cut per-codec output degradation (top-1 agreement and
+    max-abs-err on a held batch) for the cost model's fourth Pareto
+    axis; ``nominal_accuracy`` is the placeholder used when no
+    calibration is supplied.
+
+Wire layouts (little-endian, shared by encode/decode/wire_bytes):
+
+  ===========  =====================================================
+  ``none``     raw bytes, unchanged (codec byte 0 on the wire)
+  ``int8``     4 B fp32 scale + n × int8            (≈4× for fp32)
+  ``fp8``      4 B fp32 scale + n × float8_e4m3fn   (≈4× for fp32)
+  ``topk``     8 B header (uint32 k, reserved) + k × uint32 index +
+               k × fp32 value, k = ⌈n/8⌉            (≈4× for fp32)
+  ===========  =====================================================
+
+Codecs apply to float tensors only (``supports``); everything else —
+control tokens, integer arrays, empty payloads — passes through
+unchanged with codec byte 0, which is also why the ``none`` codec is
+bit-exact with pre-codec framing.
+"""
+from __future__ import annotations
+
+import math
+import struct
+from dataclasses import dataclass
+from typing import Mapping, Sequence
+
+import numpy as np
+
+_FLOAT_NAMES = frozenset({"float16", "float32", "float64", "bfloat16"})
+_SCALE = struct.Struct("<f")
+_TOPK_HDR = struct.Struct("<II")
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # noqa: F401 — import registers extension dtypes
+        return np.dtype(name)
+
+
+class Codec:
+    """Identity codec (``none``): payload bytes untouched."""
+
+    name: str = "none"
+    code: int = 0              # wire byte; 0 = uncoded (append-only space)
+    # output degradation assumed when no calibration measured it — the
+    # identity codec is exact, lossy subclasses override
+    nominal_accuracy: float = 1.0
+
+    def supports(self, dtype: np.dtype) -> bool:
+        return True
+
+    def wire_bytes(self, n_elems: int, itemsize: int = 4) -> int:
+        """Packed payload size for ``n_elems`` elements of ``itemsize``."""
+        return int(n_elems) * int(itemsize)
+
+    def encode(self, host: np.ndarray) -> bytes:
+        return host.tobytes()
+
+    def decode(self, buf, shape: tuple, dtype: np.dtype) -> np.ndarray:
+        return np.frombuffer(buf, dtype=dtype).reshape(shape)
+
+
+class _LossyCodec(Codec):
+    """Shared float-only gate + fp32 staging for the lossy codecs."""
+
+    def supports(self, dtype: np.dtype) -> bool:
+        return dtype.name in _FLOAT_NAMES
+
+    @staticmethod
+    def _restore(flat: np.ndarray, shape: tuple, dtype: np.dtype):
+        out = flat.reshape(shape)
+        return out if dtype == out.dtype else out.astype(dtype)
+
+
+class Int8Codec(_LossyCodec):
+    """Symmetric per-tensor int8: 4 B scale header + one byte/element."""
+
+    name = "int8"
+    code = 1
+    nominal_accuracy = 0.99
+
+    def wire_bytes(self, n_elems: int, itemsize: int = 4) -> int:
+        return _SCALE.size + int(n_elems)
+
+    def encode(self, host: np.ndarray) -> bytes:
+        from ..kernels import ops
+        q, scale = ops.int8_pack(host)
+        return _SCALE.pack(float(scale)) + np.asarray(q).tobytes()
+
+    def decode(self, buf, shape: tuple, dtype: np.dtype) -> np.ndarray:
+        from ..kernels import ops
+        scale = _SCALE.unpack_from(buf)[0]
+        q = np.frombuffer(buf, dtype=np.int8, offset=_SCALE.size)
+        return self._restore(np.asarray(ops.int8_unpack(q, scale)),
+                             shape, dtype)
+
+
+class Fp8Codec(_LossyCodec):
+    """Scaled e4m3 cast: 4 B scale header + one byte/element (~3 bit
+    mantissa keeps relative error where int8 keeps absolute error)."""
+
+    name = "fp8"
+    code = 2
+    nominal_accuracy = 0.995
+
+    def wire_bytes(self, n_elems: int, itemsize: int = 4) -> int:
+        return _SCALE.size + int(n_elems)
+
+    def encode(self, host: np.ndarray) -> bytes:
+        from ..kernels import ops
+        q, scale = ops.fp8_pack(host)
+        return _SCALE.pack(float(scale)) + np.asarray(q).tobytes()
+
+    def decode(self, buf, shape: tuple, dtype: np.dtype) -> np.ndarray:
+        from ..kernels import ops
+        scale = _SCALE.unpack_from(buf)[0]
+        q = np.frombuffer(buf, dtype=_np_dtype("float8_e4m3fn"),
+                          offset=_SCALE.size)
+        return self._restore(np.asarray(ops.fp8_unpack(q, scale)),
+                             shape, dtype)
+
+
+class TopKCodec(_LossyCodec):
+    """Magnitude top-k sparsification with packed uint32 indices; the
+    dropped (1 - 1/density) tail decodes to zeros."""
+
+    name = "topk"
+    code = 3
+    nominal_accuracy = 0.97
+    density = 8                # keep 1 in `density` elements
+
+    def _k(self, n_elems: int) -> int:
+        return max(1, math.ceil(int(n_elems) / self.density))
+
+    def wire_bytes(self, n_elems: int, itemsize: int = 4) -> int:
+        return _TOPK_HDR.size + 8 * self._k(n_elems)
+
+    def encode(self, host: np.ndarray) -> bytes:
+        from ..kernels import ops
+        idx, vals = ops.topk_select(host, k=self._k(host.size))
+        return (_TOPK_HDR.pack(self._k(host.size), 0)
+                + np.asarray(idx).tobytes() + np.asarray(vals).tobytes())
+
+    def decode(self, buf, shape: tuple, dtype: np.dtype) -> np.ndarray:
+        k = _TOPK_HDR.unpack_from(buf)[0]
+        off = _TOPK_HDR.size
+        idx = np.frombuffer(buf, dtype=np.uint32, offset=off, count=k)
+        vals = np.frombuffer(buf, dtype=np.float32, offset=off + 4 * k,
+                             count=k)
+        flat = np.zeros(int(np.prod(shape, dtype=np.int64)), np.float32)
+        flat[idx] = vals
+        return self._restore(flat, shape, dtype)
+
+
+CODECS: dict[str, Codec] = {}
+_BY_CODE: dict[int, Codec] = {}
+
+
+def register_codec(codec: Codec) -> None:
+    """Register a codec instance under its ``name`` and wire ``code``.
+    Wire codes are append-only protocol space: reusing a live code or
+    code 0 (uncoded) would misdecode in-flight frames."""
+    if codec.code in _BY_CODE and _BY_CODE[codec.code].name != codec.name:
+        raise ValueError(f"wire code {codec.code} already taken by "
+                         f"{_BY_CODE[codec.code].name!r}")
+    CODECS[codec.name] = codec
+    _BY_CODE[codec.code] = codec
+
+
+for _c in (Codec(), Int8Codec(), Fp8Codec(), TopKCodec()):
+    register_codec(_c)
+
+
+def get_codec(name: str | Codec | None) -> Codec:
+    if isinstance(name, Codec):
+        return name
+    try:
+        return CODECS[name or "none"]
+    except KeyError:
+        raise KeyError(f"unknown codec {name!r}; have "
+                       f"{sorted(CODECS)}") from None
+
+
+def codec_for_code(code: int) -> Codec:
+    try:
+        return _BY_CODE[code]
+    except KeyError:
+        raise KeyError(f"unknown codec wire code {code}") from None
+
+
+def codec_wire_bytes(codec: str | Codec | None, raw_bytes: float,
+                     itemsize: int = 4) -> float:
+    """Analytic packed size for a raw payload of ``raw_bytes`` — the
+    cost model's Link-bytes credit, exact against the runtime framing."""
+    c = get_codec(codec)
+    if c.code == 0 or raw_bytes <= 0:
+        return raw_bytes
+    return float(c.wire_bytes(int(raw_bytes) // itemsize, itemsize))
+
+
+def quantized_wire_bytes(n_elems: int, bits: int = 8) -> int:
+    """Wire bytes for one symmetrically-quantized tensor: scale header
+    + ceil(n·bits/8) packed element bytes (``optim/compress.py``'s
+    gradient credit shares this accounting with the int8 codec)."""
+    return _SCALE.size + -(-int(n_elems) * bits // 8)
+
+
+# --------------------------------------------------------------------------- #
+# Accuracy calibration — degradation per (cut, codec) on a held batch
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class CodecAccuracy:
+    """Measured output degradation for one (cut, codec) pair."""
+
+    top1_agreement: float      # fraction of held batch keeping its argmax
+    max_abs_err: float         # worst output-logit perturbation
+
+
+@dataclass(frozen=True)
+class CodecCalibration:
+    """Per-cut per-codec degradation table for one model/input shape.
+    ``accuracy`` is what the cost model multiplies per hop; unmeasured
+    pairs fall back to the codec's ``nominal_accuracy``."""
+
+    table: Mapping[tuple[int, str], CodecAccuracy]
+
+    def accuracy(self, cut: int, codec: str | Codec | None) -> float:
+        c = get_codec(codec)
+        if c.code == 0:
+            return 1.0
+        entry = self.table.get((int(cut), c.name))
+        return entry.top1_agreement if entry is not None \
+            else c.nominal_accuracy
+
+    def max_abs_err(self, cut: int, codec: str | Codec | None) -> float:
+        c = get_codec(codec)
+        if c.code == 0:
+            return 0.0
+        entry = self.table.get((int(cut), c.name))
+        return entry.max_abs_err if entry is not None else float("nan")
+
+
+def nominal_accuracy(codec: str | Codec | None) -> float:
+    return get_codec(codec).nominal_accuracy
+
+
+def roundtrip(codec: str | Codec, host: np.ndarray) -> np.ndarray:
+    """Encode→decode through the exact wire transform (calibration and
+    tests measure what the transport will actually do to the tensor)."""
+    c = get_codec(codec)
+    host = np.ascontiguousarray(host)
+    if c.code == 0 or not host.size or not c.supports(host.dtype):
+        return host
+    return c.decode(c.encode(host), host.shape, host.dtype)
+
+
+def calibrate_codecs(model, params, x,
+                     codecs: Sequence[str] = ("int8", "fp8", "topk"),
+                     cuts: Sequence[int] | None = None) -> CodecCalibration:
+    """Measure per-cut per-codec output degradation on a held batch.
+
+    ``model`` needs the ``CNNModel`` surface: ``apply_range(params, a,
+    lo, hi)`` plus ``blocks``.  For every cut the clean activation is
+    round-tripped through each codec's wire transform and the remainder
+    of the network is re-run; degradation is scored as top-1 agreement
+    with the clean output plus the worst output perturbation.
+    """
+    import jax.numpy as jnp
+    n = len(model.blocks)
+    cuts = tuple(cuts) if cuts is not None else tuple(range(1, n))
+    acts = {0: jnp.asarray(x)}
+    a = acts[0]
+    for b in range(n):
+        a = model.apply_range(params, a, b, b + 1)
+        acts[b + 1] = a
+    clean = np.asarray(acts[n])
+    base = clean.reshape(clean.shape[0], -1).argmax(axis=-1)
+
+    table: dict[tuple[int, str], CodecAccuracy] = {}
+    for cut in cuts:
+        act = np.asarray(acts[cut])
+        for name in codecs:
+            c = get_codec(name)
+            if c.code == 0:
+                table[(cut, c.name)] = CodecAccuracy(1.0, 0.0)
+                continue
+            deg = roundtrip(c, act)
+            out = np.asarray(
+                model.apply_range(params, jnp.asarray(deg), cut, n))
+            top1 = out.reshape(out.shape[0], -1).argmax(axis=-1)
+            table[(cut, c.name)] = CodecAccuracy(
+                top1_agreement=float(np.mean(top1 == base)),
+                max_abs_err=float(np.max(np.abs(out - clean))),
+            )
+    return CodecCalibration(table)

@@ -30,6 +30,7 @@ from dataclasses import dataclass, field
 from typing import Mapping, Sequence
 
 from .blocks import BlockGraph
+from .codecs import CodecCalibration, codec_wire_bytes, get_codec
 from .devices import DeviceProfile, Link
 from .pareto import ObjectiveLike, vector as objective_vector
 
@@ -62,6 +63,7 @@ class StageMetrics:
     weight_bytes: int
     mem_ok: bool
     energy_j: float = 0.0          # active×compute + idle×send + radio×bytes
+    send_wire_bytes: float = 0.0   # codec-packed bytes on the outbound hop
 
 
 @dataclass(frozen=True)
@@ -73,6 +75,11 @@ class PipelineMetrics:
     net_s: float                   # total wire time per batch
     feasible: bool                 # all stages fit in device memory
     energy_j: float = 0.0          # joules per batch, all stages + IO radio
+    # the fourth Pareto axis: predicted end-task fidelity under this
+    # partition's per-hop wire codecs (product of per-cut top-1
+    # agreements from the calibration; 1.0 = every hop uncoded)
+    accuracy: float = 1.0
+    codecs: tuple[str, ...] = ()   # per-hop codec names ((): all "none")
 
     @property
     def bottleneck_s(self) -> float:
@@ -121,6 +128,8 @@ def evaluate_pipeline(
     costs: CostTable | None = None,
     dispatch_link: Link | None = None,
     include_io: bool = True,
+    codecs: Sequence[str] | None = None,
+    calibration: CodecCalibration | None = None,
 ) -> PipelineMetrics:
     """Evaluate one partition.
 
@@ -130,12 +139,23 @@ def evaluate_pipeline(
     ``dispatch_link`` models orchestrator→worker1 input dispatch and
     workerN→orchestrator result return (paper Alg. 1 lines 5–9); defaults
     to the first link.
+
+    ``codecs`` names the per-hop wire codec for each of the
+    ``len(cuts)`` inter-stage hops (None = all ``none``): hop bytes
+    become the codec's analytic packed size — exactly what the runtime
+    ships (``TransferRecord.wire_bytes``) — and the predicted
+    ``accuracy`` is the product of per-cut degradations from
+    ``calibration`` (falling back to each codec's nominal figure).
+    Dispatch/return IO is orchestrator plumbing and ships uncoded.
     """
     n = graph.n_blocks
     full = (0, *cuts, n)
     n_stages = len(devices)
     if len(cuts) != n_stages - 1 or len(links) != n_stages - 1:
         raise ValueError("need len(devices)-1 cuts and links")
+    if codecs is not None and len(codecs) != n_stages - 1:
+        raise ValueError(f"need {n_stages - 1} per-hop codecs, "
+                         f"got {len(codecs)}")
     for a, b in zip(full, full[1:]):
         if not (0 <= a <= b <= n):
             raise ValueError(f"bad cuts {cuts!r} for {n} blocks")
@@ -155,6 +175,7 @@ def evaluate_pipeline(
         net_total += t_in
         energy += dlink.transfer_energy(in_bytes)
 
+    accuracy = 1.0
     cycle_times: list[float] = []
     for i in range(n_stages):
         lo, hi = full[i], full[i + 1]
@@ -166,6 +187,12 @@ def evaluate_pipeline(
         if i < n_stages - 1:
             link = links[i]
             send_bytes = graph.cut_bytes(hi) * batch
+            if codecs is not None:
+                codec = get_codec(codecs[i])
+                send_bytes = codec_wire_bytes(codec, send_bytes)
+                accuracy *= (calibration.accuracy(hi, codec)
+                             if calibration is not None
+                             else codec.nominal_accuracy)
             send = link.transfer_time(send_bytes)
         e = _stage_energy(dev, comp, send, send_bytes, link)
         wbytes = graph.segment_weight_bytes(lo, hi)
@@ -175,7 +202,7 @@ def evaluate_pipeline(
         stages.append(StageMetrics(device=dev.name, blocks=(lo, hi),
                                    compute_s=comp, send_s=send,
                                    weight_bytes=wbytes, mem_ok=ok,
-                                   energy_j=e))
+                                   energy_j=e, send_wire_bytes=send_bytes))
         latency += comp + send
         net_total += send
         energy += e
@@ -194,4 +221,6 @@ def evaluate_pipeline(
     return PipelineMetrics(partition=tuple(cuts), latency_s=latency,
                            throughput=throughput, stages=tuple(stages),
                            net_s=net_total, feasible=feasible,
-                           energy_j=energy)
+                           energy_j=energy, accuracy=accuracy,
+                           codecs=(tuple(get_codec(c).name for c in codecs)
+                                   if codecs is not None else ()))

@@ -68,23 +68,38 @@ class Objective:
 LATENCY = Objective("latency", "min", "latency_s")
 THROUGHPUT = Objective("throughput", "max", "throughput")
 ENERGY = Objective("energy", "min", "energy_j")
+# the codec axis: predicted end-task fidelity under the partition's
+# per-hop wire codecs (product of per-cut top-1 agreements; 1.0 when
+# every hop ships uncoded)
+ACCURACY = Objective("accuracy", "max", "accuracy")
 
 OBJECTIVES: dict[str, Objective] = {
-    o.name: o for o in (LATENCY, THROUGHPUT, ENERGY)}
+    o.name: o for o in (LATENCY, THROUGHPUT, ENERGY, ACCURACY)}
 
 #: The paper's original bi-objective pair — the default everywhere.
 DEFAULT_OBJECTIVES: tuple[Objective, ...] = (LATENCY, THROUGHPUT)
+
+#: Widening order: ``objectives=d`` (an int) takes the first d axes.
+CANONICAL_ORDER: tuple[Objective, ...] = (LATENCY, THROUGHPUT, ENERGY,
+                                          ACCURACY)
 
 ObjectiveLike = Union[str, Objective]
 
 
 def resolve_objectives(
-    objectives: Sequence[ObjectiveLike] | None = None,
+    objectives: Sequence[ObjectiveLike] | int | None = None,
 ) -> tuple[Objective, ...]:
     """Normalize names/instances to a tuple of Objectives (None = legacy
-    (latency, throughput) pair)."""
+    (latency, throughput) pair).  An int d selects the first d axes of
+    the canonical (latency, throughput, energy, accuracy) order — so
+    ``objectives=4`` is the full codec-aware front."""
     if objectives is None:
         return DEFAULT_OBJECTIVES
+    if isinstance(objectives, int):
+        if not 1 <= objectives <= len(CANONICAL_ORDER):
+            raise ValueError(f"objectives={objectives}: int form selects "
+                             f"1..{len(CANONICAL_ORDER)} canonical axes")
+        return CANONICAL_ORDER[:objectives]
     out: list[Objective] = []
     for o in objectives:
         if isinstance(o, Objective):

@@ -31,11 +31,20 @@ import math
 from typing import Sequence
 
 from .blocks import BlockGraph
+from .codecs import CodecCalibration, get_codec
 from .costmodel import (CostTable, PipelineMetrics, _stage_energy,
                         evaluate_pipeline)
 from .devices import DeviceProfile, Link, link_at
 from .pareto import (ObjectiveLike, min_front, pareto_front,
                      resolve_objectives)
+
+
+def _floor_filter(points: list[PipelineMetrics],
+                  accuracy_floor: float | None) -> list[PipelineMetrics]:
+    """Drop partitions whose predicted accuracy is below the floor."""
+    if accuracy_floor is None:
+        return points
+    return [p for p in points if p.accuracy >= accuracy_floor]
 
 
 def solve(
@@ -46,7 +55,10 @@ def solve(
     include_io: bool = True,
     at_time: float = 0.0,
     max_enum: int = 50_000,
-    objectives: Sequence[ObjectiveLike] | None = None,
+    objectives: Sequence[ObjectiveLike] | int | None = None,
+    codecs: Sequence[str] | None = None,
+    calibration: CodecCalibration | None = None,
+    accuracy_floor: float | None = None,
 ) -> list[PipelineMetrics]:
     """Scenario-driven partition search — the one entry point.
 
@@ -56,8 +68,15 @@ def solve(
     beyond that (returns only the exact Pareto front).  Time-varying
     links are resolved to their state at ``at_time``.  ``objectives``
     selects the active objective set for the DP front (default: the
-    paper's (latency, throughput) pair); the exhaustive engines return
-    every evaluated point, whose metrics always carry all objectives.
+    paper's (latency, throughput) pair; ``objectives=4`` is the
+    canonical latency/throughput/energy/accuracy set).
+
+    ``codecs`` fixes the per-hop wire codecs (default: the scenario's
+    ``codecs`` declaration, else uncoded); with a codec in play the
+    metrics carry packed hop bytes and the accuracy axis (measured via
+    ``calibration`` where supplied).  ``accuracy_floor`` drops every
+    point whose predicted accuracy falls below it — the returned front
+    respects the floor on all engines.
     """
     devices = tuple(scenario.devices)
     links = tuple(link_at(l, at_time) for l in scenario.links)
@@ -68,17 +87,27 @@ def solve(
         raise ValueError(
             f"{k}-stage scenario {getattr(scenario, 'name', '?')!r} needs "
             f">= {k} blocks, graph {graph.name!r} has {graph.n_blocks}")
+    if codecs is None:
+        codecs = getattr(scenario, "codecs", None)
     if k == 1:
         return [evaluate_pipeline(graph, (), devices, (), batch=batch,
                                   costs=costs, include_io=include_io)]
     if k == 2:
-        return sweep_2way(graph, devices, links[0], batch=batch, costs=costs,
-                          include_io=include_io)
+        return _floor_filter(
+            sweep_2way(graph, devices, links[0], batch=batch, costs=costs,
+                       include_io=include_io, codecs=codecs,
+                       calibration=calibration),
+            accuracy_floor)
     if math.comb(graph.n_blocks - 1, k - 1) <= max_enum:
-        return sweep_kway(graph, devices, links, batch=batch, costs=costs,
-                          include_io=include_io)
+        return _floor_filter(
+            sweep_kway(graph, devices, links, batch=batch, costs=costs,
+                       include_io=include_io, codecs=codecs,
+                       calibration=calibration),
+            accuracy_floor)
     return dp_front_kway(graph, devices, links, batch=batch, costs=costs,
-                         include_io=include_io, objectives=objectives)
+                         include_io=include_io, objectives=objectives,
+                         codecs=codecs, calibration=calibration,
+                         accuracy_floor=accuracy_floor)
 
 
 def sweep_2way(
@@ -89,6 +118,8 @@ def sweep_2way(
     costs: CostTable | None = None,
     include_degenerate: bool = False,
     include_io: bool = True,
+    codecs: Sequence[str] | None = None,
+    calibration: CodecCalibration | None = None,
 ) -> list[PipelineMetrics]:
     """Every valid split point of a 2-device pipeline (paper Sec. IV-C)."""
     if len(devices) != 2:
@@ -99,7 +130,8 @@ def sweep_2way(
     for p in range(lo, hi):
         out.append(evaluate_pipeline(graph, (p,), devices, (link,),
                                      batch=batch, costs=costs,
-                                     include_io=include_io))
+                                     include_io=include_io, codecs=codecs,
+                                     calibration=calibration))
     return out
 
 
@@ -112,6 +144,8 @@ def sweep_kway(
     allow_empty_stages: bool = False,
     include_io: bool = True,
     max_combos: int = 2_000_000,
+    codecs: Sequence[str] | None = None,
+    calibration: CodecCalibration | None = None,
 ) -> list[PipelineMetrics]:
     """Exhaustive enumeration of all k-way contiguous partitions."""
     n, k = graph.n_blocks, len(devices)
@@ -125,7 +159,8 @@ def sweep_kway(
     for cuts in itertools.combinations(pool, k - 1):
         out.append(evaluate_pipeline(graph, cuts, devices, links,
                                      batch=batch, costs=costs,
-                                     include_io=include_io))
+                                     include_io=include_io, codecs=codecs,
+                                     calibration=calibration))
     return out
 
 
@@ -135,8 +170,11 @@ def sweep_kway(
 #: DP-trackable monotone scalars per objective name: the label component
 #: is min-convention and monotone non-decreasing under chain extension.
 #: "throughput" is tracked as the bottleneck cycle time (throughput =
-#: batch / bottleneck is strictly monotone in it).
-_DP_OBJECTIVES = ("latency", "throughput", "energy")
+#: batch / bottleneck is strictly monotone in it); "accuracy" as the
+#: negated product of per-cut codec agreements — each hop multiplies by
+#: a factor in (0, 1], so -accuracy is monotone non-decreasing and two
+#: labels' order is preserved under any shared completion.
+_DP_OBJECTIVES = ("latency", "throughput", "energy", "accuracy")
 
 
 def _prune(labels: list[tuple[tuple[float, ...], tuple[int, ...]]]):
@@ -152,17 +190,27 @@ def dp_front_kway(
     costs: CostTable | None = None,
     allow_empty_stages: bool = False,
     include_io: bool = True,
-    objectives: Sequence[ObjectiveLike] | None = None,
+    objectives: Sequence[ObjectiveLike] | int | None = None,
+    codecs: Sequence[str] | None = None,
+    calibration: CodecCalibration | None = None,
+    accuracy_floor: float | None = None,
 ) -> list[PipelineMetrics]:
     """Exact Pareto front over all k-way partitions via label DP.
 
     A label at state (i devices used, j blocks placed) carries one
     monotone scalar per active objective — cumulative latency, worst
-    stage cycle so far (↔ throughput), cumulative energy — plus the cut
-    vector.  Every component is monotone under extension, so dominated
-    labels can never yield a non-dominated completion — pruning is exact
-    for any subset of {latency, throughput, energy}.
+    stage cycle so far (↔ throughput), cumulative energy, accumulated
+    codec accuracy — plus the cut vector.  Every component is monotone
+    under extension, so dominated labels can never yield a non-dominated
+    completion — pruning is exact for any subset of ``_DP_OBJECTIVES``.
+
+    With ``codecs`` fixed per hop, hop bytes are the codec-packed sizes
+    and the accuracy component multiplies per-cut degradations (from
+    ``calibration`` where measured).  ``accuracy_floor`` prunes labels —
+    exactly, since accuracy only falls under extension — and filters the
+    returned front.
     """
+    from .codecs import codec_wire_bytes
     from .costmodel import _stage_time  # internal reuse
 
     objs = resolve_objectives(objectives)
@@ -174,16 +222,29 @@ def dp_front_kway(
     track_lat = any(o.name == "latency" for o in objs)
     track_bot = any(o.name == "throughput" for o in objs)
     track_en = any(o.name == "energy" for o in objs)
+    track_acc = any(o.name == "accuracy" for o in objs)
 
     n, k = graph.n_blocks, len(devices)
     if k - 1 != len(links):
         raise ValueError("need len(devices)-1 links")
+    hop_codecs = ([get_codec(c) for c in codecs] if codecs is not None
+                  else [get_codec("none")] * (k - 1))
+    if len(hop_codecs) != k - 1:
+        raise ValueError(f"need {k - 1} per-hop codecs, got {len(codecs)}")
+
+    def cut_accuracy(hop: int, cut: int) -> float:
+        codec = hop_codecs[hop]
+        if codec.code == 0:
+            return 1.0
+        return (calibration.accuracy(cut, codec) if calibration is not None
+                else codec.nominal_accuracy)
 
     dlink = links[0] if (include_io and links) else None
     init_lat = dlink.transfer_time(graph.cut_bytes(0) * batch) if dlink else 0.0
     init_en = dlink.transfer_energy(graph.cut_bytes(0) * batch) if dlink else 0.0
 
-    def label_vec(lat: float, bot: float, en: float) -> tuple[float, ...]:
+    def label_vec(lat: float, bot: float, en: float,
+                  acc: float) -> tuple[float, ...]:
         vec = []
         if track_lat:
             vec.append(lat)
@@ -191,11 +252,13 @@ def dp_front_kway(
             vec.append(bot)
         if track_en:
             vec.append(en)
+        if track_acc:
+            vec.append(-acc)
         return tuple(vec)
 
-    # labels[j] after i stages: list of ((lat, bot, en), cuts); the full
-    # triple rides along so pruning can project to the active subset
-    labels: dict[int, list] = {0: [((init_lat, 0.0, init_en), ())]}
+    # labels[j] after i stages: list of ((lat, bot, en, acc), cuts); the
+    # full vector rides along so pruning can project to the active subset
+    labels: dict[int, list] = {0: [((init_lat, 0.0, init_en, 1.0), ())]}
     for i in range(k):
         nxt: dict[int, list] = {}
         last = i == k - 1
@@ -209,29 +272,36 @@ def dp_front_kway(
                 j2_options = range(lo, hi + 1)
             for j2 in j2_options:
                 comp = _stage_time(graph, j, j2, devices[i], batch, costs)
-                send_bytes = graph.cut_bytes(j2) * batch if not last else 0.0
+                send_bytes = (codec_wire_bytes(hop_codecs[i],
+                                               graph.cut_bytes(j2) * batch)
+                              if not last else 0.0)
                 send = links[i].transfer_time(send_bytes) if not last else 0.0
                 out_t = dlink.transfer_time(graph.output_bytes * batch) if (last and dlink) else 0.0
                 out_e = dlink.transfer_energy(graph.output_bytes * batch) if (last and dlink) else 0.0
                 e_step = _stage_energy(devices[i], comp, send, send_bytes,
                                        links[i] if not last else None) + out_e
+                a_step = cut_accuracy(i, j2) if not last else 1.0
                 step = comp + send + out_t
                 cyc = step
-                for (lat, bot, en), cuts in labs:
+                for (lat, bot, en, acc), cuts in labs:
                     nl = lat + step
                     nb = max(bot, cyc)
                     ne = en + e_step
+                    na = acc * a_step
+                    if accuracy_floor is not None and na < accuracy_floor:
+                        continue       # accuracy only falls: prune exactly
                     nc = cuts if last else cuts + (j2,)
-                    nxt.setdefault(j2, []).append(((nl, nb, ne), nc))
+                    nxt.setdefault(j2, []).append(((nl, nb, ne, na), nc))
         labels = {j: _prune([(label_vec(*vec), (vec, cuts))
                              for vec, cuts in v])
                   for j, v in nxt.items()}
 
     finals = labels.get(n, [])
     out = [evaluate_pipeline(graph, cuts, devices, links, batch=batch,
-                             costs=costs, include_io=include_io)
+                             costs=costs, include_io=include_io,
+                             codecs=codecs, calibration=calibration)
            for _, cuts in finals]
-    return pareto_front(out, objs)
+    return pareto_front(_floor_filter(out, accuracy_floor), objs)
 
 
 # Convenience single-objective picks ---------------------------------------- #
@@ -249,3 +319,42 @@ def best_energy(points: Sequence[PipelineMetrics]) -> PipelineMetrics:
     """Lowest joules/batch — the pick for battery-bound deployments."""
     feas = [p for p in points if p.feasible] or list(points)
     return min(feas, key=lambda p: p.energy_j)
+
+
+def best_accuracy(points: Sequence[PipelineMetrics]) -> PipelineMetrics:
+    """Highest predicted fidelity (latency breaks ties)."""
+    feas = [p for p in points if p.feasible] or list(points)
+    return min(feas, key=lambda p: (-p.accuracy, p.latency_s))
+
+
+def solve_with_codecs(
+    graph: BlockGraph,
+    scenario,
+    codec_choices: Sequence[str] = ("none", "int8", "fp8", "topk"),
+    batch: int = 1,
+    costs: CostTable | None = None,
+    include_io: bool = True,
+    at_time: float = 0.0,
+    objectives: Sequence[ObjectiveLike] | int | None = 4,
+    calibration: CodecCalibration | None = None,
+    accuracy_floor: float | None = None,
+) -> list[PipelineMetrics]:
+    """Joint partition × per-hop codec search.
+
+    Enumerates every per-hop codec assignment from ``codec_choices``
+    (|choices|^(k-1) ``solve`` calls — fine for the paper's 2–4 device
+    chains) and returns the joint Pareto front, each point tagged with
+    the codec vector that produced it (``PipelineMetrics.codecs``).
+    This is the 4-objective front the wire-codec study plots: coarser
+    codecs trade the accuracy axis for latency/throughput/energy.
+    """
+    k = len(scenario.devices)
+    objs = resolve_objectives(objectives)
+    pool: list[PipelineMetrics] = []
+    for assign in itertools.product(codec_choices, repeat=k - 1):
+        pool.extend(solve(graph, scenario, batch=batch, costs=costs,
+                          include_io=include_io, at_time=at_time,
+                          objectives=objs, codecs=assign,
+                          calibration=calibration,
+                          accuracy_floor=accuracy_floor))
+    return pareto_front(pool, objs)

@@ -32,6 +32,11 @@ class Scenario:
     # defers to the pipeline default ("emulated"); "socket"/"shmem" make
     # the hop a *measured* real channel between worker processes
     transports: tuple[str, ...] | None = None
+    # per-hop wire codec names (see core.codecs.CODECS): None defers to
+    # the pipeline default ("none" everywhere); declared per hop exactly
+    # like transports, consumed by both the cost model (packed bytes +
+    # accuracy axis) and the runtime (Pallas pack on the wire)
+    codecs: tuple[str, ...] | None = None
 
     def __post_init__(self):
         if len(self.links) != len(self.devices) - 1:
@@ -39,6 +44,8 @@ class Scenario:
         if self.transports is not None and \
                 len(self.transports) != len(self.links):
             raise ValueError("need one transport per link")
+        if self.codecs is not None and len(self.codecs) != len(self.links):
+            raise ValueError("need one codec per link")
 
     @property
     def n_stages(self) -> int:
@@ -58,7 +65,7 @@ class Scenario:
         links = list(self.links)
         links[i] = link
         return Scenario(name or f"{self.name}+{link.name}", self.devices,
-                        tuple(links), self.transports)
+                        tuple(links), self.transports, self.codecs)
 
     def with_transport(self, transport: "str | tuple[str, ...]",
                        name: str | None = None) -> "Scenario":
@@ -68,7 +75,17 @@ class Scenario:
         else:
             transports = tuple(transport)
         return Scenario(name or self.name, self.devices, self.links,
-                        transports)
+                        transports, self.codecs)
+
+    def with_codec(self, codec: "str | tuple[str, ...]",
+                   name: str | None = None) -> "Scenario":
+        """Scenario with every hop (or a per-hop tuple) on wire ``codec``."""
+        if isinstance(codec, str):
+            codecs = (codec,) * len(self.links)
+        else:
+            codecs = tuple(codec)
+        return Scenario(name or self.name, self.devices, self.links,
+                        self.transports, codecs)
 
     def at(self, t: float = 0.0) -> "Scenario":
         """Static snapshot: every LinkTrace resolved to its link at ``t``."""
@@ -76,7 +93,7 @@ class Scenario:
             return self
         return Scenario(self.name, self.devices,
                         tuple(D.link_at(l, t) for l in self.links),
-                        self.transports)
+                        self.transports, self.codecs)
 
 
 # --- the paper's testbed ---------------------------------------------------- #
@@ -227,6 +244,11 @@ REGISTRY = {
     "local3_shmem": lambda: local_chain(3, "shmem"),
     "pi_pi_gpu_socket": lambda: pi_pi_gpu().with_transport(
         "socket", name="pi_pi_gpu_socket"),
+    "pi_pi_gpu_int8": lambda: pi_pi_gpu().with_codec(
+        "int8", name="pi_pi_gpu_int8"),
+    "pi_pi_gpu_congestion_spike_int8": lambda: with_trace(
+        pi_pi_gpu(), "congestion_spike").with_codec(
+        "int8", name="pi_pi_gpu_congestion_spike_int8"),
     "pods2": lambda: pods(2),
     "pods2_congested": lambda: pods_congested(2),
     "pods4": lambda: pods(4),

@@ -1,0 +1,157 @@
+"""Pallas pack/unpack kernels for the wire codecs (int8 / fp8 / top-k).
+
+The transport's per-hop codecs (``core/codecs.py``) quantize activation
+payloads before they hit the wire.  The elementwise quantize-pack and
+dequantize-unpack passes run as Pallas kernels — one VMEM pass each,
+grid-tiled over a flattened ``(rows, 128)`` layout — so on TPU the pack
+cost is a single fused read/write instead of XLA's round trips, and on
+CPU (this container) the same bodies execute under ``interpret=True``.
+
+Scale extraction (a global abs-max) and the top-k index selection are
+reductions/sorts, which Pallas has no portable primitive for — those
+run as plain XLA (``jnp.max`` / ``jax.lax.top_k``) around the kernels,
+mirroring how ``fused_rmsnorm`` keeps only the fusable pass in-kernel.
+
+Wire scale conventions (shared with the analytic byte model):
+
+  * ``int8``: symmetric per-tensor, ``scale = max|x| / 127``;
+  * ``fp8``:  e4m3 cast after ``scale = max|x| / 448`` (e4m3 max);
+  * ``topk``: keep the ``k`` largest-magnitude entries of the flat
+    tensor (indices ascending, fp32 values).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANES = 128
+_EPS = 1e-12
+
+
+def _pad_rows(flat, block_rows: int):
+    """Flat fp32 vector → zero-padded ``(rows, 128)`` with
+    ``rows % block_rows == 0`` (zeros quantize to zeros; the caller
+    slices back to the true length)."""
+    n = flat.size
+    per_block = block_rows * _LANES
+    padded = -(-max(n, 1) // per_block) * per_block
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(-1, _LANES), padded // _LANES
+
+
+def _scale_spec():
+    # one (1, 1) fp32 scale broadcast to every grid step
+    return pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+def _q8_kernel(x_ref, inv_ref, q_ref):
+    q = jnp.round(x_ref[...].astype(jnp.float32) * inv_ref[0, 0])
+    q_ref[...] = jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+
+
+def _dq8_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+
+
+def _q8f_kernel(x_ref, inv_ref, q_ref):
+    y = x_ref[...].astype(jnp.float32) * inv_ref[0, 0]
+    q_ref[...] = y.astype(jnp.float8_e4m3fn)
+
+
+def _dq8f_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+
+
+def _elementwise(kernel, x2d, scale, rows: int, block_rows: int,
+                 out_dtype, interpret: bool):
+    block_rows = min(block_rows, rows)
+    if rows % block_rows != 0:
+        block_rows = 1
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+                  _scale_spec()],
+        out_specs=pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, _LANES), out_dtype),
+        interpret=interpret,
+    )(x2d, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def int8_pack(x, *, block_rows: int = 256, interpret: bool = True):
+    """x: any shape/float dtype → (int8 flat[n], fp32 scale scalar)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    if flat.size == 0:                         # static shape: trace-time
+        return flat.astype(jnp.int8), jnp.float32(_EPS / 127.0)
+    scale = jnp.maximum(jnp.max(jnp.abs(flat)), _EPS) / 127.0
+    x2d, rows = _pad_rows(flat, block_rows)
+    inv = (1.0 / scale).reshape(1, 1)
+    q = _elementwise(_q8_kernel, x2d, inv, rows, block_rows,
+                     jnp.int8, interpret)
+    return q.reshape(-1)[:flat.size], scale
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def int8_unpack(q, scale, *, block_rows: int = 256, interpret: bool = True):
+    """(int8 flat[n], scale) → fp32 flat[n]."""
+    n = q.size
+    if n == 0:
+        return q.astype(jnp.float32)
+    q2d, rows = _pad_rows(q.astype(jnp.float32), block_rows)
+    q2d = q2d.astype(jnp.int8)
+    s = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    y = _elementwise(_dq8_kernel, q2d, s, rows, block_rows,
+                     jnp.float32, interpret)
+    return y.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fp8_pack(x, *, block_rows: int = 256, interpret: bool = True):
+    """x: any shape/float dtype → (float8_e4m3fn flat[n], fp32 scale)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    if flat.size == 0:
+        return flat.astype(jnp.float8_e4m3fn), jnp.float32(_EPS / 448.0)
+    scale = jnp.maximum(jnp.max(jnp.abs(flat)), _EPS) / 448.0
+    x2d, rows = _pad_rows(flat, block_rows)
+    inv = (1.0 / scale).reshape(1, 1)
+    q = _elementwise(_q8f_kernel, x2d, inv, rows, block_rows,
+                     jnp.float8_e4m3fn, interpret)
+    return q.reshape(-1)[:flat.size], scale
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fp8_unpack(q, scale, *, block_rows: int = 256, interpret: bool = True):
+    """(float8_e4m3fn flat[n], scale) → fp32 flat[n]."""
+    n = q.size
+    if n == 0:
+        return q.astype(jnp.float32)
+    q2d, rows = _pad_rows(q.astype(jnp.float32), block_rows)
+    q2d = q2d.astype(jnp.float8_e4m3fn)
+    s = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    y = _elementwise(_dq8f_kernel, q2d, s, rows, block_rows,
+                     jnp.float32, interpret)
+    return y.reshape(-1)[:n]
+
+
+def _mag_kernel(x_ref, s_ref, o_ref):
+    o_ref[...] = jnp.abs(x_ref[...].astype(jnp.float32)) * s_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
+def topk_select(x, *, k: int, block_rows: int = 256, interpret: bool = True):
+    """Keep the ``k`` largest-|x| entries of the flattened tensor →
+    (uint32 indices ascending, fp32 values).  The magnitude pass runs
+    in-kernel; the selection itself is ``jax.lax.top_k`` (XLA)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    x2d, rows = _pad_rows(flat, block_rows)
+    one = jnp.ones((1, 1), jnp.float32)
+    mag = _elementwise(_mag_kernel, x2d, one, rows, block_rows,
+                       jnp.float32, interpret).reshape(-1)[:flat.size]
+    _, idx = jax.lax.top_k(mag, k)
+    idx = jnp.sort(idx)
+    return idx.astype(jnp.uint32), flat[idx]

@@ -9,6 +9,11 @@ from __future__ import annotations
 
 import jax
 
+from .codec_pack import fp8_pack as _fp8_pack
+from .codec_pack import fp8_unpack as _fp8_unpack
+from .codec_pack import int8_pack as _int8_pack
+from .codec_pack import int8_unpack as _int8_unpack
+from .codec_pack import topk_select as _topk_select
 from .decode_attention import decode_attention as _decode
 from .flash_attention import flash_attention as _flash
 from .fused_rmsnorm import fused_rmsnorm as _rms
@@ -38,3 +43,28 @@ def ssm_scan_chunk(dt, x, Bc, Cc, A, h0, *, block_d=512, interpret=None):
 def fused_rmsnorm(x, scale, *, eps=1e-6, block_rows=256, interpret=None):
     return _rms(x, scale, eps=eps, block_rows=block_rows,
                 interpret=_default_interpret() if interpret is None else interpret)
+
+
+def int8_pack(x, *, block_rows=256, interpret=None):
+    return _int8_pack(x, block_rows=block_rows,
+                      interpret=_default_interpret() if interpret is None else interpret)
+
+
+def int8_unpack(q, scale, *, block_rows=256, interpret=None):
+    return _int8_unpack(q, scale, block_rows=block_rows,
+                        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def fp8_pack(x, *, block_rows=256, interpret=None):
+    return _fp8_pack(x, block_rows=block_rows,
+                     interpret=_default_interpret() if interpret is None else interpret)
+
+
+def fp8_unpack(q, scale, *, block_rows=256, interpret=None):
+    return _fp8_unpack(q, scale, block_rows=block_rows,
+                       interpret=_default_interpret() if interpret is None else interpret)
+
+
+def topk_select(x, *, k, block_rows=256, interpret=None):
+    return _topk_select(x, k=k, block_rows=block_rows,
+                        interpret=_default_interpret() if interpret is None else interpret)

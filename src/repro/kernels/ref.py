@@ -67,3 +67,38 @@ def fused_rmsnorm_ref(x, scale, *, eps: float = 1e-6):
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(var + eps)
             * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def int8_pack_ref(x):
+    """Symmetric per-tensor int8 quantize → (int8 flat[n], fp32 scale)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    if flat.size == 0:
+        return flat.astype(jnp.int8), jnp.float32(1e-12 / 127.0)
+    scale = jnp.maximum(jnp.max(jnp.abs(flat)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_unpack_ref(q, scale):
+    return q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+
+
+def fp8_pack_ref(x):
+    """Scaled e4m3 cast → (float8_e4m3fn flat[n], fp32 scale)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    if flat.size == 0:
+        return flat.astype(jnp.float8_e4m3fn), jnp.float32(1e-12 / 448.0)
+    scale = jnp.maximum(jnp.max(jnp.abs(flat)), 1e-12) / 448.0
+    return (flat / scale).astype(jnp.float8_e4m3fn), scale
+
+
+def fp8_unpack_ref(q, scale):
+    return q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+
+
+def topk_select_ref(x, *, k: int):
+    """k largest-|x| entries of the flat tensor → (uint32 idx asc, fp32)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    idx = jnp.sort(idx)
+    return idx.astype(jnp.uint32), flat[idx]

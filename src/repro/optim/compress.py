@@ -57,7 +57,14 @@ def compress_gradients(grads, err_state, cfg: CompressionConfig):
 
 def compressed_bytes(params, cfg: CompressionConfig) -> int:
     """Wire bytes per gradient exchange under compression (for the
-    partitioner's link model)."""
-    n = sum(l.size for l in jax.tree.leaves(params))
-    per = cfg.bits / 8 if cfg.enabled else 4
-    return int(n * per)
+    partitioner's link model).
+
+    Delegates to ``core.codecs.quantized_wire_bytes`` so the analytic
+    credit uses the *same* wire layout the runtime's packed codecs ship
+    (per-leaf scale header + packed payload) — the figure agrees with
+    what ``TransferRecord.wire_bytes`` would record for the transfer."""
+    from ..core.codecs import quantized_wire_bytes
+    if not cfg.enabled:
+        return int(sum(l.size for l in jax.tree.leaves(params)) * 4)
+    return int(sum(quantized_wire_bytes(l.size, bits=cfg.bits)
+                   for l in jax.tree.leaves(params)))

@@ -168,7 +168,8 @@ class _ThreadEngine:
             tr.open(HopSpec(index=i, link=link,
                             framing=("pickle" if pipe.backends[i] == "rpc"
                                      else "raw"),
-                            depth=pipe.queue_depth, seed=pipe.seed + i))
+                            depth=pipe.queue_depth, seed=pipe.seed + i,
+                            codec=pipe.codecs[i]))
             for i, link in enumerate(pipe.links)]
 
     @property
@@ -195,6 +196,8 @@ class _ThreadEngine:
 
     def migrate(self) -> None:
         self._build_workers(reuse=self.workers)
+        for i, chan in enumerate(self.chans):
+            chan.set_codec(self.pipe.codecs[i])
 
     def probe(self) -> None:
         for chan in self.chans:
@@ -252,12 +255,18 @@ class _ThreadEngine:
                 elif kind == WARMUP:
                     send(self.workers[i].warmup(obj), WARMUP)
                 elif kind == RECONFIG:
-                    bounds = tuple(obj)
+                    if isinstance(obj, dict):   # {"bounds":…, "codecs":…}
+                        bounds = tuple(obj["bounds"])
+                        codecs = obj.get("codecs")
+                    else:                       # legacy bare bounds tuple
+                        bounds, codecs = tuple(obj), None
                     w = self.workers[i]
                     if (bounds[i], bounds[i + 1]) != (w.lo, w.hi):
                         self.workers[i] = Worker(
                             f"worker{i + 1}", pipe.model, pipe.params,
                             bounds[i], bounds[i + 1], pipe.backends[i])
+                    if codecs is not None and not last:
+                        self.chans[i].set_codec(codecs[i])
                     send(obj, RECONFIG)
                 elif kind == PROBE:
                     send(None, PROBE)         # emulates 0 bytes per hop
@@ -376,6 +385,7 @@ class _ProcessEngine:
                        else max(pipe.queue_depth * k, 1)),
                 seed=pipe.seed + j, epoch=pipe.epoch,
                 scenario_hop=internal, send_timeout_s=pipe.timeout_s,
+                codec=pipe.codecs[j - 1] if internal else "none",
                 # every hop whose receiver is a worker loop may hand out
                 # transport-owned views; the result drain hands arrays
                 # back to user code, so it pays the one defensive copy
@@ -519,7 +529,7 @@ class _ProcessEngine:
         return self._await(WARMUP)
 
     def migrate(self) -> None:
-        self._feed.send(self.pipe.bounds(), kind=RECONFIG)
+        self._feed.send(self.pipe.reconfig_payload(), kind=RECONFIG)
         self._await(RECONFIG)
 
     def probe(self) -> None:
@@ -601,6 +611,7 @@ class EdgePipeline:
     def __init__(self, model, params, cuts=None, scenario=None,
                  backend: Backend | Sequence[Backend] = "lightweight",
                  transport: str | Sequence[str] | None = None,
+                 codec: str | Sequence[str] | None = None,
                  *, p: int | None = None, link: AnyLink | None = None,
                  queue_depth: int = 2, clock: Callable[[], float] | None = None,
                  seed: int = 0, timeout_s: float = 180.0):
@@ -664,6 +675,23 @@ class EdgePipeline:
         self.transport_names = names
         self.transports = names[:self.n_stages - 1]   # () for k == 1
 
+        # per-hop wire codecs: explicit arg > scenario.codecs > "none"
+        if codec is None:
+            codec = (self.scenario.codecs
+                     if self.scenario is not None
+                     and self.scenario.codecs is not None
+                     else "none")
+        n_real_hops = self.n_stages - 1
+        if isinstance(codec, str):
+            codecs = (codec,) * n_real_hops
+        else:
+            codecs = tuple(codec)
+            if len(codecs) != n_real_hops:
+                raise ValueError(f"{len(codecs)} codecs for "
+                                 f"{n_real_hops} hops")
+        from ..core.codecs import get_codec as _get_codec
+        self.codecs = tuple(_get_codec(c).name for c in codecs)
+
         self.queue_depth = queue_depth
         self.timeout_s = timeout_s
         self.seed = seed
@@ -696,6 +724,12 @@ class EdgePipeline:
 
     def bounds(self) -> tuple[int, ...]:
         return (0, *self.cuts, len(self.model.blocks))
+
+    def reconfig_payload(self) -> dict:
+        """The in-band RECONFIG message: stage bounds plus the per-hop
+        codec vector (workers re-split on the former and retune their
+        egress codec from the latter)."""
+        return {"bounds": self.bounds(), "codecs": self.codecs}
 
     # observation surface + legacy accessors ---------------------------- #
     @property
@@ -786,20 +820,31 @@ class EdgePipeline:
         self.close()
 
     # ------------------------------------------------------------------ #
-    def migrate(self, new_cuts, cost_s: float = 0.0) -> tuple[int, ...]:
+    def migrate(self, new_cuts, cost_s: float = 0.0,
+                codecs: Sequence[str] | None = None) -> tuple[int, ...]:
         """Live migration: re-deploy the workers at ``new_cuts``.
 
         ``cost_s`` is the one-off redeploy cost (weights moving to their
         new hosts) charged as wall-clock time, i.e. the splitter's
-        ``migration_cost_s``.  Hop state (clock, traces, observations)
-        survives the migration; under process transports each worker
-        host rebuilds its stage in place from a RECONFIG token.
+        ``migration_cost_s``.  ``codecs`` optionally retunes the per-hop
+        wire codecs in the same reconfiguration (the controller's
+        congestion → coarser-codec move).  Hop state (clock, traces,
+        observations) survives the migration; under process transports
+        each worker host rebuilds its stage in place from a RECONFIG
+        token.
 
         This is the *quiescent* path; mid-stream migration (batches in
         flight) goes through ``Session.migrate`` with an explicit
         drain-vs-drop policy."""
         self._assert_idle("migrate")
         new_cuts = self._check_cuts(new_cuts)
+        if codecs is not None:
+            from ..core.codecs import get_codec as _get_codec
+            codecs = tuple(_get_codec(c).name for c in codecs)
+            if len(codecs) != self.n_stages - 1:
+                raise ValueError(f"{len(codecs)} codecs for "
+                                 f"{self.n_stages - 1} hops")
+            self.codecs = codecs
         if cost_s > 0.0:
             time.sleep(cost_s)
         self._note_migration(new_cuts)

@@ -78,6 +78,7 @@ class LoopRecord:
     predicted_energy_j: float = 0.0
     throughput: float = 0.0         # measured samples/s, sliding window
     migration_cost_j: float = 0.0   # weights-over-the-wire J charged
+    codecs: tuple[str, ...] = ()    # per-hop wire codecs the batch ran under
 
 
 @runtime_checkable
@@ -178,7 +179,8 @@ class PinnedController:
             latency_s=latency_s, migrated=False, migration_cost_s=0.0,
             predicted_latency_s=0.0, predicted_throughput=0.0,
             energy_j=self._meter.update(),
-            throughput=session.window_throughput())
+            throughput=session.window_throughput(),
+            codecs=session.pipe.codecs)
 
 
 class AdaptiveController:
@@ -215,11 +217,13 @@ class AdaptiveController:
         """Drained transfers → estimators (nbytes=0 records are RTT
         probes: header-only ≈ one-way RTT/2)."""
         for est, net in zip(self.estimators, pipe.nets):
-            for nbytes, dt, _t in net.drain_observations():
-                if nbytes <= 0:
-                    est.observe(0, 2.0 * dt, is_rtt_probe=True)
+            for rec in net.drain_observations():
+                if rec.nbytes <= 0:
+                    est.observe(0, 2.0 * rec.elapsed_s, is_rtt_probe=True)
                 else:
-                    est.observe(nbytes, dt)
+                    # wire bytes, not raw: the estimator must predict the
+                    # transfer time of what actually crosses the hop
+                    est.observe(rec.nbytes, rec.elapsed_s)
 
     def on_result(self, session: "Session", seq: int, latency_s: float,
                   cuts: tuple[int, ...]) -> LoopRecord:
@@ -236,11 +240,14 @@ class AdaptiveController:
                 session.checkpoint(probe=self.probe)
                 self.ingest_observations(pipe)
                 m, migrated = self.splitter.step(self.estimators)
-                if migrated and m.partition != pipe.cuts:
-                    cost_s = self.splitter.migration_cost_s
+                new_codecs = m.codecs or None
+                if migrated and (m.partition != pipe.cuts
+                                 or (new_codecs is not None
+                                     and new_codecs != pipe.codecs)):
+                    cost_s = self.splitter.last_migration_cost_s
                     cost_j = self.splitter.last_migration_cost_j
                     session.migrate(m.partition, cost_s=cost_s,
-                                    cost_j=cost_j)
+                                    cost_j=cost_j, codecs=new_codecs)
             finally:
                 self._checking = False
         return LoopRecord(
@@ -252,7 +259,8 @@ class AdaptiveController:
             energy_j=energy,
             predicted_energy_j=pred.energy_j if pred else 0.0,
             throughput=session.window_throughput(),
-            migration_cost_j=cost_j)
+            migration_cost_j=cost_j,
+            codecs=pipe.codecs)
 
 
 # in-band tokens whose round trip a session tracks (kind -> outstanding)
@@ -396,17 +404,30 @@ class Session:
         self._await_tokens(STATS, *((PROBE,) if probe else ()))
 
     def migrate(self, new_cuts, cost_s: float = 0.0, cost_j: float = 0.0,
-                policy: MigrationPolicy | None = None) -> tuple[int, ...]:
+                policy: MigrationPolicy | None = None,
+                codecs: Sequence[str] | None = None) -> tuple[int, ...]:
         """In-stream migration to ``new_cuts`` under ``policy`` (the
         session default unless overridden).  ``cost_s`` stalls
         admissions for the redeploy; ``cost_j`` is recorded on the
-        pipeline's migration log.  Nested requests (a controller
+        pipeline's migration log.  ``codecs`` retunes the per-hop wire
+        codecs in the same in-band RECONFIG — a codec-only switch (cuts
+        unchanged) still runs the full reconfiguration, including the
+        in-band WARMUP that pre-compiles the new codec's kernels, so it
+        is charged like a migration.  Nested requests (a controller
         deciding again while a migration's own drain is pumping) are
         dropped — the in-progress move supersedes them."""
         if self._migrating:
             return self.pipe.cuts
         new_cuts = self.pipe._check_cuts(new_cuts)
-        if new_cuts == self.pipe.cuts:
+        if codecs is not None:
+            from ..core.codecs import get_codec
+            codecs = tuple(get_codec(c).name for c in codecs)
+            if len(codecs) != self.pipe.n_stages - 1:
+                raise ValueError(f"{len(codecs)} codecs for "
+                                 f"{self.pipe.n_stages - 1} hops")
+            if codecs == self.pipe.codecs:
+                codecs = None               # already active: not a switch
+        if new_cuts == self.pipe.cuts and codecs is None:
             return self.pipe.cuts
         policy = policy or self.policy
         if policy not in ("drain", "drop"):
@@ -419,8 +440,10 @@ class Session:
             if cost_s > 0.0:
                 time.sleep(cost_s)          # weight redeploy: admissions
                                             # stall, in-flight work doesn't
+            if codecs is not None:
+                self.pipe.codecs = codecs
             self.pipe._note_migration(new_cuts, cost_j=cost_j)
-            self._engine.submit_token(RECONFIG, self.pipe.bounds())
+            self._engine.submit_token(RECONFIG, self.pipe.reconfig_payload())
             self._expect[RECONFIG] += 1
             if self._exemplar is not None:  # jit-warm the new placement
                 self._engine.submit_token(WARMUP,

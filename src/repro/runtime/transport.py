@@ -75,11 +75,22 @@ class TransportTimeout(TransportError):
 
 class TransferRecord(NamedTuple):
     """One observed transfer on a hop.  Tuple-compatible with the legacy
-    ``(nbytes, elapsed_s, t_s)`` observation triple."""
+    ``(nbytes, elapsed_s, t_s)`` observation triple.
+
+    ``nbytes`` is what crossed the wire (the codec-packed payload when a
+    hop codec is active) — the number link estimators fit bandwidth
+    against and radio energy charges for.  ``raw_bytes`` is the
+    pre-codec tensor size (-1 in unpacked legacy tuples; ``record``
+    normalizes it to ``nbytes``)."""
 
     nbytes: int
     elapsed_s: float
     t_s: float
+    raw_bytes: int = -1
+
+    @property
+    def wire_bytes(self) -> int:
+        return self.nbytes
 
 
 @dataclass(frozen=True)
@@ -110,6 +121,16 @@ class HopSpec:
     # it so back-to-back transfers stay on the spin path instead of
     # paying a scheduler wakeup per message.
     spin_us: float = 80.0
+    # wire codec applied to float tensor payloads on this hop (a name
+    # from ``core.codecs.CODECS``); the sender packs, the receiver
+    # decodes off the per-frame codec byte, so a mid-stream RECONFIG
+    # can switch codecs without coordinating the two ends
+    codec: str = "none"
+    # WAN-shape a *real* (socket/shmem) hop: the sender injects
+    # ``pace_link.transfer_time(wire_bytes)`` before each data message,
+    # so receiver-measured records carry the modeled WAN cost on top of
+    # true loopback/serialization cost — the duress-WAN study path
+    pace_link: AnyLink | None = None
 
 
 # --------------------------------------------------------------------------- #
@@ -176,41 +197,68 @@ def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 1).bit_length()
 
 
-def _frame(payload, framing: str) -> tuple[int, int, tuple, object, bytes]:
-    """→ (ftype, dtype code, shape, payload buffer, pickled meta).
+def _frame(payload, framing: str,
+           codec=None) -> tuple[int, int, tuple, object, bytes, int]:
+    """→ (ftype, dtype code, shape, payload buffer, pickled meta,
+    codec wire code).
 
     The payload buffer is a ``memoryview`` over the source array where
     possible, so socket sends can scatter-gather straight out of it and
-    shmem sends copy exactly once (into the slot)."""
+    shmem sends copy exactly once (into the slot).  When a (non-identity)
+    ``codec`` applies — float tensor, non-empty, raw framing — the
+    buffer is the codec-packed bytes instead and the codec's wire code
+    rides in the frame so the receiver can decode statelessly."""
     if payload is None:
-        return _F_EMPTY, 0, (), b"", b""
+        return _F_EMPTY, 0, (), b"", b"", 0
     if isinstance(payload, np.ndarray) or hasattr(payload, "dtype"):
         if framing == "pickle":
             return _F_PICKLE, 0, (), _Serializer.dumps(payload), \
-                pickle.dumps(("P",))
+                pickle.dumps(("P",)), 0
         host = np.asarray(payload)
         if not host.flags.c_contiguous:       # NB: ascontiguousarray would
             host = np.ascontiguousarray(host)  # flatten 0-d shapes
         code = _DTYPE_CODE.get(host.dtype.name, -1)
         if code >= 0 and host.ndim <= _MAX_NDIM:
+            if (codec is not None and codec.code and host.size
+                    and codec.supports(host.dtype)):
+                return (_F_RAW, code, host.shape, codec.encode(host), b"",
+                        codec.code)
             data = host.data.cast("B") if host.size else b""
-            return _F_RAW, code, host.shape, data, b""
+            return _F_RAW, code, host.shape, data, b"", 0
         return _F_PICKLE, 0, (), host.tobytes(), \
-            pickle.dumps(("R", host.shape, str(host.dtype)))
-    return _F_OBJ, 0, (), pickle.dumps(payload), b""
+            pickle.dumps(("R", host.shape, str(host.dtype))), 0
+    return _F_OBJ, 0, (), pickle.dumps(payload), b"", 0
 
 
-def _unframe(ftype: int, code: int, shape: tuple, buf, meta_buf):
-    """Inverse of ``_frame`` over received buffers.  For ``_F_RAW`` the
-    result is a zero-copy ``np.frombuffer`` view over ``buf`` — the
-    caller decides whether that view may outlive the buffer."""
+def _unframe(ftype: int, code: int, shape: tuple, buf, meta_buf,
+             ccode: int = 0):
+    """Inverse of ``_frame`` over received buffers.  For uncoded
+    ``_F_RAW`` the result is a zero-copy ``np.frombuffer`` view over
+    ``buf`` — the caller decides whether that view may outlive the
+    buffer.  Codec-packed frames decode into fresh arrays (never views),
+    so no lease/copy discipline applies to them."""
     if ftype == _F_EMPTY:
         return None
     if ftype == _F_RAW:
+        if ccode:
+            from ..core.codecs import codec_for_code
+            return codec_for_code(ccode).decode(buf, shape, _dtype_of(code))
         return np.frombuffer(buf, dtype=_dtype_of(code)).reshape(shape)
     if ftype == _F_OBJ:
         return pickle.loads(buf)
     return _decode(pickle.loads(meta_buf), bytes(buf))
+
+
+def _raw_payload_bytes(ftype: int, code: int, shape, plen: int,
+                       ccode: int) -> int:
+    """Pre-codec tensor bytes for a received frame (== ``plen`` unless
+    a codec packed the payload); feeds ``TransferRecord.raw_bytes``."""
+    if ftype != _F_RAW or not ccode:
+        return plen
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n * _dtype_of(code).itemsize
 
 
 def as_jax(x):
@@ -246,12 +294,18 @@ class HopObservations:
         # the observation log out from under the estimators
         self.total_transfers: int = 0
         self.total_elapsed_s: float = 0.0
+        # pre-codec bytes (== total_bytes on uncoded hops): the
+        # raw-vs-wire gap is the codec's realized saving
+        self.total_raw_bytes: int = 0
 
-    def record(self, nbytes: int, elapsed_s: float, t_s: float) -> TransferRecord:
-        rec = TransferRecord(int(nbytes), float(elapsed_s), float(t_s))
+    def record(self, nbytes: int, elapsed_s: float, t_s: float,
+               raw_bytes: int = -1) -> TransferRecord:
+        rec = TransferRecord(int(nbytes), float(elapsed_s), float(t_s),
+                             int(raw_bytes) if raw_bytes >= 0 else int(nbytes))
         with self._lock:
             self.observations.append(rec)
             self.total_bytes += rec.nbytes
+            self.total_raw_bytes += rec.raw_bytes
             if rec.nbytes > 0:
                 self.total_transfers += 1
                 self.total_elapsed_s += rec.elapsed_s
@@ -303,9 +357,48 @@ class Channel(HopObservations, ABC):
         super().__init__(hop.link)
         self.hop = hop
         self.epoch = hop.epoch
+        self._codec = None                    # resolved lazily from hop.codec
 
     def now(self) -> float:
         return time.perf_counter() - self.epoch
+
+    @property
+    def codec(self):
+        """The hop's wire codec object (resolved lazily so channels can
+        pickle before the codec registry — and jax, behind its kernels —
+        loads in the worker process)."""
+        c = self._codec
+        if c is None or c.name != self.hop.codec:
+            from ..core.codecs import get_codec
+            c = self._codec = get_codec(self.hop.codec)
+        return c
+
+    def set_codec(self, name: str) -> None:
+        """Point this end at a different wire codec (RECONFIG path).
+        Senders start packing with it on the next message; receivers
+        need no call at all — they decode off the per-frame codec byte."""
+        import dataclasses
+        self.hop = dataclasses.replace(self.hop, codec=name)
+        self._codec = None
+
+    def _send_codec(self, kind: int):
+        """Codec to apply for a message of ``kind`` — data and warmup
+        exemplars pack; control tokens always travel uncoded."""
+        return self.codec if kind in (BATCH, WARMUP) else None
+
+    def _pace(self, nbytes: int, kind: int) -> None:
+        """Inject the hop's modeled WAN serialization delay (socket/
+        shmem duress studies).  Runs after framing — the delay scales
+        with *wire* bytes, which is exactly the codec's win — and after
+        the send stamp, so receiver-measured elapsed includes it."""
+        link = self.hop.pace_link
+        if link is None or kind not in (BATCH, WARMUP, PROBE):
+            return
+        if isinstance(link, LinkTrace):
+            dt = link.transfer_time(nbytes, self.now())
+        else:
+            dt = link.transfer_time(nbytes)
+        time.sleep(dt)
 
     @abstractmethod
     def send(self, payload=None, kind: int = BATCH) -> TransferRecord | None:
@@ -349,7 +442,7 @@ class EmulatedChannel(Channel):
         self._rng = np.random.default_rng(hop.seed)
         self._q: queue.Queue = queue.Queue(maxsize=max(hop.depth, 1))
 
-    def emulate(self, nbytes: int) -> float:
+    def emulate(self, nbytes: int, raw_bytes: int = -1) -> float:
         """Inject the modeled wire delay for ``nbytes`` and record it."""
         t = self._clock()
         if isinstance(self.link, LinkTrace):
@@ -357,20 +450,42 @@ class EmulatedChannel(Channel):
         else:
             dt = self.link.transfer_time(nbytes)
         time.sleep(dt)
-        self.record(nbytes, dt, t)
+        self.record(nbytes, dt, t, raw_bytes=raw_bytes)
         return dt
+
+    def _roundtrip(self, payload):
+        """Apply the hop codec's exact wire transform in place of real
+        packing: the next stage computes on the degraded tensor, so
+        emulated runs carry the codec's accuracy cost end to end.
+        → (wire bytes, raw bytes, decoded payload)."""
+        host = np.asarray(payload)
+        raw = host.size * host.dtype.itemsize
+        codec = self.codec
+        if not (codec.code and host.size and codec.supports(host.dtype)):
+            return raw, raw, payload
+        if not host.flags.c_contiguous:
+            host = np.ascontiguousarray(host)
+        buf = codec.encode(host)
+        return len(buf), raw, codec.decode(buf, host.shape, host.dtype)
 
     def send(self, payload=None, kind: int = BATCH):
         if kind == BATCH:
             if self.hop.framing == "pickle":
                 buf = _Serializer.dumps(payload)
-                nbytes, out = len(buf), _Serializer.loads(buf)
+                nbytes, raw, out = len(buf), len(buf), _Serializer.loads(buf)
             else:
-                host = np.asarray(payload)
-                nbytes, out = host.size * host.dtype.itemsize, payload
-            dt = self.emulate(nbytes)
+                nbytes, raw, out = self._roundtrip(payload)
+            dt = self.emulate(nbytes, raw_bytes=raw)
             self._q.put((kind, out))
-            return TransferRecord(nbytes, dt, self._clock())
+            return TransferRecord(nbytes, dt, self._clock(), raw)
+        if (kind == WARMUP and self.hop.framing != "pickle"
+                and (isinstance(payload, np.ndarray)
+                     or hasattr(payload, "dtype"))):
+            # round-trip (no delay): warms the codec's jitted kernels and
+            # hands downstream a representative degraded exemplar
+            _, _, payload = self._roundtrip(payload)
+            self._q.put((kind, payload))
+            return None
         if kind == PROBE:
             # header-only message: charges RTT/2 (+ per-message overhead),
             # recorded as an nbytes=0 observation; the token traverses
@@ -389,10 +504,11 @@ class EmulatedChannel(Channel):
                 from None
 
 
-# packed socket frame: ftype, kind, dtype code, ndim, meta_len, t_send,
-# payload_len, shape[8] — everything the common tensor case needs in one
-# fixed-size read, no pickled metadata on the wire (mlen = 0)
-_FHDR = struct.Struct("!BBbB I d Q 8q")
+# packed socket frame: ftype, kind, dtype code, ndim, codec code,
+# meta_len, t_send, payload_len, shape[8] — everything the common tensor
+# case needs in one fixed-size read, no pickled metadata on the wire
+# (mlen = 0); codec code 0 = uncoded payload bytes
+_FHDR = struct.Struct("!BBbBB I d Q 8q")
 
 
 class SocketChannel(Channel):
@@ -449,9 +565,11 @@ class SocketChannel(Channel):
         if self._tx is None:
             raise TransportError(f"hop {self.hop.index}: receive-only end")
         t0 = time.perf_counter()              # serialization counts
-        ftype, code, shape, data, meta = _frame(payload, self.hop.framing)
-        hdr = _FHDR.pack(ftype, kind, code, len(shape), len(meta), t0,
-                         len(data), *shape, *((0,) * (8 - len(shape))))
+        ftype, code, shape, data, meta, ccode = _frame(
+            payload, self.hop.framing, self._send_codec(kind))
+        hdr = _FHDR.pack(ftype, kind, code, len(shape), ccode, len(meta),
+                         t0, len(data), *shape, *((0,) * (8 - len(shape))))
+        self._pace(len(data) + len(meta), kind)
         bufs = [memoryview(hdr)]
         if meta:
             bufs.append(memoryview(meta))
@@ -495,7 +613,7 @@ class SocketChannel(Channel):
         if self._rx is None:
             raise TransportError(f"hop {self.hop.index}: send-only end")
         self._read_into(memoryview(self._hbuf), timeout)
-        (ftype, kind, code, ndim, mlen, t0, plen,
+        (ftype, kind, code, ndim, ccode, mlen, t0, plen,
          *shape) = _FHDR.unpack(self._hbuf)
         meta = b""
         if mlen:
@@ -506,12 +624,15 @@ class SocketChannel(Channel):
         view = memoryview(self._rbuf)[:plen]
         if plen:
             self._read_into(view, None)
-        payload = _unframe(ftype, code, tuple(shape[:ndim]), view, meta)
-        if (ftype == _F_RAW and not self.hop.zero_copy
+        payload = _unframe(ftype, code, tuple(shape[:ndim]), view, meta,
+                           ccode)
+        if (ftype == _F_RAW and not ccode and not self.hop.zero_copy
                 and isinstance(payload, np.ndarray)):
             payload = payload.copy()          # outlives the reusable buffer
         if kind in (BATCH, PROBE) and self.hop.scenario_hop:
-            self.record(plen, time.perf_counter() - t0, t0 - self.epoch)
+            self.record(plen, time.perf_counter() - t0, t0 - self.epoch,
+                        raw_bytes=_raw_payload_bytes(
+                            ftype, code, shape[:ndim], plen, ccode))
         return kind, payload
 
     def close(self) -> None:
@@ -525,11 +646,11 @@ class SocketChannel(Channel):
 
 
 # shmem control ring: fixed-stride metadata records packed directly into
-# the shared control segment — ftype, kind, dtype code, ndim, slot index
-# (-1 = inline/none), meta_len, inline_len, t_send, nbytes, shape[8];
-# the rest of the stride is the inline area (pickled meta + small
-# payloads ride in the record itself, no slot round trip)
-_RREC = struct.Struct("<BBbB i I I d Q 8q")
+# the shared control segment — ftype, kind, dtype code, ndim, codec
+# code, slot index (-1 = inline/none), meta_len, inline_len, t_send,
+# nbytes, shape[8]; the rest of the stride is the inline area (pickled
+# meta + small payloads ride in the record itself, no slot round trip)
+_RREC = struct.Struct("<BBbBB i I I d Q 8q")
 _STRIDE = 256
 _INLINE = _STRIDE - _RREC.size
 _BELL_CHUNK_S = 0.05    # re-check cadence while parked on the doorbell
@@ -754,8 +875,10 @@ class ShmemChannel(Channel):
     # -- hot path --------------------------------------------------------- #
     def send(self, payload=None, kind: int = BATCH):
         t0 = time.perf_counter()              # serialization + copy count
-        ftype, code, shape, data, meta = _frame(payload, self.hop.framing)
+        ftype, code, shape, data, meta, ccode = _frame(
+            payload, self.hop.framing, self._send_codec(kind))
         nbytes, mlen = len(data), len(meta)
+        self._pace(nbytes + mlen, kind)
         if mlen > _INLINE:
             raise TransportError(
                 f"hop {self.hop.index}: {mlen} B of pickled metadata "
@@ -777,7 +900,7 @@ class ShmemChannel(Channel):
         head = self._ld(self._DH)
         base = self._rec_off + (head % self._cap) * _STRIDE
         _RREC.pack_into(self._ctl.buf, base, ftype, kind, code, len(shape),
-                        slot, mlen, ilen, t0, nbytes,
+                        ccode, slot, mlen, ilen, t0, nbytes,
                         *shape, *((0,) * (8 - len(shape))))
         inl = base + _RREC.size
         if mlen:
@@ -799,30 +922,36 @@ class ShmemChannel(Channel):
         self._wait(ready, self._bell_dr, timeout, "recv timed out")
         tail = self._ld(self._DT)
         base = self._rec_off + (tail % self._cap) * _STRIDE
-        (ftype, kind, code, ndim, slot, mlen, ilen, t0, nbytes,
+        (ftype, kind, code, ndim, ccode, slot, mlen, ilen, t0, nbytes,
          *shape) = _RREC.unpack_from(self._ctl.buf, base)
         inl = base + _RREC.size
         meta = bytes(self._ctl.buf[inl:inl + mlen]) if mlen else b""
         if slot >= 0:
             view = self._slot_view(slot, nbytes)
-            payload = _unframe(ftype, code, tuple(shape[:ndim]), view, meta)
-            if ftype == _F_RAW and self.hop.zero_copy:
+            payload = _unframe(ftype, code, tuple(shape[:ndim]), view, meta,
+                               ccode)
+            if ftype == _F_RAW and not ccode and self.hop.zero_copy:
                 self._lease = slot            # view stays valid until next recv
             else:
-                if ftype == _F_RAW and isinstance(payload, np.ndarray):
+                # codec-decoded payloads are fresh arrays, no lease needed
+                if (ftype == _F_RAW and not ccode
+                        and isinstance(payload, np.ndarray)):
                     payload = payload.copy()  # outlives the slot
                 self._push_free(slot)
         else:
             # inline payloads are copied out — the ring record is reused
             # after one wraparound, sooner than any lease could track
             buf = bytes(self._ctl.buf[inl + mlen:inl + mlen + ilen])
-            payload = _unframe(ftype, code, tuple(shape[:ndim]), buf, meta)
+            payload = _unframe(ftype, code, tuple(shape[:ndim]), buf, meta,
+                               ccode)
         was_full = self._ld(self._DH) - tail >= self._cap
         self._st(self._DT, tail + 1)
         if was_full:                          # unblock a ring-full sender
             self._ring(self._bell_fs)
         if kind in (BATCH, PROBE) and self.hop.scenario_hop:
-            self.record(nbytes, time.perf_counter() - t0, t0 - self.epoch)
+            self.record(nbytes, time.perf_counter() - t0, t0 - self.epoch,
+                        raw_bytes=_raw_payload_bytes(
+                            ftype, code, shape[:ndim], nbytes, ccode))
         return kind, payload
 
     def close(self) -> None:
@@ -1029,9 +1158,17 @@ def _worker_main(spec: dict) -> None:
             elif kind == PROBE:
                 egress.send(None, kind=PROBE)
             elif kind == RECONFIG:
-                bounds = tuple(obj)
+                # payload: legacy bounds tuple, or a dict carrying the
+                # bounds plus a per-hop codec vector to switch to
+                if isinstance(obj, dict):
+                    bounds, codecs = tuple(obj["bounds"]), obj.get("codecs")
+                else:
+                    bounds, codecs = tuple(obj), None
                 if (bounds[stage], bounds[stage + 1]) != (worker.lo, worker.hi):
                     worker = build(bounds)
+                if (codecs is not None and egress.hop.scenario_hop
+                        and 0 <= egress.hop.index < len(codecs)):
+                    egress.set_codec(codecs[egress.hop.index])
                 egress.send(obj, kind=RECONFIG)
             elif kind == STATS:
                 ctrl.send(_flush_stats(stage, worker, ingress))
@@ -1085,7 +1222,9 @@ def _sink_main(spec: dict) -> None:
 def measure_hop(transport: str, sizes: Sequence[int], n_per_size: int = 20,
                 warmup: int | None = None, depth: int = 4,
                 framing: str = "raw", timeout_s: float = 60.0,
-                spin_us: float = 500.0) -> dict[int, list[float]]:
+                spin_us: float = 500.0, codec: str = "none",
+                pace_link: AnyLink | None = None,
+                full: bool = False) -> dict[int, list]:
     """Stream float32 payloads of each size in ``sizes`` over one real
     hop to a spawned sink process → {nbytes: receiver-measured elapsed
     seconds per transfer}.  The sink credits each message back over a
@@ -1108,7 +1247,7 @@ def measure_hop(transport: str, sizes: Sequence[int], n_per_size: int = 20,
                 # wide spin window: the credit round trip must land in
                 # it, or the per-hop number degenerates into a
                 # scheduler-wakeup benchmark (bimodal under load)
-                spin_us=spin_us))
+                spin_us=spin_us, codec=codec, pace_link=pace_link))
     tx, rx = chan.split()
     parent_c, child_c = ctx.Pipe()
     proc = ctx.Process(target=_sink_main, args=({"chan": rx, "ctrl": child_c},),
@@ -1132,7 +1271,8 @@ def measure_hop(transport: str, sizes: Sequence[int], n_per_size: int = 20,
             if not parent_c.poll(timeout_s):
                 raise TransportError(f"{transport} sink stopped responding")
             recs = [TransferRecord(*r) for r in parent_c.recv()]
-            out[nbytes] = [r.elapsed_s for r in recs if r.nbytes == x.nbytes]
+            recs = [r for r in recs if r.raw_bytes == x.nbytes]
+            out[nbytes] = recs if full else [r.elapsed_s for r in recs]
     finally:
         try:
             tx.send(kind=STOP)

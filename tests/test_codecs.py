@@ -1,0 +1,455 @@
+"""Per-hop wire codecs: Pallas pack kernels vs refs, bounded round-trip
+error over dtypes/shapes (hypothesis where installed, a seeded sweep
+otherwise), ``none`` bit-parity with uncoded framing, the codec byte
+surviving socket and shmem framing cross-process, and the 4-objective
+DP front cross-validated against the exhaustive sweep.
+"""
+import math
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codecs as C
+from repro.core.blocks import Block, BlockGraph
+from repro.core.devices import DeviceProfile, Link
+from repro.core.pareto import pareto_front, resolve_objectives
+from repro.core.partitioner import (best_accuracy, dp_front_kway,
+                                    solve_with_codecs, sweep_kway)
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(11)
+
+# shapes every codec must survive: 0-d, empty, 1-d, odd sizes that do
+# not fill a Pallas lane, multi-dim
+SHAPES = [(), (0,), (1,), (7,), (127,), (128,), (129,), (3, 5, 7), (2, 1000)]
+FLOAT_DTYPES = [np.float16, np.float32, np.float64]
+
+
+def _sample(shape, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(size=shape or ()).astype(dtype)
+    return np.asarray(x * 3.0, dtype=dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Pallas kernels vs pure-jnp refs
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("shape", SHAPES)
+def test_int8_pack_pallas_matches_ref(shape):
+    x = jnp.asarray(_sample(shape, np.float32, seed=1))
+    q, s = ops.int8_pack(x, interpret=True)
+    qr, sr = ref.int8_pack_ref(x)
+    assert np.array_equal(np.asarray(q), np.asarray(qr))
+    assert np.asarray(s) == pytest.approx(np.asarray(sr), rel=1e-6)
+    y = ops.int8_unpack(q, s, interpret=True)
+    yr = ref.int8_unpack_ref(qr, sr)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fp8_pack_pallas_matches_ref(shape):
+    x = jnp.asarray(_sample(shape, np.float32, seed=2))
+    q, s = ops.fp8_pack(x, interpret=True)
+    qr, sr = ref.fp8_pack_ref(x)
+    assert np.array_equal(np.asarray(q).view(np.uint8),
+                          np.asarray(qr).view(np.uint8))
+    y = ops.fp8_unpack(q, s, interpret=True)
+    yr = ref.fp8_unpack_ref(qr, sr)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape,k", [((128,), 16), ((7,), 1), ((3, 5, 7), 13),
+                                     ((2, 1000), 250)])
+def test_topk_select_pallas_matches_ref(shape, k):
+    x = jnp.asarray(_sample(shape, np.float32, seed=3))
+    idx, vals = ops.topk_select(x, k=k, interpret=True)
+    idx_r, vals_r = ref.topk_select_ref(x, k=k)
+    assert np.array_equal(np.asarray(idx), np.asarray(idx_r))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(vals_r))
+    # indices ascending, values = flat[idx]
+    assert np.all(np.diff(np.asarray(idx)) > 0) or k == 1
+    flat = np.asarray(x).reshape(-1)
+    np.testing.assert_allclose(flat[np.asarray(idx)], np.asarray(vals))
+
+
+# --------------------------------------------------------------------------- #
+# Round-trip properties: bit-parity for none, bounded error for lossy
+# --------------------------------------------------------------------------- #
+def _roundtrip_bounds(codec_name, x):
+    """Assert the codec's wire round trip respects its error contract."""
+    c = C.get_codec(codec_name)
+    host = np.ascontiguousarray(x)
+    if not c.supports(host.dtype) or host.size == 0:
+        assert np.array_equal(C.roundtrip(c, host), host)
+        return
+    buf = c.encode(host)
+    assert len(buf) == c.wire_bytes(host.size, host.dtype.itemsize)
+    y = c.decode(buf, host.shape, host.dtype)
+    assert y.shape == host.shape and y.dtype == host.dtype
+    amax = float(np.max(np.abs(host.astype(np.float64))))
+    err = float(np.max(np.abs(host.astype(np.float64) -
+                              y.astype(np.float64))))
+    # restoring to the original dtype re-rounds: allow its own epsilon
+    dt_eps = amax * float(np.finfo(host.dtype).eps)
+    if codec_name == "int8":
+        scale = max(amax, 1e-12) / 127.0
+        assert err <= 0.5 * scale * 1.01 + dt_eps + 1e-6
+    elif codec_name == "fp8":
+        # e4m3: 3 mantissa bits -> 2^-4 relative, plus the denormal floor
+        scale = max(amax, 1e-12) / 448.0
+        assert err <= amax * 0.0625 * 1.01 + scale + dt_eps + 1e-6
+    elif codec_name == "topk":
+        k = c._k(host.size)
+        nz = np.count_nonzero(y)
+        assert nz <= k
+        # survivors are exact
+        mask = y.reshape(-1) != 0
+        np.testing.assert_allclose(y.reshape(-1)[mask],
+                                   host.reshape(-1).astype(y.dtype)[mask])
+        assert err <= amax + 1e-6
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                            # container has no hypothesis:
+    HAVE_HYPOTHESIS = False                    # the seeded sweep below covers
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.sampled_from(["int8", "fp8", "topk"]),
+           st.sampled_from(SHAPES),
+           st.sampled_from(FLOAT_DTYPES),
+           st.integers(0, 2**31 - 1))
+    @settings(max_examples=60, deadline=None)
+    def test_lossy_roundtrip_bounded_property(codec, shape, dtype, seed):
+        _roundtrip_bounds(codec, _sample(shape, dtype, seed=seed))
+else:
+    @pytest.mark.parametrize("codec", ["int8", "fp8", "topk"])
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("dtype", FLOAT_DTYPES)
+    def test_lossy_roundtrip_bounded_sweep(codec, shape, dtype):
+        for seed in (0, 1, 2):
+            _roundtrip_bounds(codec, _sample(shape, dtype, seed=seed))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32, np.uint8])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_none_codec_is_bitexact(dtype, shape):
+    c = C.get_codec("none")
+    x = np.ascontiguousarray((RNG.standard_normal(size=shape or ()) * 100)
+                             .astype(dtype))
+    buf = c.encode(x)
+    assert buf == x.tobytes()                  # the pre-codec wire layout
+    y = c.decode(buf, x.shape, x.dtype)
+    assert np.array_equal(y, x) and y.dtype == x.dtype
+
+
+def test_lossy_codec_skips_unsupported_dtypes():
+    for name in ("int8", "fp8", "topk"):
+        c = C.get_codec(name)
+        assert c.supports(np.dtype(np.float32))
+        assert not c.supports(np.dtype(np.int32))
+        assert not c.supports(np.dtype(np.uint8))
+
+
+def test_registry_and_wire_codes_are_stable():
+    # wire codes are append-only protocol constants
+    assert [C.get_codec(n).code for n in ("none", "int8", "fp8", "topk")] \
+        == [0, 1, 2, 3]
+    for n in ("none", "int8", "fp8", "topk"):
+        assert C.codec_for_code(C.get_codec(n).code).name == n
+    with pytest.raises(KeyError):
+        C.get_codec("lzma")
+
+    class Pretender(C.Codec):                  # claims int8's wire code
+        name, code = "pretender", 1
+    with pytest.raises(ValueError):
+        C.register_codec(Pretender())
+    assert "pretender" not in C.CODECS
+
+
+def test_codec_wire_bytes_analytic_matches_encode():
+    for name in ("none", "int8", "fp8", "topk"):
+        c = C.get_codec(name)
+        for n in (1, 7, 128, 4096):
+            x = np.asarray(RNG.standard_normal(n), np.float32)
+            assert C.codec_wire_bytes(c, x.nbytes) == len(c.encode(x))
+    # int8 hits the acceptance ratio on >=64 KiB fp32 payloads
+    raw = 64 * 1024
+    assert raw / C.codec_wire_bytes(C.get_codec("int8"), raw) >= 3.5
+
+
+def test_compressed_bytes_agrees_with_codec_wire_layout():
+    from repro.optim.compress import CompressionConfig, compressed_bytes
+    params = {"a": np.zeros((32, 32), np.float32),
+              "b": np.zeros((100,), np.float32)}
+    on = compressed_bytes(params, CompressionConfig(enabled=True, bits=8))
+    off = compressed_bytes(params, CompressionConfig(enabled=False))
+    assert off == (32 * 32 + 100) * 4
+    # per-leaf scale header + 1 byte/elem: the int8 codec's wire layout
+    assert on == sum(C.quantized_wire_bytes(v.size, bits=8)
+                     for v in params.values())
+    assert on == (32 * 32 + 100) + 2 * 4
+
+
+# --------------------------------------------------------------------------- #
+# Framing: codec byte in _FHDR/_RREC, none bit-parity, raw+wire records
+# --------------------------------------------------------------------------- #
+def test_frame_none_matches_uncoded_frame():
+    """With the none codec the framed payload is byte-identical to an
+    uncoded frame — the `codec byte 0` path IS the pre-codec layout."""
+    from repro.runtime import transport as T
+    x = np.asarray(RNG.standard_normal((4, 32)), np.float32)
+    uncoded = T._frame(x, "raw", None)
+    noned = T._frame(x, "raw", C.get_codec("none"))
+    assert uncoded == noned
+    ftype, code, shape, data, meta, ccode = noned
+    assert ccode == 0 and bytes(data) == x.tobytes()
+    y = T._unframe(ftype, code, shape, data, meta, ccode)
+    assert np.array_equal(np.asarray(y), x)
+
+
+def test_frame_codec_packs_and_unframe_restores():
+    from repro.runtime import transport as T
+    x = np.asarray(RNG.standard_normal((8, 64)), np.float32)
+    ftype, code, shape, data, meta, ccode = T._frame(
+        x, "raw", C.get_codec("int8"))
+    assert ccode == 1 and len(data) == 4 + x.size
+    y = T._unframe(ftype, code, shape, data, meta, ccode)
+    scale = np.max(np.abs(x)) / 127.0
+    assert float(np.max(np.abs(np.asarray(y) - x))) <= 0.5 * scale * 1.01
+    # non-float payloads ship uncoded whatever the hop codec says
+    xi = np.arange(64, dtype=np.int32)
+    *_, data_i, _, ccode_i = T._frame(xi, "raw", C.get_codec("int8"))
+    assert ccode_i == 0 and bytes(data_i) == xi.tobytes()
+
+
+@pytest.mark.parametrize("transport", ["socket", "shmem"])
+def test_codec_byte_survives_framing_cross_process(transport):
+    """A coded hop to a spawned sink: receiver-side records carry both
+    the raw payload size (decoded from the codec byte + shape) and the
+    packed wire size."""
+    from repro.runtime.transport import measure_hop
+    nbytes = 64 * 1024
+    out = measure_hop(transport, [nbytes], n_per_size=4, codec="int8",
+                      full=True)
+    recs = out[nbytes]
+    assert recs, "sink returned no matching records"
+    for r in recs:
+        assert r.raw_bytes == nbytes
+        assert r.nbytes == 4 + nbytes // 4     # scale header + int8 payload
+        assert r.wire_bytes == r.nbytes
+        assert r.raw_bytes / r.nbytes >= 3.5   # acceptance ratio on the wire
+
+
+def test_uncoded_measure_hop_records_raw_equals_wire():
+    from repro.runtime.transport import measure_hop
+    out = measure_hop("socket", [4096], n_per_size=3, codec="none", full=True)
+    for r in out[4096]:
+        assert r.raw_bytes == r.nbytes == 4096
+
+
+# --------------------------------------------------------------------------- #
+# Emulated end-to-end: real degradation + codec switch mid-stream
+# --------------------------------------------------------------------------- #
+def _tiny_model():
+    from repro.models.cnn.layers import (Conv2D, Flatten, Linear, Pool,
+                                         ReLU, Sequential)
+    from repro.models.cnn.zoo import CNNModel
+    blocks = [
+        ("conv0", Sequential([Conv2D(3, 8, 3, 1, 1), ReLU()])),
+        ("conv1", Sequential([Conv2D(8, 8, 3, 1, 1), ReLU()])),
+        ("pool", Pool("max", 2, 2)),
+        ("conv2", Sequential([Conv2D(8, 16, 3, 1, 1), ReLU()])),
+        ("head", Sequential([Flatten(), Linear(16 * 16 * 16, 10)])),
+    ]
+    return CNNModel("tinycnn", blocks, input_hw=32)
+
+
+def test_emulated_pipeline_codec_roundtrip_and_switch():
+    from repro.core.devices import LAN_PI_GPU
+    from repro.runtime.edge import EdgePipeline
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3)),
+                   np.float32)
+    ref_y = np.asarray(m.apply(params, x))
+    pipe = EdgePipeline(m, params, cuts=(2, 4),
+                        scenario=[LAN_PI_GPU, LAN_PI_GPU], codec="int8")
+    try:
+        pipe.warmup(x)
+        y, _, _ = pipe.run_one(x)
+        err = float(np.max(np.abs(np.asarray(y) - ref_y)))
+        assert 0 < err < 0.1                   # real int8 degradation
+        recs = [r for r in pipe.nets[0].observations if r.nbytes > 0]
+        assert recs and all(r.raw_bytes / r.nbytes > 3.5 for r in recs)
+        # quiescent codec-only migrate back to bit-exact
+        pipe.migrate(pipe.cuts, codecs=("none", "none"))
+        assert pipe.codecs == ("none", "none")
+        y2, _, _ = pipe.run_one(x)
+        assert np.array_equal(np.asarray(y2), ref_y)
+    finally:
+        pipe.close()
+
+
+def test_session_codec_only_switch_is_a_migration():
+    """A codec retune with unchanged cuts still runs the in-band
+    RECONFIG + WARMUP — charged like a migration."""
+    from repro.core.devices import LAN_PI_GPU
+    from repro.runtime.edge import EdgePipeline
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3)),
+                   np.float32)
+    pipe = EdgePipeline(m, params, cuts=(2, 4),
+                        scenario=[LAN_PI_GPU, LAN_PI_GPU])
+    try:
+        pipe.warmup(x)
+        n_migrations = len(pipe.migrations)
+        with pipe.session(inflight=1) as s:
+            s.submit(x)
+            list(s.results())
+            s.migrate(pipe.cuts, codecs=("fp8", "fp8"))
+            s.submit(x)
+            list(s.results())
+        assert pipe.codecs == ("fp8", "fp8")
+        assert len(pipe.migrations) == n_migrations + 1
+        # re-issuing the active codecs is a no-op, not another migration
+        with pipe.session(inflight=1) as s:
+            s.migrate(pipe.cuts, codecs=("fp8", "fp8"))
+        assert len(pipe.migrations) == n_migrations + 1
+    finally:
+        pipe.close()
+
+
+# --------------------------------------------------------------------------- #
+# Calibration + 4-objective solve
+# --------------------------------------------------------------------------- #
+def test_calibration_measures_degradation():
+    m = _tiny_model()
+    params = m.init(jax.random.PRNGKey(0))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (8, 32, 32, 3)),
+                   np.float32)
+    cal = C.calibrate_codecs(m, params, x, codecs=("int8",), cuts=(2, 4))
+    for cut in (2, 4):
+        acc = cal.table[(cut, "int8")]
+        assert 0.0 <= acc.top1_agreement <= 1.0
+        assert acc.max_abs_err > 0.0           # lossy really is lossy
+        assert cal.accuracy(cut, C.get_codec("int8")) == acc.top1_agreement
+    # unmeasured (cut, codec) falls back to the codec's nominal figure
+    assert cal.accuracy(3, C.get_codec("fp8")) == \
+        C.get_codec("fp8").nominal_accuracy
+    assert cal.accuracy(2, C.get_codec("none")) == 1.0
+
+
+def _toy_graph(n=8, seed=5):
+    rng = np.random.default_rng(seed)
+    blocks = tuple(
+        Block(name=f"b{i}", flops=float(rng.integers(1, 9)) * 1e8,
+              out_bytes=int(rng.integers(1, 5)) * 4096,
+              weight_bytes=int(rng.integers(1, 9)) * 8192,
+              act_bytes=4096)
+        for i in range(n))
+    return BlockGraph("toy", blocks, input_bytes=4096)
+
+
+def _chain3():
+    dev = DeviceProfile("d", flops_per_s=1e9, mem_bytes=1 << 30,
+                        active_w=4.0, idle_w=1.0)
+    link = Link("l", rtt_s=20e-3, bw_bytes_per_s=2e6,
+                energy_per_byte_j=3e-7)
+    return (dev, dev, dev), (link, link)
+
+
+@pytest.mark.parametrize("codecs,floor", [
+    (("int8", "int8"), None),
+    (("int8", "topk"), None),
+    (("topk", "topk"), 0.95),
+    (("int8", "none"), 0.98),
+])
+def test_dp_front_4d_matches_exhaustive_sweep(codecs, floor):
+    g = _toy_graph()
+    devices, links = _chain3()
+    objs = resolve_objectives(4)
+    dp = dp_front_kway(g, devices, links, objectives=4, codecs=codecs,
+                       accuracy_floor=floor)
+    sweep = sweep_kway(g, devices, links, codecs=codecs)
+    if floor is not None:
+        sweep = [p for p in sweep if p.accuracy >= floor]
+    expect = pareto_front(sweep, objs)
+    assert sorted(p.partition for p in dp) == \
+        sorted(p.partition for p in expect)
+    for p in dp:
+        assert p.codecs == tuple(C.get_codec(c).name for c in codecs)
+        if floor is not None:
+            assert p.accuracy >= floor
+
+
+def test_dp_front_accuracy_floor_can_empty_the_front():
+    g = _toy_graph()
+    devices, links = _chain3()
+    # two topk hops: nominal 0.97**2 < 0.95 — nothing survives
+    assert dp_front_kway(g, devices, links, objectives=4,
+                         codecs=("topk", "topk"), accuracy_floor=0.95) == []
+
+
+def test_solve_with_codecs_joint_front_and_floor():
+    from repro.core.scenarios import Scenario
+    g = _toy_graph()
+    devices, links = _chain3()
+    scen = Scenario("toy3", devices, links)
+    front = solve_with_codecs(g, scen, codec_choices=("none", "int8"),
+                              accuracy_floor=0.97)
+    assert front
+    assert all(p.accuracy >= 0.97 for p in front)
+    # the uncoded assignment is always accuracy-optimal
+    assert best_accuracy(front).codecs == ("none", "none")
+    # coarser codecs must appear on the front: they strictly shrink hop
+    # bytes, so they win the latency axis on a bandwidth-bound chain
+    assert any("int8" in p.codecs for p in front)
+    accs = {p.codecs: p.accuracy for p in front}
+    assert all(a >= 0.97 for a in accs.values())
+
+
+def test_scenario_codecs_flow_through_solve():
+    from repro.core.partitioner import solve
+    from repro.core.scenarios import get
+    g = _toy_graph()
+    scen = get("pi_pi_gpu_int8")
+    pts = solve(g, scen, objectives=4)
+    assert pts and all(p.codecs == ("int8", "int8") for p in pts)
+    nominal = C.get_codec("int8").nominal_accuracy
+    assert all(p.accuracy == pytest.approx(nominal ** 2) for p in pts)
+    # and the packed bytes shrink the modeled wire time vs uncoded
+    pts_none = solve(g, scen, objectives=4, codecs=("none", "none"))
+    by_cut = {p.partition: p for p in pts_none}
+    for p in pts:
+        if p.partition in by_cut:
+            assert p.net_s <= by_cut[p.partition].net_s
+
+
+# --------------------------------------------------------------------------- #
+# Satellite: computed migration cost
+# --------------------------------------------------------------------------- #
+def test_migration_time_computed_from_moved_bytes():
+    from repro.core.autosplit import AdaptiveSplitter
+    from repro.core.scenarios import Scenario
+    g = _toy_graph()
+    devices, links = _chain3()
+    scen = Scenario("toy3", devices, links)
+    sp = AdaptiveSplitter(g, scen, batch=2)    # migration_cost_s=None
+    # moving cut (2, 4) -> (4, 4): blocks 2 and 3 cross hop 0
+    moved = g.blocks[2].weight_bytes + g.blocks[3].weight_bytes
+    expect = sp.migration_overhead_s + links[0].transfer_time(moved)
+    assert sp.migration_time_s((2, 4), (4, 4)) == pytest.approx(expect)
+    # no move: just the fixed overhead (the codec-only switch charge)
+    assert sp.migration_time_s((2, 4), (2, 4)) == \
+        pytest.approx(sp.migration_overhead_s)
+    # the legacy constant still overrides
+    sp.migration_cost_s = 0.75
+    assert sp.migration_time_s((2, 4), (4, 4)) == 0.75

@@ -253,8 +253,9 @@ def test_per_hop_observations_recorded(mobilenet):
     for net in pipe.nets:
         obs = net.drain_observations()
         assert len(obs) == 1
-        nbytes, dt, t = obs[0]
+        nbytes, dt, t, raw = obs[0]
         assert nbytes > 0 and dt > 0 and t >= 0
+        assert raw == nbytes                         # uncoded: wire == raw
         assert net.drain_observations() == []        # drained
         # radio accounting survives the drain (lifetime counters)
         assert net.total_bytes == nbytes
