@@ -30,6 +30,15 @@
 #                          fails unless int8 holds ≥3.5× wire reduction
 #                          and strictly beats `none` on the paced WAN
 #                          hop (the make-fast gate)
+#   make bench-replica   — replicated-bottleneck-stage bench: img/s vs
+#                          replica count r per process transport over a
+#                          paced bottleneck stage (writes
+#                          BENCH_replica.json, < 60 s smoke tier)
+#   make bench-replica-check
+#                        — fresh smoke run gated on the within-run
+#                          invariants: r=2 holds >= 1.5x over r=1 and
+#                          r=3 does not regress vs r=2, on both
+#                          transports (the make-fast gate)
 #   make demo            — k-stage adaptive loop demo under a WAN ramp
 
 PY      ?= python
@@ -38,10 +47,10 @@ ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: fast test test-fast bench bench-quick bench-smoke bench-transport \
         bench-transport-check bench-stream bench-stream-check \
-        bench-codec bench-codec-check demo
+        bench-codec bench-codec-check bench-replica bench-replica-check demo
 
 fast: test-fast bench-smoke bench-transport-check bench-stream-check \
-      bench-codec-check
+      bench-codec-check bench-replica-check
 
 test:
 	$(ENV) $(PYTEST) -x -q
@@ -75,6 +84,12 @@ bench-codec:
 
 bench-codec-check:
 	$(ENV) $(PY) -m benchmarks.codec_bench --check
+
+bench-replica:
+	$(ENV) $(PY) -m benchmarks.replica_bench --smoke
+
+bench-replica-check:
+	$(ENV) $(PY) -m benchmarks.replica_bench --check
 
 demo:
 	$(ENV) $(PY) examples/kway_adaptive.py

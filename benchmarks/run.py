@@ -21,6 +21,7 @@ def main() -> None:
     from . import energy_front as E
     from . import kway_runtime as K
     from . import paper_tables as P
+    from . import replica_bench as R
     from . import stream_bench as S
     from . import tpu_pod_pareto as T
     from . import transport_bench as TR
@@ -41,9 +42,11 @@ def main() -> None:
         "transport_overhead": TR.transport_overhead,
         "stream_session": S.stream_throughput,
         "codec_overhead": C.codec_overhead,
+        "replica_fanout": R.run,
     }
     measured = {"fig2", "fig7", "kway_front", "kway_adaptive",
-                "transport_overhead", "stream_session", "codec_overhead"}
+                "transport_overhead", "stream_session", "codec_overhead",
+                "replica_fanout"}
     rows: list[str] = []
     for name, fn in benches.items():
         if args.only and args.only not in name:

@@ -143,6 +143,11 @@ class AdaptiveSplitter:
     # measured per-cut per-codec degradation table (core.codecs
     # .calibrate_codecs); None falls back to nominal codec figures
     calibration: CodecCalibration | None = None
+    # per-stage replica counts for the re-solve: a fixed vector, or
+    # "auto" to let every step run the greedy spare-device search
+    # (partitioner._search_replicas).  Ignored by the joint codec search
+    # (codec_choices) — replica × codec co-search is a follow-on.
+    replicas: "Sequence[int] | str | None" = None
     # energy-aware migration hysteresis: when set, a candidate split must
     # amortize *both* migration currencies within this horizon — the
     # wall-clock redeploy cost (``migration_cost_s``) out of its per-batch
@@ -229,13 +234,19 @@ class AdaptiveSplitter:
         return solve(self.graph, scen, batch=self.batch, costs=self.costs,
                      include_io=self.include_io, objectives=objectives,
                      calibration=self.calibration,
-                     accuracy_floor=self.accuracy_floor)
+                     accuracy_floor=self.accuracy_floor,
+                     replicas=self.replicas)
 
-    def _moved_bytes(self, old: tuple[int, ...],
-                     new: tuple[int, ...]) -> dict[int, float]:
+    def _moved_bytes(self, old: tuple[int, ...], new: tuple[int, ...],
+                     new_replicas: Sequence[int] | None = None
+                     ) -> dict[int, float]:
         """Weight bytes crossing each hop when redeploying ``old`` →
         ``new``: every block that changes stage ships its weights across
-        the hops between its old and new host.  → {hop index: bytes}."""
+        the hops between its old and new host.  A block landing on a
+        stage replicated ``r``× ships ``r`` copies over each crossed hop
+        (every replica holds the full stage weights; the source keeps
+        one copy to ship from, so only the *destination* count
+        multiplies).  → {hop index: bytes}."""
         n = len(self.graph.blocks)
         ob, nb = (0, *old, n), (0, *new, n)
 
@@ -248,20 +259,28 @@ class AdaptiveSplitter:
         moved: dict[int, float] = {}
         for b, blk in enumerate(self.graph.blocks):
             s0, s1 = stage_of(ob, b), stage_of(nb, b)
+            if s0 == s1:
+                continue
+            copies = (new_replicas[s1] if new_replicas is not None else 1)
             for hop in range(min(s0, s1), max(s0, s1)):
-                moved[hop] = moved.get(hop, 0.0) + blk.weight_bytes
+                moved[hop] = moved.get(hop, 0.0) + blk.weight_bytes * copies
         return moved
 
     def migration_energy_j(self, old: tuple[int, ...],
-                           new: tuple[int, ...]) -> float:
+                           new: tuple[int, ...],
+                           new_replicas: Sequence[int] | None = None
+                           ) -> float:
         """Joules to redeploy from cuts ``old`` to ``new``: the moved
-        weight bytes at each crossed hop's ``energy_per_byte_j``."""
+        weight bytes at each crossed hop's ``energy_per_byte_j`` (times
+        the destination stage's replica count — r copies ship)."""
         links = [link_at(l, 0.0) for l in self.scenario.links]
         return sum(links[hop].energy_per_byte_j * nbytes
-                   for hop, nbytes in self._moved_bytes(old, new).items())
+                   for hop, nbytes in
+                   self._moved_bytes(old, new, new_replicas).items())
 
     def migration_time_s(self, old: tuple[int, ...], new: tuple[int, ...],
-                         links: Sequence[Link] | None = None) -> float:
+                         links: Sequence[Link] | None = None,
+                         new_replicas: Sequence[int] | None = None) -> float:
         """Wall-clock to redeploy ``old`` → ``new``: the moved weight
         bytes crossing each hop at its transfer time under ``links``
         (the step's fitted estimates; defaults to the scenario's nominal
@@ -273,7 +292,8 @@ class AdaptiveSplitter:
             links = [link_at(l, 0.0) for l in self.scenario.links]
         return self.migration_overhead_s + sum(
             links[hop].transfer_time(nbytes)
-            for hop, nbytes in self._moved_bytes(old, new).items()
+            for hop, nbytes in
+            self._moved_bytes(old, new, new_replicas).items()
             if nbytes > 0)
 
     def _amortizes(self, cur: PipelineMetrics, cand: PipelineMetrics,
@@ -301,12 +321,13 @@ class AdaptiveSplitter:
         return True
 
     def _reprice(self, partition: tuple[int, ...], scen: Scenario,
-                 codecs: Sequence[str] | None = None
+                 codecs: Sequence[str] | None = None,
+                 replicas: Sequence[int] | None = None
                  ) -> PipelineMetrics | None:
-        """Re-evaluate the *current* cuts (and codecs) under new
-        conditions; None when the cut vector is no longer valid for the
-        graph/chain (e.g. the graph or pipeline depth changed between
-        steps)."""
+        """Re-evaluate the *current* cuts (and codecs/replicas) under
+        new conditions; None when the cut vector is no longer valid for
+        the graph/chain (e.g. the graph or pipeline depth changed
+        between steps)."""
         static = scen.at(0.0)
         try:
             return evaluate_pipeline(self.graph, partition, static.devices,
@@ -314,7 +335,8 @@ class AdaptiveSplitter:
                                      costs=self.costs,
                                      include_io=self.include_io,
                                      codecs=codecs,
-                                     calibration=self.calibration)
+                                     calibration=self.calibration,
+                                     replicas=replicas)
         except ValueError:
             return None
 
@@ -338,15 +360,20 @@ class AdaptiveSplitter:
         elif (cand.partition != self.current.partition
               or cand.codecs != self.current.codecs):
             cost_j = self.migration_energy_j(self.current.partition,
-                                             cand.partition)
+                                             cand.partition,
+                                             new_replicas=cand.replicas
+                                             or None)
             # codec-only switches move no weights: cost_s degrades to the
             # fixed overhead (still charged — RECONFIG + WARMUP are real)
             cost_s = self.migration_time_s(self.current.partition,
-                                           cand.partition, links)
+                                           cand.partition, links,
+                                           new_replicas=cand.replicas
+                                           or None)
             # re-price the *current* split (and codecs) under the new
             # conditions
             cur = self._reprice(self.current.partition, scen,
-                                codecs=self.current.codecs or None)
+                                codecs=self.current.codecs or None,
+                                replicas=self.current.replicas or None)
             if cur is None:
                 # current cuts are stale/invalid — must migrate
                 self.current, migrated = cand, True

@@ -64,6 +64,7 @@ class StageMetrics:
     mem_ok: bool
     energy_j: float = 0.0          # active×compute + idle×send + radio×bytes
     send_wire_bytes: float = 0.0   # codec-packed bytes on the outbound hop
+    replicas: int = 1              # devices running this stage in parallel
 
 
 @dataclass(frozen=True)
@@ -80,10 +81,14 @@ class PipelineMetrics:
     # agreements from the calibration; 1.0 = every hop uncoded)
     accuracy: float = 1.0
     codecs: tuple[str, ...] = ()   # per-hop codec names ((): all "none")
+    replicas: tuple[int, ...] = ()  # per-stage replica counts ((): all 1)
 
     @property
     def bottleneck_s(self) -> float:
-        return max(s.compute_s + s.send_s for s in self.stages)
+        # a stage on r devices drains r batches per cycle: its share of
+        # the steady-state period is (compute + send) / r
+        return max((s.compute_s + s.send_s) / s.replicas
+                   for s in self.stages)
 
     def objectives(self, objectives: Sequence[ObjectiveLike] | None = None
                    ) -> tuple[float, ...]:
@@ -130,6 +135,7 @@ def evaluate_pipeline(
     include_io: bool = True,
     codecs: Sequence[str] | None = None,
     calibration: CodecCalibration | None = None,
+    replicas: Sequence[int] | None = None,
 ) -> PipelineMetrics:
     """Evaluate one partition.
 
@@ -147,6 +153,16 @@ def evaluate_pipeline(
     ``accuracy`` is the product of per-cut degradations from
     ``calibration`` (falling back to each codec's nominal figure).
     Dispatch/return IO is orchestrator plumbing and ships uncoded.
+
+    ``replicas`` gives the per-stage replica count (None = all 1): a
+    stage placed on ``r`` identical devices drains ``r`` batches per
+    cycle, so it contributes ``(compute + send) / r`` to the
+    steady-state bottleneck while one batch's *latency* through it is
+    unchanged (a single batch still traverses exactly one replica) —
+    the latency/throughput tension replication buys. Energy charges the
+    extra ``r - 1`` devices idle power over the stage's per-batch
+    period on top of the usual active/idle/radio terms, so replication
+    always costs joules while (only sometimes) buying throughput.
     """
     n = graph.n_blocks
     full = (0, *cuts, n)
@@ -156,6 +172,13 @@ def evaluate_pipeline(
     if codecs is not None and len(codecs) != n_stages - 1:
         raise ValueError(f"need {n_stages - 1} per-hop codecs, "
                          f"got {len(codecs)}")
+    if replicas is not None:
+        if len(replicas) != n_stages:
+            raise ValueError(f"need {n_stages} per-stage replica counts, "
+                             f"got {len(replicas)}")
+        if any(r < 1 for r in replicas):
+            raise ValueError(f"replica counts must be >= 1: {replicas!r}")
+    reps = tuple(replicas) if replicas is not None else (1,) * n_stages
     for a, b in zip(full, full[1:]):
         if not (0 <= a <= b <= n):
             raise ValueError(f"bad cuts {cuts!r} for {n} blocks")
@@ -194,19 +217,24 @@ def evaluate_pipeline(
                              if calibration is not None
                              else codec.nominal_accuracy)
             send = link.transfer_time(send_bytes)
+        r = reps[i]
         e = _stage_energy(dev, comp, send, send_bytes, link)
+        # the r-1 extra replicas burn idle power across the stage's
+        # per-batch period — replication is never free in joules
+        e += (r - 1) * dev.idle_w * (comp + send) / r
         wbytes = graph.segment_weight_bytes(lo, hi)
         abytes = max((b.act_bytes * batch for b in graph.blocks[lo:hi]), default=0)
-        ok = wbytes + abytes <= dev.mem_bytes
+        ok = wbytes + abytes <= dev.mem_bytes   # per replica: each holds a copy
         feasible &= ok
         stages.append(StageMetrics(device=dev.name, blocks=(lo, hi),
                                    compute_s=comp, send_s=send,
                                    weight_bytes=wbytes, mem_ok=ok,
-                                   energy_j=e, send_wire_bytes=send_bytes))
+                                   energy_j=e, send_wire_bytes=send_bytes,
+                                   replicas=r))
         latency += comp + send
         net_total += send
         energy += e
-        cycle_times.append(comp + send)
+        cycle_times.append((comp + send) / r)
 
     if include_io and dlink is not None:
         out_bytes = graph.output_bytes * batch
@@ -223,4 +251,5 @@ def evaluate_pipeline(
                            net_s=net_total, feasible=feasible,
                            energy_j=energy, accuracy=accuracy,
                            codecs=(tuple(get_codec(c).name for c in codecs)
-                                   if codecs is not None else ()))
+                                   if codecs is not None else ()),
+                           replicas=(reps if replicas is not None else ()))

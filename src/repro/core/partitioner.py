@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import itertools
 import math
+from collections import Counter
 from typing import Sequence
 
 from .blocks import BlockGraph
@@ -47,6 +48,33 @@ def _floor_filter(points: list[PipelineMetrics],
     return [p for p in points if p.accuracy >= accuracy_floor]
 
 
+def _check_replicas(replicas, k: int) -> tuple[int, ...] | None:
+    """Validate a fixed per-stage replica vector (None = all 1)."""
+    if replicas is None:
+        return None
+    reps = tuple(int(r) for r in replicas)
+    if len(reps) != k:
+        raise ValueError(f"need {k} per-stage replica counts, got {len(reps)}")
+    if any(r < 1 for r in reps):
+        raise ValueError(f"replica counts must be >= 1: {reps!r}")
+    return reps
+
+
+def replicas_feasible(replicas: Sequence[int],
+                      devices: Sequence[DeviceProfile],
+                      spare_devices: Sequence[DeviceProfile]) -> bool:
+    """Can this replica vector be staffed from the scenario's spares?
+
+    Stage i placed on ``r`` devices needs ``r - 1`` spares whose profile
+    *name* matches the stage's assigned device (replicas are identical
+    copies — the cost model charges every copy the same compute)."""
+    need: Counter[str] = Counter()
+    for r, d in zip(replicas, devices):
+        need[d.name] += r - 1
+    have = Counter(s.name for s in spare_devices)
+    return all(have[name] >= cnt for name, cnt in need.items())
+
+
 def solve(
     graph: BlockGraph,
     scenario,
@@ -59,6 +87,7 @@ def solve(
     codecs: Sequence[str] | None = None,
     calibration: CodecCalibration | None = None,
     accuracy_floor: float | None = None,
+    replicas: Sequence[int] | str | None = None,
 ) -> list[PipelineMetrics]:
     """Scenario-driven partition search — the one entry point.
 
@@ -77,7 +106,26 @@ def solve(
     ``calibration`` where supplied).  ``accuracy_floor`` drops every
     point whose predicted accuracy falls below it — the returned front
     respects the floor on all engines.
+
+    ``replicas`` assigns per-stage replica counts: a fixed vector is
+    plumbed through every engine unchecked (what-if analysis — the
+    caller supplies the hardware), while ``"auto"`` runs a
+    ``best_throughput``-driven greedy search that staffs extra replicas
+    from the scenario's ``spare_devices`` (matched by profile name) as
+    long as each added replica strictly improves the best achievable
+    steady-state throughput.  The auto pool contains the unreplicated
+    baseline plus every accepted step, so latency/energy-optimal picks
+    still see the r=1 points.
     """
+    if isinstance(replicas, str):
+        if replicas != "auto":
+            raise ValueError(f"replicas must be a vector, 'auto' or None, "
+                             f"got {replicas!r}")
+        return _search_replicas(graph, scenario, batch=batch, costs=costs,
+                                include_io=include_io, at_time=at_time,
+                                max_enum=max_enum, objectives=objectives,
+                                codecs=codecs, calibration=calibration,
+                                accuracy_floor=accuracy_floor)
     devices = tuple(scenario.devices)
     links = tuple(link_at(l, at_time) for l in scenario.links)
     k = len(devices)
@@ -89,25 +137,27 @@ def solve(
             f">= {k} blocks, graph {graph.name!r} has {graph.n_blocks}")
     if codecs is None:
         codecs = getattr(scenario, "codecs", None)
+    reps = _check_replicas(replicas, k)
     if k == 1:
         return [evaluate_pipeline(graph, (), devices, (), batch=batch,
-                                  costs=costs, include_io=include_io)]
+                                  costs=costs, include_io=include_io,
+                                  replicas=reps)]
     if k == 2:
         return _floor_filter(
             sweep_2way(graph, devices, links[0], batch=batch, costs=costs,
                        include_io=include_io, codecs=codecs,
-                       calibration=calibration),
+                       calibration=calibration, replicas=reps),
             accuracy_floor)
     if math.comb(graph.n_blocks - 1, k - 1) <= max_enum:
         return _floor_filter(
             sweep_kway(graph, devices, links, batch=batch, costs=costs,
                        include_io=include_io, codecs=codecs,
-                       calibration=calibration),
+                       calibration=calibration, replicas=reps),
             accuracy_floor)
     return dp_front_kway(graph, devices, links, batch=batch, costs=costs,
                          include_io=include_io, objectives=objectives,
                          codecs=codecs, calibration=calibration,
-                         accuracy_floor=accuracy_floor)
+                         accuracy_floor=accuracy_floor, replicas=reps)
 
 
 def sweep_2way(
@@ -120,6 +170,7 @@ def sweep_2way(
     include_io: bool = True,
     codecs: Sequence[str] | None = None,
     calibration: CodecCalibration | None = None,
+    replicas: Sequence[int] | None = None,
 ) -> list[PipelineMetrics]:
     """Every valid split point of a 2-device pipeline (paper Sec. IV-C)."""
     if len(devices) != 2:
@@ -131,7 +182,8 @@ def sweep_2way(
         out.append(evaluate_pipeline(graph, (p,), devices, (link,),
                                      batch=batch, costs=costs,
                                      include_io=include_io, codecs=codecs,
-                                     calibration=calibration))
+                                     calibration=calibration,
+                                     replicas=replicas))
     return out
 
 
@@ -146,6 +198,7 @@ def sweep_kway(
     max_combos: int = 2_000_000,
     codecs: Sequence[str] | None = None,
     calibration: CodecCalibration | None = None,
+    replicas: Sequence[int] | None = None,
 ) -> list[PipelineMetrics]:
     """Exhaustive enumeration of all k-way contiguous partitions."""
     n, k = graph.n_blocks, len(devices)
@@ -160,7 +213,8 @@ def sweep_kway(
         out.append(evaluate_pipeline(graph, cuts, devices, links,
                                      batch=batch, costs=costs,
                                      include_io=include_io, codecs=codecs,
-                                     calibration=calibration))
+                                     calibration=calibration,
+                                     replicas=replicas))
     return out
 
 
@@ -194,6 +248,7 @@ def dp_front_kway(
     codecs: Sequence[str] | None = None,
     calibration: CodecCalibration | None = None,
     accuracy_floor: float | None = None,
+    replicas: Sequence[int] | None = None,
 ) -> list[PipelineMetrics]:
     """Exact Pareto front over all k-way partitions via label DP.
 
@@ -209,6 +264,12 @@ def dp_front_kway(
     ``calibration`` where measured).  ``accuracy_floor`` prunes labels —
     exactly, since accuracy only falls under extension — and filters the
     returned front.
+
+    With ``replicas`` (fixed per-stage counts), stage i on ``r`` devices
+    contributes ``(compute + send) / r`` to the bottleneck component and
+    the extra-replica idle joules to the energy component.  Both remain
+    per-stage constants once (i, j, j2) is fixed, so every label stays
+    monotone under extension and the same d-dimensional prune is exact.
     """
     from .codecs import codec_wire_bytes
     from .costmodel import _stage_time  # internal reuse
@@ -231,6 +292,7 @@ def dp_front_kway(
                   else [get_codec("none")] * (k - 1))
     if len(hop_codecs) != k - 1:
         raise ValueError(f"need {k - 1} per-hop codecs, got {len(codecs)}")
+    reps = _check_replicas(replicas, k) or (1,) * k
 
     def cut_accuracy(hop: int, cut: int) -> float:
         codec = hop_codecs[hop]
@@ -278,11 +340,16 @@ def dp_front_kway(
                 send = links[i].transfer_time(send_bytes) if not last else 0.0
                 out_t = dlink.transfer_time(graph.output_bytes * batch) if (last and dlink) else 0.0
                 out_e = dlink.transfer_energy(graph.output_bytes * batch) if (last and dlink) else 0.0
+                r = reps[i]
                 e_step = _stage_energy(devices[i], comp, send, send_bytes,
                                        links[i] if not last else None) + out_e
+                # extra replicas idle across the stage's per-batch period
+                e_step += (r - 1) * devices[i].idle_w * (comp + send) / r
                 a_step = cut_accuracy(i, j2) if not last else 1.0
                 step = comp + send + out_t
-                cyc = step
+                # r replicas drain r batches per cycle; the shared
+                # return hop (out_t) stays serial at the orchestrator
+                cyc = (comp + send) / r + out_t
                 for (lat, bot, en, acc), cuts in labs:
                     nl = lat + step
                     nb = max(bot, cyc)
@@ -299,7 +366,8 @@ def dp_front_kway(
     finals = labels.get(n, [])
     out = [evaluate_pipeline(graph, cuts, devices, links, batch=batch,
                              costs=costs, include_io=include_io,
-                             codecs=codecs, calibration=calibration)
+                             codecs=codecs, calibration=calibration,
+                             replicas=replicas)
            for _, cuts in finals]
     return pareto_front(_floor_filter(out, accuracy_floor), objs)
 
@@ -325,6 +393,79 @@ def best_accuracy(points: Sequence[PipelineMetrics]) -> PipelineMetrics:
     """Highest predicted fidelity (latency breaks ties)."""
     feas = [p for p in points if p.feasible] or list(points)
     return min(feas, key=lambda p: (-p.accuracy, p.latency_s))
+
+
+# --------------------------------------------------------------------------- #
+# Replica search: staff the bottleneck from the scenario's spare devices
+# --------------------------------------------------------------------------- #
+def _search_replicas(graph: BlockGraph, scenario,
+                     **solve_kwargs) -> list[PipelineMetrics]:
+    """Greedy best-improvement replica search (``solve(replicas="auto")``).
+
+    Starts from the unreplicated chain, then repeatedly tries adding one
+    replica to each stage that still has a matching spare (same profile
+    name in ``scenario.spare_devices``), re-solving the partition each
+    time — replication shifts the bottleneck, so the optimal *cuts* move
+    with it.  The single best-improving stage is accepted per round;
+    the search stops when no spare strictly improves
+    ``best_throughput``.  Returns the accumulated pool: baseline points
+    plus every accepted assignment's points."""
+    devices = tuple(scenario.devices)
+    k = len(devices)
+    have = Counter(s.name for s in getattr(scenario, "spare_devices", ())
+                   or ())
+    pool = solve(graph, scenario, **solve_kwargs)
+    if not pool:
+        return pool
+    best_tp = best_throughput(pool).throughput
+    reps = [1] * k
+    used: Counter[str] = Counter()
+    while True:
+        winner = None
+        for i, dev in enumerate(devices):
+            if used[dev.name] >= have[dev.name]:
+                continue
+            trial = tuple(reps[:i] + [reps[i] + 1] + reps[i + 1:])
+            pts = solve(graph, scenario, replicas=trial, **solve_kwargs)
+            if not pts:
+                continue
+            tp = best_throughput(pts).throughput
+            if tp > best_tp and (winner is None or tp > winner[0]):
+                winner = (tp, i, pts)
+        if winner is None:
+            return pool
+        best_tp, i, pts = winner
+        reps[i] += 1
+        used[devices[i].name] += 1
+        pool.extend(pts)
+
+
+def sweep_replicas(graph: BlockGraph, scenario,
+                   max_assignments: int = 4096,
+                   **solve_kwargs) -> list[PipelineMetrics]:
+    """Exhaustive replica-assignment sweep — the ground truth the greedy
+    ``solve(replicas="auto")`` is cross-validated against in tests.
+
+    Enumerates every per-stage replica vector staffable from
+    ``scenario.spare_devices`` (each stage bounded by the count of
+    same-name spares, joint feasibility checked per vector) and solves
+    the partition under each.  Cost is |assignments| × one ``solve``;
+    guarded by ``max_assignments``."""
+    devices = tuple(scenario.devices)
+    have = Counter(s.name for s in getattr(scenario, "spare_devices", ())
+                   or ())
+    per_stage = [range(1, 2 + have[d.name]) for d in devices]
+    assignments = [reps for reps in itertools.product(*per_stage)
+                   if replicas_feasible(reps, devices,
+                                        getattr(scenario, "spare_devices",
+                                                ()) or ())]
+    if len(assignments) > max_assignments:
+        raise ValueError(f"{len(assignments)} replica assignments exceed "
+                         f"max_assignments={max_assignments}")
+    pool: list[PipelineMetrics] = []
+    for reps in assignments:
+        pool.extend(solve(graph, scenario, replicas=reps, **solve_kwargs))
+    return pool
 
 
 def solve_with_codecs(

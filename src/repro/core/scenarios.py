@@ -37,6 +37,11 @@ class Scenario:
     # like transports, consumed by both the cost model (packed bytes +
     # accuracy axis) and the runtime (Pallas pack on the wire)
     codecs: tuple[str, ...] | None = None
+    # idle devices available for stage replication: solve(replicas="auto")
+    # staffs extra replicas of a stage from spares whose profile *name*
+    # matches the stage's assigned device (identical copies — same
+    # compute model per replica)
+    spare_devices: tuple[D.DeviceProfile, ...] = ()
 
     def __post_init__(self):
         if len(self.links) != len(self.devices) - 1:
@@ -65,7 +70,8 @@ class Scenario:
         links = list(self.links)
         links[i] = link
         return Scenario(name or f"{self.name}+{link.name}", self.devices,
-                        tuple(links), self.transports, self.codecs)
+                        tuple(links), self.transports, self.codecs,
+                        self.spare_devices)
 
     def with_transport(self, transport: "str | tuple[str, ...]",
                        name: str | None = None) -> "Scenario":
@@ -75,7 +81,7 @@ class Scenario:
         else:
             transports = tuple(transport)
         return Scenario(name or self.name, self.devices, self.links,
-                        transports, self.codecs)
+                        transports, self.codecs, self.spare_devices)
 
     def with_codec(self, codec: "str | tuple[str, ...]",
                    name: str | None = None) -> "Scenario":
@@ -85,7 +91,7 @@ class Scenario:
         else:
             codecs = tuple(codec)
         return Scenario(name or self.name, self.devices, self.links,
-                        self.transports, codecs)
+                        self.transports, codecs, self.spare_devices)
 
     def at(self, t: float = 0.0) -> "Scenario":
         """Static snapshot: every LinkTrace resolved to its link at ``t``."""
@@ -93,7 +99,7 @@ class Scenario:
             return self
         return Scenario(self.name, self.devices,
                         tuple(D.link_at(l, t) for l in self.links),
-                        self.transports, self.codecs)
+                        self.transports, self.codecs, self.spare_devices)
 
 
 # --- the paper's testbed ---------------------------------------------------- #
@@ -110,6 +116,20 @@ def pi_pi_gpu() -> Scenario:
     cluster depth the k-way engines reason about, now executable."""
     return Scenario("pi_pi_gpu", (D.PI_4B, D.PI_4B, D.RTX_4090),
                     (D.LAN_PI_PI, D.LAN_PI_GPU))
+
+
+def pi_cluster(n_spares: int = 1) -> Scenario:
+    """The replication testbed: the 3-stage pi_pi_gpu chain plus
+    ``n_spares`` idle Pis.  The chain alone pins throughput to the
+    slowest Pi stage while the GPU starves; ``solve(replicas="auto")``
+    staffs the bottleneck Pi stage from the spares (Parthasarathy &
+    Krishnamachari's throughput-max placement).  ``pi_cluster4`` /
+    ``pi_cluster5`` in the registry = 4 / 5 devices total."""
+    if n_spares < 1:
+        raise ValueError("need n_spares >= 1")
+    base = pi_pi_gpu()
+    return dataclasses.replace(base, name=f"pi_cluster{3 + n_spares}",
+                               spare_devices=(D.PI_4B,) * n_spares)
 
 
 def pi_chain(k: int = 3) -> Scenario:
@@ -230,6 +250,8 @@ REGISTRY = {
     "pi_to_gpu": pi_to_gpu,
     "pi_pi_gpu": pi_pi_gpu,
     "pi_chain4": lambda: pi_chain(4),
+    "pi_cluster4": lambda: pi_cluster(1),
+    "pi_cluster5": lambda: pi_cluster(2),
     "pi_only3": lambda: pi_only_chain(3),
     "pi_only3_duress": lambda: duress(pi_only_chain(3)),
     "pi_to_pi_duress": lambda: duress(pi_to_pi()),

@@ -88,10 +88,17 @@ class Worker:
     broadcast to every stage."""
 
     def __init__(self, name: str, model, params, lo: int, hi: int,
-                 backend: Backend, cpu_clock: Callable[[], float] | None = None):
+                 backend: Backend, cpu_clock: Callable[[], float] | None = None,
+                 pace_s: float = 0.0):
         self.name, self.lo, self.hi, self.backend = name, lo, hi, backend
         self.stats = StageStats()
         self._cpu_clock = cpu_clock or time.process_time
+        # per-batch floor on this stage's wall time — device-speed
+        # emulation on a host faster than the scenario's hardware, the
+        # compute-side twin of EmulatedChannel's link pacing.  The paced
+        # remainder is a sleep, so replicated stages genuinely overlap
+        # even on a single-core host.
+        self.pace_s = pace_s
         sub = params[lo:hi]
         layers = [layer for (_, layer) in model.blocks[lo:hi]]
         if backend == "lightweight":
@@ -123,6 +130,10 @@ class Worker:
         else:
             x = self._fns[0](x)
         x = jax.block_until_ready(x)
+        if self.pace_s > 0.0:
+            rem = self.pace_s - (time.perf_counter() - t0)
+            if rem > 0:
+                time.sleep(rem)
         self.stats.exe_s += time.perf_counter() - t0
         self.stats.cpu_s += self._cpu_clock() - c0
         self.stats.calls += 1
@@ -146,67 +157,185 @@ class PipelineResult:
     energy_j: float = 0.0
     stage_energy_j: tuple[float, ...] = ()
     transport: str = "emulated"     # per-hop transports, "+"-joined if mixed
+    replicas: tuple[int, ...] = ()  # per-stage replica counts ((): all 1)
 
 
 # --------------------------------------------------------------------------- #
 # Engines: where the workers live and how batches cross hops
 # --------------------------------------------------------------------------- #
+class _QueueChan:
+    """A ``queue.Queue`` behind the Channel send/recv surface, so the
+    thread engine's feed/result ends compose with the replica fan
+    wrappers exactly like real channels do."""
+
+    hop = HopSpec(index=-1, scenario_hop=False)
+
+    def __init__(self):
+        self._q: queue.Queue = queue.Queue()
+        self.epoch = 0.0
+
+    def send(self, payload=None, kind: int = BATCH):
+        self._q.put((kind, payload))
+
+    def recv(self, timeout: float | None = None):
+        try:
+            return self._q.get(timeout=timeout)
+        except queue.Empty:
+            raise TransportTimeout("session: no result arrived") from None
+
+    def set_codec(self, name: str) -> None:
+        pass
+
+    def drain_records(self):
+        return []
+
+    def close(self) -> None:
+        pass
+
+    def reap(self) -> None:
+        pass
+
+
+class _LaneGroupObs:
+    """One per-hop observation surface over a replicated hop's lanes —
+    what ``pipe.nets`` exposes when a thread-engine hop has several
+    emulated lanes (process hops aggregate into ``HopMeter``s at
+    harvest time instead)."""
+
+    def __init__(self, lanes: Sequence[T.EmulatedChannel]):
+        self.lanes = list(lanes)
+
+    @property
+    def link(self):
+        return self.lanes[0].link
+
+    def drain_observations(self) -> list[TransferRecord]:
+        out: list[TransferRecord] = []
+        for lane in self.lanes:
+            out.extend(lane.drain_observations())
+        out.sort(key=lambda r: r.t_s)
+        return out
+
+    drain_records = drain_observations
+
+    def _sum(self, attr: str):
+        return sum(getattr(l, attr) for l in self.lanes)
+
+    @property
+    def observations(self):
+        return [r for lane in self.lanes for r in lane.observations]
+
+    @property
+    def total_bytes(self):
+        return self._sum("total_bytes")
+
+    @property
+    def total_raw_bytes(self):
+        return self._sum("total_raw_bytes")
+
+    @property
+    def total_energy_j(self):
+        return self._sum("total_energy_j")
+
+    @property
+    def total_transfers(self):
+        return self._sum("total_transfers")
+
+    @property
+    def total_elapsed_s(self):
+        return self._sum("total_elapsed_s")
+
+
 class _ThreadEngine:
     """Stages as threads of this process, hops as EmulatedChannels —
-    the modeled path (and the only one a LinkTrace can drive)."""
+    the modeled path (and the only one a LinkTrace can drive).  A stage
+    with ``replicas[i] == r`` runs as r session threads over a lane
+    group of r channels (see ``transport.FanOutChannel``)."""
 
     def __init__(self, pipe: "EdgePipeline"):
         self.pipe = pipe
-        self.chans: list[T.EmulatedChannel] = self._open_chans()
-        self.workers: list[Worker] = []
+        self.chan_groups: list[list[T.EmulatedChannel]] = self._open_chans()
+        self.stage_workers: list[list[Worker]] = []
         self._build_workers()
 
-    def _open_chans(self) -> "list[T.EmulatedChannel]":
+    def _open_chans(self) -> "list[list[T.EmulatedChannel]]":
         pipe = self.pipe
+        r = pipe.replicas
         tr = get_transport("emulated", clock=pipe.clock)
         return [
-            tr.open(HopSpec(index=i, link=link,
-                            framing=("pickle" if pipe.backends[i] == "rpc"
-                                     else "raw"),
-                            depth=pipe.queue_depth, seed=pipe.seed + i,
-                            codec=pipe.codecs[i]))
+            tr.open_fan(HopSpec(index=i, link=link,
+                                framing=("pickle" if pipe.backends[i] == "rpc"
+                                         else "raw"),
+                                depth=pipe.queue_depth, seed=pipe.seed + i,
+                                codec=pipe.codecs[i]),
+                        max(r[i], r[i + 1]))
             for i, link in enumerate(pipe.links)]
 
     @property
     def nets(self):
-        return self.chans
+        return [g[0] if len(g) == 1 else _LaneGroupObs(g)
+                for g in self.chan_groups]
+
+    @property
+    def workers(self) -> list[Worker]:
+        """Flat stage-major worker list (replica-free pipelines see the
+        historical one-worker-per-stage shape)."""
+        return [w for ws in self.stage_workers for w in ws]
 
     def _build_workers(self, reuse: Sequence[Worker] = ()) -> None:
         """Instantiate stage workers, reusing any existing worker whose
         (block range, backend) is unchanged — its jitted functions stay
         warm across a migration."""
         pipe = self.pipe
-        pool = {(w.lo, w.hi, w.backend): w for w in reuse}
+        pool: dict[tuple, list[Worker]] = {}
+        for w in reuse:
+            pool.setdefault((w.lo, w.hi, w.backend), []).append(w)
         bounds = pipe.bounds()
-        self.workers = [
-            pool.get((bounds[i], bounds[i + 1], pipe.backends[i]))
-            or Worker(f"worker{i + 1}", pipe.model, pipe.params,
-                      bounds[i], bounds[i + 1], pipe.backends[i])
-            for i in range(pipe.n_stages)]
+        self.stage_workers = []
+        for i in range(pipe.n_stages):
+            key = (bounds[i], bounds[i + 1], pipe.backends[i])
+            ws = []
+            for m in range(pipe.replicas[i]):
+                cached = pool[key].pop() if pool.get(key) else None
+                ws.append(cached or Worker(
+                    f"worker{i + 1}", pipe.model, pipe.params,
+                    bounds[i], bounds[i + 1], pipe.backends[i],
+                    pace_s=pipe.stage_pace_s[i]))
+            self.stage_workers.append(ws)
 
     def warmup(self, x):
-        for w in self.workers:
-            x = w.warmup(x)
+        for ws in self.stage_workers:
+            y = None
+            for w in ws:                      # every replica jits its stage
+                y = w.warmup(x)
+            x = y
         return x
 
     def migrate(self) -> None:
         self._build_workers(reuse=self.workers)
-        for i, chan in enumerate(self.chans):
-            chan.set_codec(self.pipe.codecs[i])
+        for i, group in enumerate(self.chan_groups):
+            for chan in group:
+                chan.set_codec(self.pipe.codecs[i])
 
     def probe(self) -> None:
-        for chan in self.chans:
-            chan.send(kind=PROBE)             # records the RTT sample …
-            chan.recv()                       # … and consumes the token
+        for group in self.chan_groups:
+            for chan in group:
+                chan.send(kind=PROBE)         # records the RTT sample …
+                chan.recv()                   # … and consumes the token
                                               # (no session thread to)
 
     def stage_stats(self) -> list[StageStats]:
-        return [dataclasses.replace(w.stats) for w in self.workers]
+        out = []
+        for ws in self.stage_workers:
+            s = StageStats()
+            for w in ws:                      # replicas fold into one
+                s.exe_s += w.stats.exe_s      # logical stage
+                s.net_s += w.stats.net_s
+                s.calls += w.stats.calls
+                s.cpu_s += w.stats.cpu_s
+                s.mem_pct = max(s.mem_pct, w.stats.mem_pct)
+            out.append(s)
+        return out
 
     def reset_stats(self) -> None:
         for w in self.workers:
@@ -217,89 +346,112 @@ class _ThreadEngine:
 
     # session primitives: persistent stage threads, in-band tokens ------- #
     def session_open(self) -> None:
-        self._feed: queue.Queue = queue.Queue()
-        self._out: queue.Queue = queue.Queue()
-        self._sthreads = [
-            threading.Thread(target=self._stage_loop, args=(i,), daemon=True,
-                             name=f"session-stage{i}")
-            for i in range(self.pipe.n_stages)]
+        pipe = self.pipe
+        k, r = pipe.n_stages, pipe.replicas
+        self._feed_lanes = [_QueueChan() for _ in range(r[0])]
+        self._out_lanes = [_QueueChan() for _ in range(r[k - 1])]
+        self._err: queue.Queue = queue.Queue()
+        lanes: list[list] = [self._feed_lanes, *self.chan_groups,
+                             self._out_lanes]
+        self._feed = (T.FanOutChannel(self._feed_lanes)
+                      if len(self._feed_lanes) > 1 else self._feed_lanes[0])
+        self._result = (T.FanInChannel(self._out_lanes)
+                        if len(self._out_lanes) > 1 else self._out_lanes[0])
+        self._sthreads = []
+        for i in range(k):
+            for m in range(r[i]):
+                # replica m owns lane m through a replicated region; a
+                # solo stage facing a wider group fans out / merges in
+                ingress = (lanes[i][m] if r[i] > 1
+                           else T.FanInChannel(lanes[i])
+                           if len(lanes[i]) > 1 else lanes[i][0])
+                egress = (lanes[i + 1][m] if r[i] > 1
+                          else T.FanOutChannel(lanes[i + 1])
+                          if len(lanes[i + 1]) > 1 else lanes[i + 1][0])
+                t = threading.Thread(
+                    target=self._stage_loop, args=(i, m, ingress, egress),
+                    daemon=True, name=f"session-stage{i}.{m}")
+                self._sthreads.append(t)
         for t in self._sthreads:
             t.start()
 
-    def _stage_loop(self, i: int) -> None:
-        """One pipeline stage as a session thread: recv → handle → send,
-        every control token flowing in-band with the batches around it
-        (the thread-engine mirror of ``transport._worker_main``)."""
+    def _stage_loop(self, i: int, m: int, ingress, egress) -> None:
+        """One pipeline stage replica as a session thread: recv →
+        handle → send, every control token flowing in-band with the
+        batches around it (the thread-engine mirror of
+        ``transport._worker_main``)."""
         pipe = self.pipe
-        k = pipe.n_stages
-        last = i == k - 1
-        recv = self._feed.get if i == 0 else \
-            (lambda _c=self.chans[i - 1]: _c.recv())
-        if last:
-            def send(obj, kind):
-                self._out.put((kind, obj))
-        else:
-            def send(obj, kind, _c=self.chans[i]):
-                _c.send(obj, kind=kind)
+        last = i == pipe.n_stages - 1
         failed = False
         while True:
-            kind, obj = recv()
+            kind, obj = ingress.recv()
             if kind == STOP:
-                send(None, STOP)
+                egress.send(None, kind=STOP)
                 return
             if failed:                        # drain so upstream never
                 continue                      # blocks on a full queue
             try:
                 if kind == BATCH:
-                    send(self.workers[i].run(obj), BATCH)
+                    egress.send(self.stage_workers[i][m].run(obj), kind=BATCH)
                 elif kind == WARMUP:
-                    send(self.workers[i].warmup(obj), WARMUP)
+                    egress.send(self.stage_workers[i][m].warmup(obj),
+                                kind=WARMUP)
                 elif kind == RECONFIG:
                     if isinstance(obj, dict):   # {"bounds":…, "codecs":…}
                         bounds = tuple(obj["bounds"])
                         codecs = obj.get("codecs")
                     else:                       # legacy bare bounds tuple
                         bounds, codecs = tuple(obj), None
-                    w = self.workers[i]
+                    w = self.stage_workers[i][m]
                     if (bounds[i], bounds[i + 1]) != (w.lo, w.hi):
-                        self.workers[i] = Worker(
+                        self.stage_workers[i][m] = Worker(
                             f"worker{i + 1}", pipe.model, pipe.params,
-                            bounds[i], bounds[i + 1], pipe.backends[i])
+                            bounds[i], bounds[i + 1], pipe.backends[i],
+                            pace_s=pipe.stage_pace_s[i])
                     if codecs is not None and not last:
-                        self.chans[i].set_codec(codecs[i])
-                    send(obj, RECONFIG)
+                        egress.set_codec(codecs[i])
+                    egress.send(obj, kind=RECONFIG)
                 elif kind == PROBE:
-                    send(None, PROBE)         # emulates 0 bytes per hop
+                    egress.send(None, kind=PROBE)  # emulates 0 bytes per hop
                 else:                         # STATS / CLOCK: pass-through
-                    send(obj, kind)
+                    egress.send(obj, kind=kind)
             except BaseException as e:        # noqa: BLE001 — reported
                 failed = True
                 # in-process: ship the exception object itself, so the
                 # session re-raises the caller's own type with its
-                # traceback (process workers can only send strings)
-                self._out.put((ERROR, e))
+                # traceback (process workers can only send strings);
+                # a dedicated error queue keeps lane ordering intact
+                self._err.put((ERROR, e))
 
     def submit(self, x) -> None:
-        self._feed.put((BATCH, x))
+        self._feed.send(x, kind=BATCH)
 
     def submit_token(self, kind: int, obj=None) -> None:
-        self._feed.put((kind, obj))
+        self._feed.send(obj, kind=kind)
 
     def poll(self, timeout: float):
-        try:
-            return self._out.get(timeout=timeout)
-        except queue.Empty:
-            raise TransportTimeout("session: no result arrived") from None
+        deadline = time.perf_counter() + timeout
+        while True:
+            try:
+                return self._err.get_nowait()
+            except queue.Empty:
+                pass
+            try:
+                return self._result.recv(timeout=min(timeout, 0.1))
+            except TransportTimeout:
+                if time.perf_counter() >= deadline:
+                    raise TransportTimeout(
+                        "session: no result arrived") from None
 
     def harvest(self) -> None:
         pass                                  # stats/records are live
 
     def max_inflight(self) -> int | None:
-        return None                           # the feed queue is unbounded
+        return None                           # the feed queues are unbounded
 
     def session_close(self, failed: bool = False) -> None:
         try:
-            self._feed.put((STOP, None))
+            self._feed.send(None, kind=STOP)  # broadcast across feed lanes
         except Exception:
             pass
         deadline = time.perf_counter() + 5.0
@@ -313,16 +465,18 @@ class _ThreadEngine:
             # orphan them so a later session cannot consume leftovers
             # (the straggler blocks or writes into the abandoned queue,
             # which dies with its daemon thread)
-            self.chans = self._open_chans()
+            self.chan_groups = self._open_chans()
             return
         # threads are gone: a clean close left the channels empty (STOP
-        # reached _out); after a failure, drop what draining left behind
-        for chan in self.chans:
-            try:
-                while True:
-                    chan._q.get_nowait()
-            except queue.Empty:
-                pass
+        # reached the result lanes); after a failure, drop what draining
+        # left behind
+        for group in self.chan_groups:
+            for chan in group:
+                try:
+                    while True:
+                        chan._q.get_nowait()
+                except queue.Empty:
+                    pass
 
     def host_mem_pct(self) -> float:
         import psutil
@@ -350,9 +504,11 @@ class _ProcessEngine:
         self._stats = [StageStats() for _ in range(k)]
         self._procs: list = []
         self._ctrls: list = []
-        self._pairs: list = []
-        self._feed: Channel | None = None
-        self._result: Channel | None = None
+        self._ctrl_stage: list[int] = []      # worker w -> its logical stage
+        self._pairs: list = []                # flat (tx, rx) per lane
+        self._groups: list[list] = []         # pairs grouped per channel j
+        self._feed = None                     # Channel or FanOutChannel
+        self._result = None                   # Channel or FanInChannel
         try:
             self._start(k)
         except BaseException:
@@ -364,8 +520,12 @@ class _ProcessEngine:
 
     def _start(self, k: int) -> None:
         pipe = self.pipe
+        r = pipe.replicas
         # channel j carries stage j-1 -> stage j; j=0 is the orchestrator
-        # feed, j=k the result drain (neither is a scenario hop)
+        # feed, j=k the result drain (neither is a scenario hop).  A
+        # channel touching a replicated stage becomes a lane *group*:
+        # max(r_left, r_right) SPSC lanes opened together (one shared
+        # control segment under shmem)
         chan_names = ([pipe.transports[0], *pipe.transports,
                        pipe.transports[-1]] if k > 1
                       else [pipe.transport_names[0]] * 2)
@@ -375,6 +535,7 @@ class _ProcessEngine:
             internal = 0 < j < k
             framing = ("pickle" if 0 < j and pipe.backends[j - 1] == "rpc"
                        else "raw")
+            n_lanes = max(r[j - 1] if j > 0 else 1, r[j] if j < k else 1)
             spec = HopSpec(
                 index=j - 1,
                 link=pipe.links[j - 1] if internal else None,
@@ -390,39 +551,62 @@ class _ProcessEngine:
                 # transport-owned views; the result drain hands arrays
                 # back to user code, so it pays the one defensive copy
                 zero_copy=(j != k))
-            self._pairs.append(trs[chan_names[j]].open(spec).split())
-        self._feed = self._pairs[0][0]
-        self._result = self._pairs[k][1]
+            group = [c.split() for c in trs[chan_names[j]].open_fan(spec,
+                                                                    n_lanes)]
+            self._groups.append(group)
+            self._pairs.extend(group)
+        g0, gk = self._groups[0], self._groups[k]
+        self._feed = (T.FanOutChannel([p[0] for p in g0])
+                      if len(g0) > 1 else g0[0][0])
+        self._result = (T.FanInChannel([p[1] for p in gk])
+                        if len(gk) > 1 else gk[0][1])
 
         params_np = jax.tree.map(np.asarray, pipe.params)
         child_ctrls = []
         for i in range(k):
-            parent_c, child_c = self._ctx.Pipe()
-            self._ctrls.append(parent_c)
-            child_ctrls.append(child_c)
-            spec = {"stage": i, "n_stages": k, "model": pipe.model,
-                    "params": params_np, "bounds": pipe.bounds(),
-                    "backend": pipe.backends[i],
-                    "ingress": self._pairs[i][1],
-                    "egress": self._pairs[i + 1][0], "ctrl": child_c,
-                    "stop": self._stop, "epoch": pipe.epoch}
-            p = self._ctx.Process(target=T._worker_main, args=(spec,),
-                                  daemon=True, name=f"edge-worker{i}")
-            p.start()
-            self._procs.append(p)
+            for m in range(r[i]):
+                parent_c, child_c = self._ctx.Pipe()
+                self._ctrls.append(parent_c)
+                self._ctrl_stage.append(i)
+                child_ctrls.append(child_c)
+                ing = self._groups[i]
+                egr = self._groups[i + 1]
+                # replica m owns lane m through a replicated region; a
+                # solo stage facing a wider group merges in / fans out
+                ingress = (ing[m][1] if r[i] > 1
+                           else T.FanInChannel([p[1] for p in ing])
+                           if len(ing) > 1 else ing[0][1])
+                egress = (egr[m][0] if r[i] > 1
+                          else T.FanOutChannel([p[0] for p in egr])
+                          if len(egr) > 1 else egr[0][0])
+                spec = {"stage": i, "n_stages": k, "model": pipe.model,
+                        "params": params_np, "bounds": pipe.bounds(),
+                        "backend": pipe.backends[i],
+                        "ingress": ingress, "egress": egress,
+                        "ctrl": child_c, "stop": self._stop,
+                        "epoch": pipe.epoch,
+                        "pace_s": pipe.stage_pace_s[i]}
+                name = (f"edge-worker{i}.{m}" if r[i] > 1
+                        else f"edge-worker{i}")
+                p = self._ctx.Process(target=T._worker_main, args=(spec,),
+                                      daemon=True, name=name)
+                p.start()
+                self._procs.append(p)
         # parent's copies of shipped endpoints must go away, or a dead
         # worker's socket never reads as closed downstream
         for c in child_ctrls:
             c.close()
         for j in range(k + 1):
-            if j != 0:
-                self._pairs[j][0].close()
-            if j != k:
-                self._pairs[j][1].close()
-        for i in range(k):
-            msg = self._ctrl_recv(i)
+            for pair in self._groups[j]:
+                if j != 0:
+                    pair[0].close()
+                if j != k:
+                    pair[1].close()
+        for w in range(len(self._procs)):
+            msg = self._ctrl_recv(w)
             if msg[0] != "ready":
-                raise TransportError(f"worker {i} failed to start: {msg}")
+                raise TransportError(
+                    f"worker {self._ctrl_stage[w]} failed to start: {msg}")
 
     # ------------------------------------------------------------------ #
     @property
@@ -475,22 +659,25 @@ class _ProcessEngine:
         return self.harvest()
 
     def harvest(self) -> dict[int, list[TransferRecord]]:
-        """The control-pipe half of ``sync``: collect the per-stage
+        """The control-pipe half of ``sync``: collect the per-worker
         flushes a ``STATS`` token (already seen at the result end)
-        caused.  Every worker sends its control message *before*
-        forwarding the token, so all k messages are in flight by the
-        time the token exits the chain."""
+        caused.  Every worker — each replica separately — sends its
+        control message *before* forwarding the token, so all
+        ``sum(replicas)`` messages are in flight by the time the token
+        exits the chain.  Replica flushes fold into their logical
+        stage's counters and their ingress hop's meter."""
         new: dict[int, list[TransferRecord]] = {}
-        for i in range(self.pipe.n_stages):
-            _, stage, d, mem_pct, records = self._ctrl_recv(i)
+        for w in range(len(self._ctrls)):
+            _, stage, d, mem_pct, records = self._ctrl_recv(w)
             acc = self._stats[stage]
             acc.exe_s += d["exe_s"]
             acc.calls += d["calls"]
             acc.cpu_s += d["cpu_s"]
-            acc.mem_pct = mem_pct
+            acc.mem_pct = max(acc.mem_pct, mem_pct)
             if stage > 0:                     # stage i's ingress = hop i-1
                 self._meters[stage - 1].extend(records)
-                new[stage - 1] = [TransferRecord(*r) for r in records]
+                new.setdefault(stage - 1, []).extend(
+                    TransferRecord(*r) for r in records)
         return new
 
     # session primitives: the worker loop is already persistent --------- #
@@ -614,7 +801,9 @@ class EdgePipeline:
                  codec: str | Sequence[str] | None = None,
                  *, p: int | None = None, link: AnyLink | None = None,
                  queue_depth: int = 2, clock: Callable[[], float] | None = None,
-                 seed: int = 0, timeout_s: float = 180.0):
+                 seed: int = 0, timeout_s: float = 180.0,
+                 replicas: Sequence[int] | None = None,
+                 stage_pace_s: "float | Sequence[float] | None" = None):
         if p is not None:
             cuts = p
         if link is not None:
@@ -691,6 +880,39 @@ class EdgePipeline:
                                  f"{n_real_hops} hops")
         from ..core.codecs import get_codec as _get_codec
         self.codecs = tuple(_get_codec(c).name for c in codecs)
+
+        # per-stage replica counts: stage i runs as replicas[i] workers,
+        # batches striped round-robin across them (the runtime half of
+        # the solver's ``replicas`` label).  Fixed for the pipeline's
+        # lifetime — migration re-cuts stages, it never re-staffs them.
+        k = self.n_stages
+        if replicas is None:
+            self.replicas: tuple[int, ...] = (1,) * k
+        else:
+            self.replicas = tuple(int(x) for x in replicas)
+            if len(self.replicas) != k:
+                raise ValueError(f"{len(self.replicas)} replica counts for "
+                                 f"{k} stages")
+            if any(x < 1 for x in self.replicas):
+                raise ValueError(f"replica counts must be >= 1: "
+                                 f"{self.replicas}")
+        for a, b in zip(self.replicas, self.replicas[1:]):
+            if a != b and min(a, b) != 1:
+                raise ValueError(
+                    f"adjacent replicated stages need equal counts (r "
+                    f"parallel lanes) or a solo stage between fan-out "
+                    f"and fan-in: {self.replicas}")
+
+        # per-stage wall-time floor (device-speed emulation; see Worker)
+        if stage_pace_s is None:
+            self.stage_pace_s: tuple[float, ...] = (0.0,) * k
+        elif isinstance(stage_pace_s, (int, float)):
+            self.stage_pace_s = (float(stage_pace_s),) * k
+        else:
+            self.stage_pace_s = tuple(float(t) for t in stage_pace_s)
+            if len(self.stage_pace_s) != k:
+                raise ValueError(f"{len(self.stage_pace_s)} stage paces "
+                                 f"for {k} stages")
 
         self.queue_depth = queue_depth
         self.timeout_s = timeout_s
@@ -983,4 +1205,6 @@ class EdgePipeline:
             energy_j=energy,
             stage_energy_j=stage_energy,
             transport=self.transport,
+            replicas=(self.replicas if any(r > 1 for r in self.replicas)
+                      else ()),
         )

@@ -43,8 +43,10 @@ replayable ``LinkTrace``, so real runs can seed the emulator.
 """
 from __future__ import annotations
 
+import os
 import pickle
 import queue
+import select
 import socket as socketlib
 import struct
 import threading
@@ -121,6 +123,11 @@ class HopSpec:
     # it so back-to-back transfers stay on the spin path instead of
     # paying a scheduler wakeup per message.
     spin_us: float = 80.0
+    # shmem doorbell flavor: "eventfd" (one kernel counter, the futex-
+    # style wake — ~¼ the wake cost of a socketpair byte at tiny
+    # payloads), "socketpair" (the portable fallback), or "auto" (eventfd
+    # where the platform has it)
+    bell: str = "auto"
     # wire codec applied to float tensor payloads on this hop (a name
     # from ``core.codecs.CODECS``); the sender packs, the receiver
     # decodes off the per-frame codec byte, so a mid-stream RECONFIG
@@ -645,6 +652,118 @@ class SocketChannel(Channel):
         self._tx = self._rx = None
 
 
+# --------------------------------------------------------------------------- #
+# Doorbells — the park/wake primitive under the shmem ring.
+#
+# A doorbell is rung after a counter publish and parked on by the other
+# end; wakeup state must *persist* (ring-before-park cannot lose the
+# wake), which both flavors guarantee: the eventfd counter accumulates
+# until read, and socketpair bytes sit in the kernel buffer until
+# recv'd.  Multi-producer safe either way — any number of processes may
+# ring the same bell (eventfd adds are atomic; concurrent socket sends
+# just coalesce), which is what lets r replica producers share one
+# consumer doorbell.
+# --------------------------------------------------------------------------- #
+def _rebuild_eventfd_bell(dupfd):
+    return _EventFdBell(fd=dupfd.detach())
+
+
+class _EventFdBell:
+    """Futex-style doorbell on a Linux ``eventfd``: ring = one atomic
+    8-byte counter add (no socket stack, no per-ring allocation), wait =
+    poll + drain.  Both ends are the same kernel object — copies dup the
+    fd across process boundaries (``multiprocessing.reduction.DupFd``)."""
+
+    def __init__(self, fd: int | None = None):
+        self._fd = os.eventfd(0, os.EFD_NONBLOCK) if fd is None else fd
+
+    def ring(self) -> None:
+        try:
+            os.eventfd_write(self._fd, 1)
+        except (BlockingIOError, InterruptedError):
+            pass                              # counter saturated: wake pending
+
+    def wait(self, timeout_s: float) -> None:
+        try:
+            r, _, _ = select.select([self._fd], [], [], timeout_s)
+        except ValueError as e:               # fd closed under us
+            raise OSError(str(e)) from None
+        if r:
+            try:
+                os.eventfd_read(self._fd)     # drain coalesced rings
+            except (BlockingIOError, InterruptedError):
+                pass
+
+    def close(self) -> None:
+        fd, self._fd = self._fd, -1
+        if fd >= 0:
+            try:
+                os.close(fd)
+            except OSError:
+                pass
+
+    def __reduce__(self):
+        from multiprocessing.reduction import DupFd
+        if self._fd < 0:
+            raise TransportError("cannot ship a closed doorbell")
+        return (_rebuild_eventfd_bell, (DupFd(self._fd),))
+
+    @classmethod
+    def pair(cls) -> "tuple[_EventFdBell, _EventFdBell]":
+        # both ends reference the same eventfd counter, but each end owns
+        # its own descriptor: closing one (e.g. the parent's copy of a
+        # shipped end) must not silence the other
+        a = cls()
+        return a, cls(fd=os.dup(a._fd))
+
+
+class _SocketPairBell:
+    """One end of a socketpair doorbell — the portable fallback (wakeup
+    bytes persist in the kernel buffer, so publish-then-ring cannot lose
+    a wake).  Sockets cross process boundaries via multiprocessing's
+    standard socket reduction."""
+
+    def __init__(self, sock: socketlib.socket):
+        self._s = sock
+
+    def ring(self) -> None:
+        try:
+            self._s.send(b"\0")
+        except (BlockingIOError, OSError):
+            pass                              # buffered bytes already pending
+
+    def wait(self, timeout_s: float) -> None:
+        try:
+            self._s.settimeout(timeout_s)
+            self._s.recv(4096)                # drain coalesced rings too
+        except (socketlib.timeout, BlockingIOError):
+            pass
+
+    def close(self) -> None:
+        try:
+            self._s.close()
+        except OSError:
+            pass
+
+    @classmethod
+    def pair(cls) -> "tuple[_SocketPairBell, _SocketPairBell]":
+        ring_end, wait_end = socketlib.socketpair()
+        ring_end.setblocking(False)
+        return cls(ring_end), cls(wait_end)
+
+
+def _bell_pair(flavor: str):
+    """→ (ring end, wait end) for a HopSpec ``bell`` declaration."""
+    if flavor == "auto":
+        flavor = "eventfd" if hasattr(os, "eventfd") else "socketpair"
+    if flavor == "eventfd":
+        return _EventFdBell.pair()
+    if flavor == "socketpair":
+        return _SocketPairBell.pair()
+    raise ValueError(f"unknown doorbell flavor {flavor!r}; "
+                     f"have 'eventfd', 'socketpair', 'auto'")
+
+
 # shmem control ring: fixed-stride metadata records packed directly into
 # the shared control segment — ftype, kind, dtype code, ndim, codec
 # code, slot index (-1 = inline/none), meta_len, inline_len, t_send,
@@ -654,6 +773,25 @@ _RREC = struct.Struct("<BBbBB i I I d Q 8q")
 _STRIDE = 256
 _INLINE = _STRIDE - _RREC.size
 _BELL_CHUNK_S = 0.05    # re-check cadence while parked on the doorbell
+
+
+def _ctl_layout(depth: int) -> tuple[int, int, int, int, int, int, int]:
+    """Single-lane control layout for ``depth`` in-flight messages →
+    (n_slots, cap, fcap, tab_off, free_off, rec_off, size); offsets are
+    lane-relative so several lanes can pack into one segment."""
+    n_slots = depth + 1                       # +1 backs the zero-copy lease
+    cap = _next_pow2(depth + 8)               # data ring: depth + control slack
+    fcap = _next_pow2(n_slots)
+    tab_off = 256
+    free_off = tab_off + 32 * n_slots
+    rec_off = -(-(free_off + 8 * fcap) // 64) * 64
+    return (n_slots, cap, fcap, tab_off, free_off, rec_off,
+            rec_off + _STRIDE * cap)
+
+
+def _lane_stride(depth: int) -> int:
+    """Page-aligned per-lane footprint inside a multi-producer segment."""
+    return -(-_ctl_layout(depth)[-1] // 4096) * 4096
 
 # shmem mappings that could not unmap at close() because user-held
 # zero-copy views still export their buffer — kept alive to silence
@@ -691,19 +829,27 @@ class ShmemChannel(Channel):
     # cache lines, then the slot name table, free ring, and data ring
     _DH, _DT, _FH, _FT = 0, 64, 128, 192
 
-    def __init__(self, hop: HopSpec, ctx=None):  # ctx kept for API compat
+    def __init__(self, hop: HopSpec, ctx=None,  # ctx kept for API compat
+                 _shared: tuple | None = None):
         from multiprocessing import shared_memory
         super().__init__(hop)
-        self._layout(max(hop.depth, 1))
-        self._ctl = shared_memory.SharedMemory(create=True,
-                                               size=self._ctl_size)
+        if _shared is None:
+            # solo lane: own control segment starting at offset 0
+            self._base, self._n_lanes, self._lane_size = 0, 1, 0
+            self._layout(max(hop.depth, 1))
+            self._lane_size = self._ctl_size
+            self._ctl = shared_memory.SharedMemory(create=True,
+                                                   size=self._ctl_size)
+        else:
+            # one lane of a multi-producer segment (ShmemTransport.open_fan):
+            # SPSC rings at self._base inside a segment shared by n lanes
+            self._ctl, self._base, self._n_lanes, self._lane_size = _shared
+            self._layout(max(hop.depth, 1))
         self._ctl_name = self._ctl.name
-        self._ctl_owner = True
+        self._ctl_owner = True                # double unlink is tolerated
         # doorbells: (data send, data recv) + (free send, free recv)
-        self._bell_ds, self._bell_dr = socketlib.socketpair()
-        self._bell_fs, self._bell_fr = socketlib.socketpair()
-        for s in (self._bell_ds, self._bell_fs):
-            s.setblocking(False)
+        self._bell_ds, self._bell_dr = _bell_pair(hop.bell)
+        self._bell_fs, self._bell_fr = _bell_pair(hop.bell)
         self._pool: dict = {}                 # sender: slot idx -> SharedMemory
         self._attached: dict = {}             # receiver: idx -> (name, shm)
         self._lease: int | None = None        # slot behind the last recv view
@@ -714,13 +860,16 @@ class ShmemChannel(Channel):
     def _layout(self, depth: int) -> None:
         self._depth = depth
         self._spin_s = self.hop.spin_us * 1e-6
-        self._n_slots = depth + 1             # +1 backs the zero-copy lease
-        self._cap = _next_pow2(depth + 8)     # data ring: depth + control slack
-        self._fcap = _next_pow2(self._n_slots)
-        self._tab_off = 256
-        self._free_off = self._tab_off + 32 * self._n_slots
-        self._rec_off = -(-(self._free_off + 8 * self._fcap) // 64) * 64
-        self._ctl_size = self._rec_off + _STRIDE * self._cap
+        base = getattr(self, "_base", 0)
+        (self._n_slots, self._cap, self._fcap,
+         tab_off, free_off, rec_off, self._ctl_size) = _ctl_layout(depth)
+        # absolute offsets for this lane (counters keep their own cache
+        # lines); self._ctl_size stays the lane-relative footprint
+        self._DH, self._DT = base + 0, base + 64
+        self._FH, self._FT = base + 128, base + 192
+        self._tab_off = base + tab_off
+        self._free_off = base + free_off
+        self._rec_off = base + rec_off
 
     # -- counters + doorbells ------------------------------------------- #
     def _ld(self, off: int) -> int:
@@ -731,10 +880,7 @@ class ShmemChannel(Channel):
 
     @staticmethod
     def _ring(bell) -> None:
-        try:
-            bell.send(b"\0")
-        except (BlockingIOError, OSError):
-            pass                              # buffered bytes already pending
+        bell.ring()
 
     def _wait(self, ready, bell, timeout: float | None, what: str,
               err=TransportTimeout) -> None:
@@ -755,10 +901,7 @@ class ShmemChannel(Channel):
             chunk = (_BELL_CHUNK_S if deadline is None
                      else min(deadline - now, _BELL_CHUNK_S))
             try:
-                bell.settimeout(chunk)
-                bell.recv(4096)               # drain coalesced rings too
-            except (socketlib.timeout, BlockingIOError):
-                pass
+                bell.wait(chunk)              # drains coalesced rings too
             except OSError as e:
                 raise TransportError(
                     f"hop {self.hop.index}: doorbell gone ({e})") from e
@@ -1017,22 +1160,142 @@ class ShmemChannel(Channel):
             ctl = shared_memory.SharedMemory(name=self._ctl_name)
         except (FileNotFoundError, OSError):
             return                            # already fully torn down
-        for i in range(self._n_slots):
-            off = self._tab_off + 32 * i
-            name = bytes(ctl.buf[off:off + 32]).rstrip(b"\0").decode()
-            if not name:
-                continue
-            try:
-                shm = shared_memory.SharedMemory(name=name)
-                shm.close()
-                shm.unlink()
-            except Exception:
-                pass
+        # every lane of a shared fan segment names slots in its own table;
+        # whichever lane reaps first must sweep them all
+        for lane in range(self._n_lanes):
+            tab = lane * self._lane_size + (self._tab_off - self._base)
+            for i in range(self._n_slots):
+                off = tab + 32 * i
+                name = bytes(ctl.buf[off:off + 32]).rstrip(b"\0").decode()
+                if not name:
+                    continue
+                try:
+                    shm = shared_memory.SharedMemory(name=name)
+                    shm.close()
+                    shm.unlink()
+                except Exception:
+                    pass
         ctl.close()
         try:
             ctl.unlink()
         except Exception:
             pass
+
+
+# --------------------------------------------------------------------------- #
+# Replica fan-out / fan-in
+# --------------------------------------------------------------------------- #
+# A stage placed on r devices turns its hop into a *lane group*: r SPSC
+# channels, one per replica.  The dispatcher stripes data round-robin by
+# sequence number and broadcasts control tokens to every lane; the merge
+# consumes lanes in the same round-robin order, so results come back in
+# submit order with no reorder buffer, and a token showing up on the
+# current lane implies every other lane's next message is that same
+# token (tokens are injected at a single upstream point and each lane
+# is FIFO).  Both wrappers present the single-channel surface
+# ``_worker_main`` and the engines already speak: hop/epoch/set_codec/
+# drain_records/close/reap plus send or recv.
+class _FanBase:
+    def __init__(self, lanes: "Sequence[Channel]"):
+        if not lanes:
+            raise ValueError("replica fan needs at least one lane")
+        self.lanes = list(lanes)
+
+    @property
+    def hop(self) -> HopSpec:
+        return self.lanes[0].hop
+
+    @property
+    def epoch(self) -> float:
+        return self.lanes[0].epoch
+
+    @epoch.setter
+    def epoch(self, value: float) -> None:
+        for ch in self.lanes:
+            ch.epoch = value
+
+    def set_codec(self, name: str) -> None:
+        for ch in self.lanes:
+            ch.set_codec(name)
+
+    def drain_records(self):
+        records = []
+        for ch in self.lanes:
+            records.extend(ch.drain_records())
+        return records
+
+    def close(self) -> None:
+        for ch in self.lanes:
+            ch.close()
+
+    def reap(self) -> None:
+        for ch in self.lanes:
+            ch.reap()
+
+
+class FanOutChannel(_FanBase):
+    """Dispatcher end of a replica lane group: batches (and probes —
+    they ride the data stripe so both sides' round-robin counters stay
+    aligned) go to lane ``seq % r``; every other kind is a control
+    token, broadcast to all lanes in lane order."""
+
+    def __init__(self, lanes: "Sequence[Channel]"):
+        super().__init__(lanes)
+        self._seq = 0
+
+    def send(self, payload=None, kind: int = BATCH):
+        if kind in (BATCH, PROBE):
+            ch = self.lanes[self._seq % len(self.lanes)]
+            self._seq += 1
+            return ch.send(payload, kind)
+        rec = None
+        for ch in self.lanes:
+            rec = ch.send(payload, kind)
+        return rec
+
+
+class FanInChannel(_FanBase):
+    """Merge end of a replica lane group: data is consumed strictly in
+    the dispatcher's stripe order (lane ``_next``), so ordering needs no
+    seq numbers or reorder buffer.  A broadcast token is returned
+    exactly once — after collecting every other lane's copy, so no lane
+    can run a token ahead of the merge.  A ``TransportTimeout`` while
+    collecting leaves the merge state intact: the next ``recv`` resumes
+    the collection."""
+
+    def __init__(self, lanes: "Sequence[Channel]"):
+        super().__init__(lanes)
+        self._next = 0                        # lane owing the next message
+        self._tok: tuple | None = None        # pending broadcast token
+        self._owed: list[int] = []            # lanes still owing their copy
+
+    def recv(self, timeout: float | None = None):
+        if self._tok is not None:
+            return self._collect(timeout)
+        kind, payload = self.lanes[self._next].recv(timeout)
+        if kind in (BATCH, PROBE):
+            self._next = (self._next + 1) % len(self.lanes)
+            return kind, payload
+        if kind == ERROR:
+            return kind, payload              # fail fast, skip collection
+        self._tok = (kind, payload)
+        self._owed = [m for m in range(len(self.lanes)) if m != self._next]
+        return self._collect(timeout)
+
+    def _collect(self, timeout: float | None):
+        kind, payload = self._tok
+        while self._owed:
+            k, p = self.lanes[self._owed[0]].recv(timeout)
+            if k == ERROR:
+                return k, p
+            if k != kind:
+                raise TransportError(
+                    f"hop {self.hop.index}: replica fan-in protocol error "
+                    f"— lane {self._owed[0]} sent kind {k} while collecting "
+                    f"a broadcast token of kind {kind}")
+            self._owed.pop(0)
+        self._tok = None                      # _next unchanged: the stripe
+        return kind, payload                  # resumes where it left off
 
 
 # --------------------------------------------------------------------------- #
@@ -1049,6 +1312,14 @@ class Transport(ABC):
     @abstractmethod
     def open(self, hop: HopSpec) -> Channel:
         ...
+
+    def open_fan(self, hop: HopSpec, n: int) -> list[Channel]:
+        """``n`` independent lanes of the same hop — the channel group a
+        replicated stage's fan-out/fan-in rides (one SPSC lane per
+        replica, batches striped round-robin by seq).  Default: ``n``
+        separate :meth:`open` calls; shmem overrides this to pack the
+        lanes into one shared control segment."""
+        return [self.open(hop) for _ in range(n)]
 
 
 class EmulatedTransport(Transport):
@@ -1079,6 +1350,18 @@ class ShmemTransport(Transport):
 
     def open(self, hop: HopSpec) -> Channel:
         return ShmemChannel(hop, ctx=self._ctx)
+
+    def open_fan(self, hop: HopSpec, n: int) -> list[Channel]:
+        if n <= 1:
+            return [self.open(hop)]
+        from multiprocessing import shared_memory
+        # one segment, n page-aligned SPSC lanes: r producers share the
+        # ingress mapping without r separate control segments
+        stride = _lane_stride(max(hop.depth, 1))
+        ctl = shared_memory.SharedMemory(create=True, size=stride * n)
+        return [ShmemChannel(hop, ctx=self._ctx,
+                             _shared=(ctl, m * stride, n, stride))
+                for m in range(n)]
 
 
 TRANSPORTS: dict[str, Callable[..., Transport]] = {
@@ -1134,7 +1417,8 @@ def _worker_main(spec: dict) -> None:
     def build(bounds):
         return Worker(f"worker{stage + 1}", spec["model"], spec["params"],
                       bounds[stage], bounds[stage + 1], backend,
-                      cpu_clock=time.process_time)
+                      cpu_clock=time.process_time,
+                      pace_s=spec.get("pace_s", 0.0))
 
     try:
         worker = build(bounds)
@@ -1224,7 +1508,7 @@ def measure_hop(transport: str, sizes: Sequence[int], n_per_size: int = 20,
                 framing: str = "raw", timeout_s: float = 60.0,
                 spin_us: float = 500.0, codec: str = "none",
                 pace_link: AnyLink | None = None,
-                full: bool = False) -> dict[int, list]:
+                full: bool = False, bell: str = "auto") -> dict[int, list]:
     """Stream float32 payloads of each size in ``sizes`` over one real
     hop to a spawned sink process → {nbytes: receiver-measured elapsed
     seconds per transfer}.  The sink credits each message back over a
@@ -1247,7 +1531,8 @@ def measure_hop(transport: str, sizes: Sequence[int], n_per_size: int = 20,
                 # wide spin window: the credit round trip must land in
                 # it, or the per-hop number degenerates into a
                 # scheduler-wakeup benchmark (bimodal under load)
-                spin_us=spin_us, codec=codec, pace_link=pace_link))
+                spin_us=spin_us, codec=codec, pace_link=pace_link,
+                bell=bell))
     tx, rx = chan.split()
     parent_c, child_c = ctx.Pipe()
     proc = ctx.Process(target=_sink_main, args=({"chan": rx, "ctrl": child_c},),

@@ -1,0 +1,486 @@
+"""Replicated bottleneck stages (data-parallel fan-out inside the
+pipeline): the solver's replica label cross-validated against exhaustive
+sweeps, the migration-cost multiplier, the doorbell/multi-producer-ring
+transport layer, and the fan-in ordering matrix on real worker
+processes."""
+import numpy as np
+import pytest
+
+from repro.core import scenarios
+from repro.core.autosplit import AdaptiveSplitter
+from repro.core.blocks import Block, BlockGraph
+from repro.core.costmodel import evaluate_pipeline
+from repro.core.devices import LAN_PI_GPU, DeviceProfile, Link
+from repro.core.partitioner import (best_throughput, dp_front_kway,
+                                    replicas_feasible, solve, sweep_kway,
+                                    sweep_replicas)
+from repro.core.scenarios import Scenario
+
+
+# --------------------------------------------------------------------------- #
+# Fixtures: a bottleneck-heavy toy chain
+# --------------------------------------------------------------------------- #
+def _graph():
+    # front blocks are 10x heavier: the solver should staff them first
+    blocks = tuple(Block(f"b{i}", flops=(1e9 if i < 4 else 1e8),
+                         weight_bytes=1_000_000,
+                         out_bytes=50_000 * (6 - i)) for i in range(6))
+    return BlockGraph("toy", blocks, input_bytes=300_000, output_bytes=100)
+
+
+def _chain(k=3):
+    devs = tuple(DeviceProfile(f"d{i}", flops_per_s=1e9, mem_bytes=10**12,
+                               idle_w=1.0, active_w=5.0) for i in range(k))
+    link = Link("l0", rtt_s=1e-3, bw_bytes_per_s=1e8, energy_per_byte_j=1e-6)
+    return devs, (link,) * (k - 1)
+
+
+def _scenario(k=3, spares=()):
+    devs, links = _chain(k)
+    return Scenario("toy", devs, links, spare_devices=tuple(spares))
+
+
+# --------------------------------------------------------------------------- #
+# Cost model: the replica label
+# --------------------------------------------------------------------------- #
+def test_bottleneck_divides_by_replicas_latency_does_not():
+    g = _graph()
+    devs, links = _chain(3)
+    base = evaluate_pipeline(g, (2, 4), devs, links, batch=2)
+    rep = evaluate_pipeline(g, (2, 4), devs, links, batch=2,
+                            replicas=(2, 1, 1))
+    # stage 0 was the bottleneck: its cycle halves, others unchanged
+    s0, r0 = base.stages[0], rep.stages[0]
+    assert r0.replicas == 2
+    cycle0 = (s0.compute_s + s0.send_s) / 2
+    others = [(s.compute_s + s.send_s) for s in base.stages[1:]]
+    # last-stage return IO stays serial; reconstruct it from the totals
+    assert rep.bottleneck_s <= base.bottleneck_s
+    assert rep.throughput >= base.throughput
+    assert cycle0 <= rep.bottleneck_s + 1e-12
+    assert max(others) <= rep.bottleneck_s * 2 + 1e-12
+    # one batch still traverses exactly one replica
+    assert rep.latency_s == pytest.approx(base.latency_s)
+
+
+def test_replication_charges_extra_idle_energy():
+    g = _graph()
+    devs, links = _chain(3)
+    base = evaluate_pipeline(g, (2, 4), devs, links, batch=2)
+    rep = evaluate_pipeline(g, (2, 4), devs, links, batch=2,
+                            replicas=(3, 1, 1))
+    s0 = base.stages[0]
+    extra = (3 - 1) * devs[0].idle_w * (s0.compute_s + s0.send_s) / 3
+    assert rep.energy_j == pytest.approx(base.energy_j + extra)
+    assert rep.replicas == (3, 1, 1)
+    assert base.replicas == ()
+
+
+def test_invalid_replica_vectors_raise():
+    g = _graph()
+    devs, links = _chain(3)
+    with pytest.raises(ValueError):
+        evaluate_pipeline(g, (2, 4), devs, links, replicas=(2, 1))
+    with pytest.raises(ValueError):
+        evaluate_pipeline(g, (2, 4), devs, links, replicas=(0, 1, 1))
+    with pytest.raises(ValueError):
+        solve(g, _scenario(), replicas="bogus")
+
+
+# --------------------------------------------------------------------------- #
+# Solver: replicated DP label vs exhaustive enumeration
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("reps", [None, (2, 1, 1), (1, 2, 1), (2, 2, 1),
+                                  (1, 1, 3)])
+def test_dp_front_matches_exhaustive_sweep(reps):
+    """The monotone d-dimensional DP label must reproduce brute force's
+    best points under any fixed replica vector."""
+    g = _graph()
+    devs, links = _chain(3)
+    objectives = ("latency", "throughput", "energy")
+    sweep = sweep_kway(g, devs, links, batch=2, replicas=reps)
+    front = dp_front_kway(g, devs, links, batch=2, replicas=reps,
+                          objectives=objectives)
+    assert front, "empty DP front"
+    for key in ("latency_s", "energy_j"):
+        assert min(getattr(p, key) for p in front) == pytest.approx(
+            min(getattr(p, key) for p in sweep))
+    assert max(p.throughput for p in front) == pytest.approx(
+        max(p.throughput for p in sweep))
+    for p in front:
+        assert p.replicas == (reps if reps is not None else ())
+
+
+@pytest.mark.parametrize("n_spares", [1, 2])
+def test_auto_replica_search_matches_exhaustive(n_spares):
+    """Greedy ``solve(replicas='auto')`` must find the same best
+    steady-state throughput as the exhaustive assignment sweep."""
+    g = _graph()
+    # staff spares that match the first two devices' profile names
+    devs, links = _chain(3)
+    scen = Scenario("toy", devs, links,
+                    spare_devices=(devs[0],) * n_spares + (devs[1],))
+    auto = solve(g, scen, batch=2, replicas="auto")
+    exhaustive = sweep_replicas(g, scen, batch=2)
+    got = best_throughput(auto)
+    want = best_throughput(exhaustive)
+    assert got.throughput == pytest.approx(want.throughput)
+    assert got.replicas == want.replicas
+    # replication must actually have been used, and used on the heavy
+    # front stages
+    assert any(r > 1 for r in got.replicas)
+    # the unreplicated baseline stays in the pool for latency picks
+    assert any(p.replicas in ((), (1,) * 3) for p in auto)
+
+
+def test_fixed_replicas_flow_through_solve():
+    g = _graph()
+    scen = _scenario(3)
+    pts = solve(g, scen, batch=2, replicas=(2, 1, 1))
+    assert pts and all(p.replicas == (2, 1, 1) for p in pts)
+    base = solve(g, scen, batch=2)
+    assert (best_throughput(pts).throughput
+            > best_throughput(base).throughput)
+
+
+def test_replicas_feasible_counts_spares_by_name():
+    devs, _ = _chain(3)
+    spares = (devs[0], devs[0], devs[2])
+    assert replicas_feasible((1, 1, 1), devs, spares)
+    assert replicas_feasible((3, 1, 2), devs, spares)
+    assert not replicas_feasible((4, 1, 1), devs, spares)
+    assert not replicas_feasible((1, 2, 1), devs, spares)
+
+
+def test_pi_cluster_scenarios_registered():
+    for name, n_spares in (("pi_cluster4", 1), ("pi_cluster5", 2)):
+        scen = scenarios.get(name)
+        assert scen.name == name
+        assert len(scen.spare_devices) == n_spares
+        # spares replicate the Pi tier, not the GPU
+        assert all(s.name == scen.devices[0].name
+                   for s in scen.spare_devices)
+        pts = solve(_graph(), scen, batch=2, replicas="auto")
+        assert pts
+
+
+# --------------------------------------------------------------------------- #
+# Migration cost: weight bytes ship once per replica of the destination
+# --------------------------------------------------------------------------- #
+def test_migration_bytes_scale_with_destination_replicas():
+    blocks = tuple(Block(f"b{i}", flops=1e7, weight_bytes=1_000_000,
+                         out_bytes=50_000 * (6 - i)) for i in range(6))
+    g = BlockGraph("toy", blocks, input_bytes=300_000, output_bytes=100)
+    devs, links = _chain(2)
+    scen = Scenario("toy2", devs[:2], links[:1])
+    sp = AdaptiveSplitter(g, scen, batch=2)
+    # moving the cut 2 -> 4 ships blocks 2 and 3 across hop 0 (r=1 pin)
+    base = 2 * 1_000_000 * 1e-6
+    assert sp.migration_energy_j((2,), (4,)) == pytest.approx(base)
+    # destination stage replicated r=3: each crossed block ships 3 copies
+    assert sp.migration_energy_j((2,), (4,), new_replicas=(3, 1)) \
+        == pytest.approx(3 * base)
+    # replication of an untouched stage costs nothing extra
+    assert sp.migration_energy_j((2,), (4,), new_replicas=(1, 3)) \
+        == pytest.approx(base)
+    # time ships 3x the bytes in one bulk transfer per hop: the per-byte
+    # term triples, the per-hop latency term is charged once
+    oh = sp.migration_overhead_s
+    assert sp.migration_time_s((2,), (4,)) \
+        == pytest.approx(oh + links[0].transfer_time(2_000_000))
+    assert sp.migration_time_s((2,), (4,), new_replicas=(3, 1)) \
+        == pytest.approx(oh + links[0].transfer_time(3 * 2_000_000))
+
+
+# --------------------------------------------------------------------------- #
+# Doorbells
+# --------------------------------------------------------------------------- #
+def test_bell_pair_flavors_ring_and_wait():
+    import os
+
+    from repro.runtime.transport import _bell_pair
+    flavors = ["socketpair", "auto"]
+    if hasattr(os, "eventfd"):
+        flavors.append("eventfd")
+    for flavor in flavors:
+        ring, wait = _bell_pair(flavor)
+        ring.ring()
+        ring.ring()                           # coalesced rings must not block
+        wait.wait(0.5)
+        wait.wait(0.01)                       # drained: times out quietly
+        ring.close()
+        wait.close()
+        wait.close()                          # idempotent
+    with pytest.raises(ValueError):
+        _bell_pair("smoke-signals")
+
+
+@pytest.mark.skipif(not hasattr(__import__("os"), "eventfd"),
+                    reason="no eventfd on this platform")
+def test_eventfd_pair_ends_close_independently():
+    from repro.runtime.transport import _EventFdBell
+    a, b = _EventFdBell.pair()
+    b_dup = b                                 # same counter, own descriptor
+    a.close()                                 # closing one end …
+    b_dup.wait(0.01)                          # … must not break the other
+    b_dup.close()
+
+
+def test_shmem_hops_work_with_either_bell():
+    from repro.runtime.transport import BATCH, HopSpec, ShmemChannel
+    for bell in ("socketpair", "auto"):
+        ch = ShmemChannel(HopSpec(index=0, depth=2, spin_us=0, bell=bell))
+        x = np.arange(4096, dtype=np.float32)
+        ch.send(x)
+        kind, y = ch.recv(timeout=5)
+        assert kind == BATCH
+        np.testing.assert_array_equal(np.asarray(y).reshape(-1), x)
+        ch.close()
+        ch.reap()
+
+
+# --------------------------------------------------------------------------- #
+# Multi-producer shmem segment
+# --------------------------------------------------------------------------- #
+def test_shmem_open_fan_packs_lanes_into_one_segment():
+    from repro.runtime.transport import BATCH, HopSpec, get_transport
+    lanes = get_transport("shmem").open_fan(
+        HopSpec(index=0, depth=4, spin_us=50), 3)
+    try:
+        assert len({c._ctl_name for c in lanes}) == 1
+        assert all(c._n_lanes == 3 for c in lanes)
+        for m, c in enumerate(lanes):         # per-lane SPSC rings stay
+            c.send(np.full(2000, m, np.float32))      # independent
+        for m, c in enumerate(lanes):
+            kind, v = c.recv(timeout=5)
+            assert kind == BATCH and float(np.asarray(v)[0]) == m
+    finally:
+        for c in lanes:
+            c.close()
+        lanes[0].reap()
+
+
+def test_shmem_fan_reap_sweeps_every_lane():
+    from multiprocessing import shared_memory
+
+    from repro.runtime.transport import HopSpec, get_transport
+    lanes = get_transport("shmem").open_fan(
+        HopSpec(index=0, depth=2, spin_us=50), 2)
+    # force a payload slot into lane 1's table, then reap via lane 0
+    lanes[1].send(np.zeros(100_000, np.float32))
+    lanes[1].recv(timeout=5)
+    slot = lanes[1]._tab_name(0) or lanes[1]._tab_name(1)
+    assert slot, "expected a named payload slot on lane 1"
+    for c in lanes:
+        c.close()
+    lanes[0].reap()
+    with pytest.raises(FileNotFoundError):
+        shared_memory.SharedMemory(name=slot)
+
+
+# --------------------------------------------------------------------------- #
+# Fan wrappers: striping, token broadcast, merge ordering (in-process)
+# --------------------------------------------------------------------------- #
+def _queue_lanes(n):
+    from repro.runtime.edge import _QueueChan
+    return [_QueueChan() for _ in range(n)]
+
+
+def test_fanout_stripes_batches_and_broadcasts_tokens():
+    from repro.runtime.transport import (BATCH, RECONFIG, STOP,
+                                         FanOutChannel)
+    lanes = _queue_lanes(3)
+    out = FanOutChannel(lanes)
+    for i in range(7):
+        out.send(i, kind=BATCH)
+    out.send({"bounds": (0, 1)}, kind=RECONFIG)
+    out.send(None, kind=STOP)
+    per_lane = [[], [], []]
+    for m, ln in enumerate(lanes):
+        while True:
+            try:
+                per_lane[m].append(ln.recv(timeout=0.01))
+            except Exception:
+                break
+    # batches striped round-robin …
+    assert [k for k, _ in per_lane[0]][:3] == [BATCH] * 3
+    assert [v for k, v in per_lane[0] if k == BATCH] == [0, 3, 6]
+    assert [v for k, v in per_lane[1] if k == BATCH] == [1, 4]
+    assert [v for k, v in per_lane[2] if k == BATCH] == [2, 5]
+    # … tokens on every lane, in stream order
+    for m in range(3):
+        assert [k for k, _ in per_lane[m][-2:]] == [RECONFIG, STOP]
+
+
+def test_fanin_merges_in_stripe_order_and_dedups_tokens():
+    from repro.runtime.transport import (BATCH, STATS, STOP, FanInChannel,
+                                         FanOutChannel)
+    lanes = _queue_lanes(3)
+    out, inn = FanOutChannel(lanes), FanInChannel(lanes)
+    for i in range(5):
+        out.send(i, kind=BATCH)
+    out.send(None, kind=STATS)                # mid-stream broadcast token
+    for i in range(5, 9):
+        out.send(i, kind=BATCH)
+    out.send(None, kind=STOP)
+    got = []
+    while True:
+        kind, obj = inn.recv(timeout=1.0)
+        got.append((kind, obj))
+        if kind == STOP:
+            break
+    kinds = [k for k, _ in got]
+    assert kinds.count(STATS) == 1            # returned exactly once
+    assert kinds.count(STOP) == 1
+    assert [v for k, v in got if k == BATCH] == list(range(9))
+
+
+def test_fanin_timeout_leaves_merge_resumable():
+    from repro.runtime.transport import (STATS, FanInChannel,
+                                         TransportTimeout)
+    lanes = _queue_lanes(2)
+    inn = FanInChannel(lanes)
+    lanes[0].send(None, kind=STATS)           # half a broadcast
+    with pytest.raises(TransportTimeout):
+        inn.recv(timeout=0.05)                # lane 1 still owes its copy
+    lanes[1].send(None, kind=STATS)
+    kind, _ = inn.recv(timeout=1.0)           # resumes, returns the token
+    assert kind == STATS
+
+
+# --------------------------------------------------------------------------- #
+# Runtime: the fan-in integrity matrix
+# --------------------------------------------------------------------------- #
+jax = pytest.importorskip("jax")
+
+
+def _tiny_model():
+    from repro.models.cnn.layers import (Conv2D, Flatten, Linear, Pool,
+                                         ReLU, Sequential)
+    from repro.models.cnn.zoo import CNNModel
+    blocks = [
+        ("conv0", Sequential([Conv2D(3, 8, 3, 1, 1), ReLU()])),
+        ("conv1", Sequential([Conv2D(8, 8, 3, 1, 1), ReLU()])),
+        ("pool", Pool("max", 2, 2)),
+        ("conv2", Sequential([Conv2D(8, 16, 3, 1, 1), ReLU()])),
+        ("head", Sequential([Flatten(), Linear(16 * 16 * 16, 10)])),
+    ]
+    return CNNModel("tinycnn", blocks, input_hw=32)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    m = _tiny_model()
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _batches(n, batch=2, hw=32):
+    return [jax.random.normal(jax.random.PRNGKey(100 + i), (batch, hw, hw, 3))
+            for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def r1_reference(tiny):
+    """The r=1 pipeline outputs everything else must be bit-equal to."""
+    from repro.runtime.edge import EdgePipeline
+    m, params = tiny
+    xs = _batches(10)
+    with EdgePipeline(m, params, (2, 3), [LAN_PI_GPU, LAN_PI_GPU]) as pipe:
+        pipe.warmup(xs[0])
+        with pipe.session() as s:
+            for x in xs:
+                s.submit(x)
+            outs = [np.asarray(y) for y in s.drain()]
+    return xs, outs
+
+
+def test_pipeline_rejects_incoherent_replica_vectors(tiny):
+    from repro.runtime.edge import EdgePipeline
+    m, params = tiny
+    with pytest.raises(ValueError):
+        EdgePipeline(m, params, (2, 3), [LAN_PI_GPU, LAN_PI_GPU],
+                     replicas=(2, 3, 1))      # 2->3 has no valid lane map
+    with pytest.raises(ValueError):
+        EdgePipeline(m, params, (2, 3), [LAN_PI_GPU, LAN_PI_GPU],
+                     replicas=(1, 2))         # wrong length
+    with pytest.raises(ValueError):
+        EdgePipeline(m, params, (2, 3), [LAN_PI_GPU, LAN_PI_GPU],
+                     replicas=(1, 0, 1))
+
+
+@pytest.mark.parametrize("r", [2, 3])
+@pytest.mark.parametrize("policy", ["drain", "drop"])
+def test_emulated_replica_matrix(tiny, r1_reference, r, policy):
+    _replica_matrix_case(tiny, r1_reference, "emulated", r, policy)
+
+
+@pytest.mark.parametrize("transport", ["socket", "shmem"])
+@pytest.mark.parametrize("r", [2, 3])
+def test_process_replica_matrix(tiny, r1_reference, transport, r):
+    """socket/shmem × drain/drop × r∈{2,3}: zero lost/dup/reordered
+    results, bit-equal to the r=1 reference — both policies share one
+    pipeline standup to keep the matrix affordable."""
+    from repro.runtime.edge import EdgePipeline
+    m, params = tiny
+    xs, refs = r1_reference
+    with EdgePipeline(m, params, (2, 3), [LAN_PI_GPU, LAN_PI_GPU],
+                      transport=transport, replicas=(1, r, 1)) as pipe:
+        pipe.warmup(xs[0])
+        for policy in ("drain", "drop"):
+            with pipe.session(inflight=4, policy=policy) as s:
+                for x in xs[:4]:
+                    s.submit(x)               # fill the replica lanes …
+                s.migrate((2, 4))             # … re-cut mid-stream
+                for x in xs[4:]:
+                    s.submit(x)
+                got = s.drain()
+            assert len(got) == len(xs), \
+                f"lost/duplicated under {transport}/r={r}/{policy}"
+            for i, (ref, y) in enumerate(zip(refs, got)):
+                assert np.allclose(ref, np.asarray(y), atol=1e-5), \
+                    f"batch {i} wrong under {transport}/r={r}/{policy}"
+            pipe.migrate((2, 3))              # restore for the next policy
+
+
+def _replica_matrix_case(tiny, r1_reference, transport, r, policy):
+    from repro.runtime.edge import EdgePipeline
+    m, params = tiny
+    xs, refs = r1_reference
+    with EdgePipeline(m, params, (2, 3), [LAN_PI_GPU, LAN_PI_GPU],
+                      transport=transport, replicas=(1, r, 1)) as pipe:
+        pipe.warmup(xs[0])
+        with pipe.session(inflight=4, policy=policy) as s:
+            for x in xs[:4]:
+                s.submit(x)
+            s.migrate((2, 4))
+            for x in xs[4:]:
+                s.submit(x)
+            got = s.drain()
+    assert len(got) == len(xs)
+    for i, (ref, y) in enumerate(zip(refs, got)):
+        assert np.allclose(ref, np.asarray(y), atol=1e-5), \
+            f"batch {i} wrong under {transport}/r={r}/{policy}"
+
+
+def test_replicated_pipeline_is_bit_equal_without_migration(tiny,
+                                                           r1_reference):
+    """No recut in flight: replica fan-out/fan-in must be bit-exact, not
+    merely close — same jitted stages, same cuts, different plumbing."""
+    from repro.runtime.edge import EdgePipeline
+    m, params = tiny
+    xs, refs = r1_reference
+    with EdgePipeline(m, params, (2, 3), [LAN_PI_GPU, LAN_PI_GPU],
+                      transport="shmem", replicas=(2, 2, 1)) as pipe:
+        pipe.warmup(xs[0])
+        with pipe.session() as s:
+            for x in xs:
+                s.submit(x)
+            got = s.drain()
+            s.checkpoint(probe=False)         # STATS through the replicas
+        stats = pipe.stage_stats()
+    assert len(got) == len(refs)
+    for ref, y in zip(refs, got):
+        np.testing.assert_array_equal(ref, np.asarray(y))
+    # every replica executed: the two logical stages split the batches
+    assert stats[0].calls == len(xs)
+    assert stats[1].calls == len(xs)
