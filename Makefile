@@ -1,8 +1,13 @@
 # Developer loop for the ParetoPipe reproduction.
 #
-#   make fast            — the development tier: fast tests + the <30 s
-#                          3-objective bench smoke (BENCH_pareto.json) +
-#                          the <30 s transport smoke (BENCH_transport.json)
+#   make check           — static gates, <30 s total: PipeCheck (the
+#                          protocol invariant checker, tools/pipecheck.py)
+#                          always; ruff + mypy when installed (see
+#                          ruff.toml / mypy.ini; CI always has them)
+#   make fast            — the development tier: static gates + fast
+#                          tests + the <30 s 3-objective bench smoke
+#                          (BENCH_pareto.json) + the <30 s transport
+#                          smoke (BENCH_transport.json)
 #   make test-fast       — fast tests only: everything except the
 #                          multi-minute train/system drills (marker: slow)
 #   make test            — tier-1 verify, the full suite (what CI runs)
@@ -45,12 +50,25 @@ PY      ?= python
 PYTEST  ?= $(PY) -m pytest
 ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: fast test test-fast bench bench-quick bench-smoke bench-transport \
-        bench-transport-check bench-stream bench-stream-check \
-        bench-codec bench-codec-check bench-replica bench-replica-check demo
+.PHONY: check fast test test-fast bench bench-quick bench-smoke \
+        bench-transport bench-transport-check bench-stream \
+        bench-stream-check bench-codec bench-codec-check bench-replica \
+        bench-replica-check demo
 
-fast: test-fast bench-smoke bench-transport-check bench-stream-check \
+fast: check test-fast bench-smoke bench-transport-check bench-stream-check \
       bench-codec-check bench-replica-check
+
+# Static gates (<30 s). PipeCheck is self-contained (stdlib ast only)
+# and always runs; ruff/mypy are dev extras — skipped with a notice
+# when absent so `make fast` works in the bare runtime container.
+check:
+	$(ENV) $(PY) tools/pipecheck.py
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tools tests; \
+	else echo "check: ruff not installed — skipped (pip install -r requirements-dev.txt)"; fi
+	@if command -v mypy >/dev/null 2>&1; then \
+		mypy; \
+	else echo "check: mypy not installed — skipped (pip install -r requirements-dev.txt)"; fi
 
 test:
 	$(ENV) $(PYTEST) -x -q

@@ -1,0 +1,10 @@
+"""Static analysis over the repo itself (PipeCheck).
+
+`repro.analysis` is tooling *about* the tree, not part of the serving
+path: `pipecheck` holds the runtime to its protocol invariants
+(R1–R5), `manifest` pins the wire-protocol facts it checks against.
+Run it via ``tools/pipecheck.py`` or ``make check``.
+"""
+from .pipecheck import Finding, RULE_DOCS, RULES, run_checks, scan_tree
+
+__all__ = ["Finding", "RULES", "RULE_DOCS", "run_checks", "scan_tree"]

@@ -1,0 +1,55 @@
+"""Pinned wire-protocol facts that PipeCheck holds the tree to.
+
+This module is the *other half* of every protocol constant in the
+runtime: the checker (`repro.analysis.pipecheck`) compares what the
+source tree declares against what is recorded here, so changing a wire
+code, a struct layout, or a token kind requires a matching, conscious
+edit in this file.  That friction is the point — protocol drift should
+fail `make check`, not a matrix test three PRs later.
+"""
+from __future__ import annotations
+
+# The 8 in-band token kinds, in wire order.  `BATCH…CLOCK = range(8)`
+# in runtime/transport.py must enumerate exactly these names.
+TOKEN_KINDS: tuple[str, ...] = (
+    "BATCH", "WARMUP", "PROBE", "RECONFIG", "STATS", "STOP", "ERROR", "CLOCK",
+)
+
+# Codec wire codes are append-only: a code, once shipped in a frame
+# header, can never be reused or renamed (stateless decode relies on
+# it).  New codecs append the next free code here *and* in
+# core/codecs.py; R2 fails on any divergence.
+CODEC_WIRE_CODES: dict[int, str] = {
+    0: "none",
+    1: "int8",
+    2: "fp8",
+    3: "topk",
+}
+
+# Struct layouts per WIRE_LAYOUT_VERSION, whitespace-normalised.  An
+# edit to _FHDR/_RREC in runtime/transport.py must bump
+# WIRE_LAYOUT_VERSION there and append the new shapes here (R5).
+WIRE_LAYOUT_VERSION: int = 1
+WIRE_LAYOUTS: dict[int, dict[str, str]] = {
+    1: {
+        "_FHDR": "!BBbBBIdQ8q",
+        "_RREC": "<BBbBBiIIdQ8q",
+    },
+}
+
+# The full surface every concrete Channel must implement (R3): the two
+# abstract halves plus the concrete contract the engines rely on.
+CHANNEL_SURFACE: tuple[str, ...] = (
+    "send", "recv", "close", "reap", "split", "set_codec",
+)
+
+# Declared pickle escape hatches (R4): (path suffix, qualname prefix)
+# pairs inside which `pickle.dumps/loads` is legitimate — the
+# `framing="pickle"` serializer and the exotic-meta fallback in the
+# packed framer.  Anywhere else under runtime/ is a hot path.
+PICKLE_ALLOWED: tuple[tuple[str, str], ...] = (
+    ("runtime/transport.py", "_Serializer"),
+    ("runtime/transport.py", "_frame"),
+    ("runtime/transport.py", "_unframe"),
+    ("runtime/transport.py", "_decode"),
+)

@@ -1,0 +1,668 @@
+"""PipeCheck — repo-specific static invariants over the runtime protocol.
+
+An AST pass (no imports of the checked code, no execution) that holds
+``src/`` to the transport-protocol invariants the matrix tests only
+catch dynamically:
+
+  R1  every ``kind ==`` / ``kind in`` dispatch ladder over transport
+      tokens is exhaustive for the 8 kinds or ends in an explicit
+      default (``else``) / falls through to further handling — silent
+      token drops are how protocol bugs hide.
+  R2  codec registry wire codes are append-only and collision-free
+      against :mod:`repro.analysis.manifest`; every lossy codec
+      overrides the analytic ``wire_bytes``/``encode``/``decode``
+      surface and every ``ops.<fn>`` it calls has a ``<fn>_ref``
+      oracle in ``kernels/ref.py``.
+  R3  every concrete ``Channel`` subclass implements the full surface
+      (``send``/``recv``/``close``/``reap``/``split``/``set_codec``),
+      and observation ``record(...)`` calls on runtime paths carry
+      ``raw_bytes`` so wire accounting never silently degrades.
+  R4  no ``pickle`` on runtime hot paths outside the declared escape
+      hatches (``framing="pickle"`` serializer, exotic-meta fallback).
+  R5  ``_FHDR``/``_RREC`` struct layouts match the manifest entry for
+      the declared ``WIRE_LAYOUT_VERSION`` — field edits must bump the
+      version and append the new shape to the manifest.
+
+The pass runs over a ``{relative path: source}`` mapping so the test
+suite can pin each rule with fixture files; ``scan_tree`` builds that
+mapping from a repo checkout.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable, Mapping, Optional
+
+from . import manifest
+
+RULES: tuple[str, ...] = ("R1", "R2", "R3", "R4", "R5")
+
+RULE_DOCS: dict[str, str] = {
+    "R1": "token dispatch must be exhaustive or explicitly defaulted",
+    "R2": "codec wire codes append-only; lossy codecs need wire_bytes + ref oracle",
+    "R3": "concrete Channels implement the full surface; record() carries raw_bytes",
+    "R4": "no pickle on runtime hot paths outside declared escape hatches",
+    "R5": "_FHDR/_RREC edits must bump WIRE_LAYOUT_VERSION (+ manifest)",
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+_TOKENS = frozenset(manifest.TOKEN_KINDS)
+
+
+def _token_name(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Name) and node.id in _TOKENS:
+        return node.id
+    if isinstance(node, ast.Attribute) and node.attr in _TOKENS:
+        return node.attr
+    return None
+
+
+def _token_tuples(tree: ast.Module) -> dict[str, frozenset[str]]:
+    """Module-level ``NAME = (BATCH, PROBE, ...)`` tuple constants."""
+    out: dict[str, frozenset[str]] = {}
+    for stmt in tree.body:
+        if (
+            isinstance(stmt, ast.Assign)
+            and len(stmt.targets) == 1
+            and isinstance(stmt.targets[0], ast.Name)
+            and isinstance(stmt.value, ast.Tuple)
+            and stmt.value.elts
+        ):
+            names = [_token_name(e) for e in stmt.value.elts]
+            if all(names):
+                out[stmt.targets[0].id] = frozenset(n for n in names if n)
+    return out
+
+
+def _classify_test(
+    test: ast.expr, tuples: Mapping[str, frozenset[str]]
+) -> Optional[tuple[str, frozenset[str]]]:
+    """(subject key, token kinds) for a token-dispatch branch test."""
+    if (
+        isinstance(test, ast.Compare)
+        and len(test.ops) == 1
+        and len(test.comparators) == 1
+    ):
+        op, comp = test.ops[0], test.comparators[0]
+        if isinstance(op, ast.Eq):
+            tok = _token_name(comp)
+            if tok is not None:
+                return ast.dump(test.left), frozenset((tok,))
+            tok = _token_name(test.left)
+            if tok is not None:
+                return ast.dump(comp), frozenset((tok,))
+        if isinstance(op, ast.In):
+            if isinstance(comp, (ast.Tuple, ast.Set, ast.List)) and comp.elts:
+                names = [_token_name(e) for e in comp.elts]
+                if all(names):
+                    return ast.dump(test.left), frozenset(n for n in names if n)
+            if isinstance(comp, ast.Name) and comp.id in tuples:
+                return ast.dump(test.left), tuples[comp.id]
+    if isinstance(test, ast.BoolOp) and isinstance(test.op, ast.Or):
+        parts = [_classify_test(v, tuples) for v in test.values]
+        if parts and all(p is not None for p in parts):
+            subjects = {p[0] for p in parts if p}
+            if len(subjects) == 1:
+                kinds: frozenset[str] = frozenset().union(
+                    *(p[1] for p in parts if p)
+                )
+                return parts[0][0], kinds  # type: ignore[index]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# R1 — exhaustive token dispatch
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Ladder:
+    subject: Optional[str]      # None when no token branch found
+    kinds: frozenset[str]
+    n_token_branches: int
+    has_else: bool
+    line: int
+
+
+def _walk_ladder(node: ast.If, tuples: Mapping[str, frozenset[str]]) -> _Ladder:
+    subject: Optional[str] = None
+    kinds: frozenset[str] = frozenset()
+    n_token = 0
+    has_else = False
+    cur: ast.If = node
+    while True:
+        c = _classify_test(cur.test, tuples)
+        if c is not None and (subject is None or c[0] == subject):
+            subject = c[0]
+            kinds |= c[1]
+            n_token += 1
+        orelse = cur.orelse
+        if len(orelse) == 1 and isinstance(orelse[0], ast.If):
+            cur = orelse[0]
+            continue
+        has_else = bool(orelse)
+        break
+    return _Ladder(subject, kinds, n_token, has_else, node.lineno)
+
+
+def _iter_blocks(tree: ast.AST) -> Iterable[list[ast.stmt]]:
+    for node in ast.walk(tree):
+        for field in ("body", "orelse", "finalbody"):
+            block = getattr(node, field, None)
+            if not (isinstance(block, list) and block
+                    and isinstance(block[0], ast.stmt)):
+                continue
+            if (
+                field == "orelse"
+                and isinstance(node, ast.If)
+                and len(block) == 1
+                and isinstance(block[0], ast.If)
+            ):
+                continue  # elif continuation — _walk_ladder covers it
+            yield block
+        for handler in getattr(node, "handlers", []) or []:
+            yield handler.body
+
+
+def _check_r1(rel: str, tree: ast.Module) -> list[Finding]:
+    tuples = _token_tuples(tree)
+    findings: list[Finding] = []
+    all_kinds = frozenset(manifest.TOKEN_KINDS)
+    for block in _iter_blocks(tree):
+        i = 0
+        while i < len(block):
+            stmt = block[i]
+            if not isinstance(stmt, ast.If):
+                i += 1
+                continue
+            # Grow a group of consecutive If-ladders testing the same
+            # token subject (the `if kind == A: ...` / `if kind == B:`
+            # sequential style counts as one dispatch site).
+            group: list[_Ladder] = []
+            j = i
+            while j < len(block) and isinstance(block[j], ast.If):
+                ladder = _walk_ladder(block[j], tuples)  # type: ignore[arg-type]
+                if ladder.subject is None:
+                    break
+                if group and ladder.subject != group[0].subject:
+                    break
+                group.append(ladder)
+                j += 1
+                if ladder.has_else:
+                    break  # an explicit default closes the site
+            if not group:
+                i += 1
+                continue
+            covered = frozenset().union(*(g.kinds for g in group))
+            n_branches = sum(g.n_token_branches for g in group)
+            trailing = j < len(block)  # later statements = default handling
+            compliant = (
+                group[-1].has_else
+                or covered >= all_kinds
+                or trailing
+            )
+            if n_branches >= 2 and not compliant:
+                missing = sorted(all_kinds - covered)
+                findings.append(Finding(
+                    "R1", rel, group[0].line,
+                    "non-exhaustive token dispatch: handles "
+                    f"{{{', '.join(sorted(covered))}}}, silently drops "
+                    f"{{{', '.join(missing)}}}; add an else that raises "
+                    "TransportError or cover all 8 kinds",
+                ))
+            i = max(j, i + 1)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R2 — codec registry
+# ---------------------------------------------------------------------------
+
+def _class_const(node: ast.ClassDef, name: str):
+    for stmt in node.body:
+        target = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            target = stmt.targets[0]
+        elif isinstance(stmt, ast.AnnAssign):
+            target = stmt.target
+        if (
+            isinstance(target, ast.Name)
+            and target.id == name
+            and isinstance(getattr(stmt, "value", None), ast.Constant)
+        ):
+            return stmt.value.value
+    return None
+
+
+def _method_names(node: ast.ClassDef) -> set[str]:
+    return {
+        s.name for s in node.body
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+
+
+def _ops_calls(node: ast.ClassDef) -> set[str]:
+    out = set()
+    for sub in ast.walk(node):
+        if (
+            isinstance(sub, ast.Call)
+            and isinstance(sub.func, ast.Attribute)
+            and isinstance(sub.func.value, ast.Name)
+            and sub.func.value.id == "ops"
+        ):
+            out.add(sub.func.attr)
+    return out
+
+
+def _reaches(name: str, bases: Mapping[str, list[str]], target: str) -> bool:
+    seen = set()
+    stack = [name]
+    while stack:
+        cur = stack.pop()
+        if cur == target:
+            return True
+        if cur in seen:
+            continue
+        seen.add(cur)
+        stack.extend(bases.get(cur, []))
+    return False
+
+
+def _check_r2(
+    rel: str, tree: ast.Module, ref_names: frozenset[str]
+) -> list[Finding]:
+    findings: list[Finding] = []
+    classes = {
+        n.name: n for n in tree.body if isinstance(n, ast.ClassDef)
+    }
+    base_names = {
+        name: [b.id for b in node.bases if isinstance(b, ast.Name)]
+        for name, node in classes.items()
+    }
+    codecs: dict[str, tuple[str, int, ast.ClassDef]] = {}
+    for name, node in classes.items():
+        if name != "Codec" and not _reaches(name, base_names, "Codec"):
+            continue
+        code = _class_const(node, "code")
+        wire_name = _class_const(node, "name")
+        if code is None and wire_name is None:
+            continue  # abstract intermediate (e.g. a lossy base)
+        if not isinstance(code, int) or not isinstance(wire_name, str):
+            findings.append(Finding(
+                "R2", rel, node.lineno,
+                f"codec class {name} must declare literal `name` (str) and "
+                "`code` (int) class attributes",
+            ))
+            continue
+        codecs[name] = (wire_name, code, node)
+
+    by_code: dict[int, str] = {}
+    for cls, (wire_name, code, node) in sorted(
+        codecs.items(), key=lambda kv: kv[1][2].lineno
+    ):
+        if code in by_code:
+            findings.append(Finding(
+                "R2", rel, node.lineno,
+                f"wire code {code} of codec {cls} collides with codec "
+                f"{by_code[code]!r} — wire codes are append-only and unique",
+            ))
+            continue
+        by_code[code] = cls
+        pinned = manifest.CODEC_WIRE_CODES.get(code)
+        if pinned is None:
+            expected = max(manifest.CODEC_WIRE_CODES) + 1
+            findings.append(Finding(
+                "R2", rel, node.lineno,
+                f"codec {wire_name!r} uses wire code {code} not recorded in "
+                "analysis/manifest.py CODEC_WIRE_CODES — append it there "
+                f"(next free code: {expected})",
+            ))
+        elif pinned != wire_name:
+            findings.append(Finding(
+                "R2", rel, node.lineno,
+                f"wire code {code} is pinned to codec {pinned!r} in the "
+                f"manifest but the tree names it {wire_name!r} — codes are "
+                "append-only, never renamed or reused",
+            ))
+        if code != 0:
+            methods = _method_names(node)
+            for required in ("wire_bytes", "encode", "decode"):
+                if required not in methods:
+                    findings.append(Finding(
+                        "R2", rel, node.lineno,
+                        f"lossy codec {wire_name!r} inherits `{required}` "
+                        "instead of overriding it — the identity byte model "
+                        "would misaccount the wire",
+                    ))
+            for op in sorted(_ops_calls(node)):
+                if f"{op}_ref" not in ref_names:
+                    findings.append(Finding(
+                        "R2", rel, node.lineno,
+                        f"codec {wire_name!r} calls ops.{op} but "
+                        f"kernels/ref.py defines no {op}_ref oracle",
+                    ))
+
+    # every manifest code must still exist in the tree (append-only also
+    # means no deletions)
+    tree_codes = {code for (_, code, _) in codecs.values()}
+    for code, pinned in sorted(manifest.CODEC_WIRE_CODES.items()):
+        if code not in tree_codes:
+            findings.append(Finding(
+                "R2", rel, 1,
+                f"manifest pins wire code {code} to codec {pinned!r} but no "
+                "codec class in the tree declares it — codes may never be "
+                "retired",
+            ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R3 — Channel surface + record() accounting
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _ClassInfo:
+    rel: str
+    node: ast.ClassDef
+    bases: list[str]
+    methods: dict[str, bool]  # name -> is_abstract
+    is_abstract_marked: bool
+
+
+def _is_abstract_def(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        name = dec.attr if isinstance(dec, ast.Attribute) else (
+            dec.id if isinstance(dec, ast.Name) else None
+        )
+        if name in ("abstractmethod", "abstractproperty"):
+            return True
+    return False
+
+
+def _collect_classes(files: Mapping[str, ast.Module]) -> dict[str, _ClassInfo]:
+    table: dict[str, _ClassInfo] = {}
+    for rel, tree in files.items():
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            bases = []
+            marked = False
+            for b in node.bases:
+                name = b.id if isinstance(b, ast.Name) else (
+                    b.attr if isinstance(b, ast.Attribute) else None
+                )
+                if name is None:
+                    continue
+                if name in ("ABC", "ABCMeta"):
+                    marked = True
+                else:
+                    bases.append(name)
+            methods = {
+                s.name: _is_abstract_def(s)
+                for s in node.body
+                if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))
+            }
+            if any(methods.values()):
+                marked = True
+            table[node.name] = _ClassInfo(rel, node, bases, methods, marked)
+    return table
+
+
+def _resolve_method(
+    cls: str, method: str, table: Mapping[str, _ClassInfo]
+) -> Optional[bool]:
+    """Is `method` implemented (False) / abstract (True) / missing (None)?"""
+    seen = set()
+    stack = [cls]
+    while stack:
+        cur = stack.pop(0)
+        if cur in seen or cur not in table:
+            continue
+        seen.add(cur)
+        info = table[cur]
+        if method in info.methods:
+            if not info.methods[method]:
+                return False
+            # abstract here — an implementation may still live deeper
+            for base in info.bases:
+                deeper = _resolve_method(base, method, table)
+                if deeper is False:
+                    return False
+            return True
+        stack.extend(info.bases)
+    return None
+
+
+def _check_r3(files: Mapping[str, ast.Module]) -> list[Finding]:
+    findings: list[Finding] = []
+    table = _collect_classes(files)
+    for name, info in sorted(table.items()):
+        if name == "Channel" or not _reaches(
+            name, {k: v.bases for k, v in table.items()}, "Channel"
+        ):
+            continue
+        if info.is_abstract_marked:
+            continue
+        for method in manifest.CHANNEL_SURFACE:
+            status = _resolve_method(name, method, table)
+            if status is not False:
+                why = "declares it abstract" if status else "never defines it"
+                findings.append(Finding(
+                    "R3", info.rel, info.node.lineno,
+                    f"concrete Channel subclass {name} {why}: `{method}` — "
+                    "the engines require the full surface "
+                    f"({'/'.join(manifest.CHANNEL_SURFACE)})",
+                ))
+
+    # record() calls on runtime paths must carry raw_bytes (or be
+    # explicit zero-byte probes) so TransferRecord wire accounting holds.
+    for rel, tree in files.items():
+        if "runtime/" not in rel:
+            continue
+        for node in ast.walk(tree):
+            if not (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "record"
+            ):
+                continue
+            if any(isinstance(a, ast.Starred) for a in node.args):
+                continue
+            if any(kw.arg == "raw_bytes" for kw in node.keywords):
+                continue
+            if len(node.args) >= 4:
+                continue
+            if node.args and isinstance(node.args[0], ast.Constant) \
+                    and node.args[0].value == 0:
+                continue  # zero-byte probe: raw == wire == 0
+            findings.append(Finding(
+                "R3", rel, node.lineno,
+                "record() call without raw_bytes — TransferRecord wire "
+                "accounting (raw_bytes >= wire bytes) silently degrades; "
+                "pass raw_bytes= explicitly",
+            ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R4 — pickle on hot paths
+# ---------------------------------------------------------------------------
+
+_PICKLE_FNS = frozenset(("dumps", "loads", "dump", "load"))
+
+
+def _check_r4(rel: str, tree: ast.Module) -> list[Finding]:
+    if "runtime/" not in rel:
+        return []
+    allowed_prefixes = tuple(
+        qual for suffix, qual in manifest.PICKLE_ALLOWED
+        if rel.endswith(suffix)
+    )
+    findings: list[Finding] = []
+
+    def visit(node: ast.AST, qual: tuple[str, ...]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                visit(child, qual + (child.name,))
+                continue
+            if (
+                isinstance(child, ast.Call)
+                and isinstance(child.func, ast.Attribute)
+                and isinstance(child.func.value, ast.Name)
+                and child.func.value.id == "pickle"
+                and child.func.attr in _PICKLE_FNS
+            ):
+                qualname = ".".join(qual) or "<module>"
+                if not any(
+                    qualname == p or qualname.startswith(p + ".")
+                    for p in allowed_prefixes
+                ):
+                    findings.append(Finding(
+                        "R4", rel, child.lineno,
+                        f"pickle.{child.func.attr} in {qualname} — hot-path "
+                        "serialization must use the packed framer; declared "
+                        "escape hatches live in analysis/manifest.py "
+                        "PICKLE_ALLOWED",
+                    ))
+            visit(child, qual)
+
+    visit(tree, ())
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R5 — struct layout version
+# ---------------------------------------------------------------------------
+
+def _struct_fmt(stmt: ast.stmt) -> Optional[tuple[str, str, int]]:
+    if not (
+        isinstance(stmt, ast.Assign)
+        and len(stmt.targets) == 1
+        and isinstance(stmt.targets[0], ast.Name)
+        and isinstance(stmt.value, ast.Call)
+        and isinstance(stmt.value.func, ast.Attribute)
+        and stmt.value.func.attr == "Struct"
+        and stmt.value.args
+        and isinstance(stmt.value.args[0], ast.Constant)
+        and isinstance(stmt.value.args[0].value, str)
+    ):
+        return None
+    return stmt.targets[0].id, stmt.value.args[0].value, stmt.lineno
+
+
+def _check_r5(rel: str, tree: ast.Module) -> list[Finding]:
+    findings: list[Finding] = []
+    version = None
+    version_line = 1
+    layouts: dict[str, tuple[str, int]] = {}
+    for stmt in tree.body:
+        if (
+            isinstance(stmt, ast.Assign)
+            and len(stmt.targets) == 1
+            and isinstance(stmt.targets[0], ast.Name)
+            and stmt.targets[0].id == "WIRE_LAYOUT_VERSION"
+            and isinstance(stmt.value, ast.Constant)
+        ):
+            version = stmt.value.value
+            version_line = stmt.lineno
+        fmt = _struct_fmt(stmt)
+        if fmt is not None and fmt[0] in ("_FHDR", "_RREC"):
+            layouts[fmt[0]] = (fmt[1].replace(" ", ""), fmt[2])
+    if version is None:
+        return [Finding(
+            "R5", rel, 1,
+            "transport module declares no WIRE_LAYOUT_VERSION constant — "
+            "_FHDR/_RREC edits cannot be tracked",
+        )]
+    pinned = manifest.WIRE_LAYOUTS.get(version)
+    if pinned is None:
+        return [Finding(
+            "R5", rel, version_line,
+            f"WIRE_LAYOUT_VERSION {version} has no entry in "
+            "analysis/manifest.py WIRE_LAYOUTS — record the new layout "
+            "shapes when bumping",
+        )]
+    for name, expected in sorted(pinned.items()):
+        got = layouts.get(name)
+        if got is None:
+            findings.append(Finding(
+                "R5", rel, version_line,
+                f"layout version {version} pins {name} but the module does "
+                "not define it",
+            ))
+        elif got[0] != expected:
+            findings.append(Finding(
+                "R5", rel, got[1],
+                f"{name} format {got[0]!r} differs from the manifest shape "
+                f"{expected!r} for layout version {version} — bump "
+                "WIRE_LAYOUT_VERSION and append the new shape to "
+                "WIRE_LAYOUTS",
+            ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+def run_checks(
+    sources: Mapping[str, str], rules: Optional[Iterable[str]] = None
+) -> list[Finding]:
+    """Run the pass over a ``{relative posix path: source}`` mapping."""
+    active = frozenset(rules) if rules is not None else frozenset(RULES)
+    trees: dict[str, ast.Module] = {}
+    findings: list[Finding] = []
+    for rel, text in sorted(sources.items()):
+        try:
+            trees[rel] = ast.parse(text, filename=rel)
+        except SyntaxError as exc:
+            findings.append(Finding(
+                "R0", rel, exc.lineno or 1, f"syntax error: {exc.msg}"
+            ))
+    ref_names = frozenset(
+        node.name
+        for rel, tree in trees.items() if rel.endswith("kernels/ref.py")
+        for node in tree.body
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+    )
+    for rel, tree in sorted(trees.items()):
+        if "R1" in active:
+            findings.extend(_check_r1(rel, tree))
+        if "R2" in active and rel.endswith("core/codecs.py"):
+            findings.extend(_check_r2(rel, tree, ref_names))
+        if "R4" in active:
+            findings.extend(_check_r4(rel, tree))
+        if "R5" in active and rel.endswith("runtime/transport.py"):
+            findings.extend(_check_r5(rel, tree))
+    if "R3" in active:
+        findings.extend(_check_r3(trees))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def scan_tree(
+    root: str | Path, rules: Optional[Iterable[str]] = None
+) -> list[Finding]:
+    """Run the pass over every Python file under ``<root>/src``."""
+    root = Path(root)
+    sources = {
+        p.relative_to(root).as_posix(): p.read_text()
+        for p in sorted((root / "src").rglob("*.py"))
+    }
+    return run_checks(sources, rules)

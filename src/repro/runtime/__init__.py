@@ -18,9 +18,15 @@ Public API:
                                         ("emulated" | "socket" | "shmem")
     record_trace                      — measured records → replayable
                                         LinkTrace (seed the emulator)
+    SanitizedChannel, SanitizerError,
+    Violation, drain_violations       — the live protocol sanitizer
+                                        (``HopSpec(sanitize=True)`` /
+                                        ``REPRO_SANITIZE=1``)
 """
 from .adaptive import AdaptiveRuntime
 from .edge import EdgePipeline, PipelineResult, StageStats, Worker
+from .sanitizer import (SanitizedChannel, SanitizerError, Violation,
+                        drain_violations)
 from .session import (AdaptiveController, Controller, LoopRecord,
                       MigrationPolicy, PinnedController, Session)
 from .transport import (Channel, HopSpec, TransferRecord, Transport,
@@ -34,4 +40,5 @@ __all__ = [
     "EdgePipeline", "PipelineResult", "StageStats", "Worker",
     "Channel", "HopSpec", "TransferRecord", "Transport", "TransportError",
     "TransportTimeout", "get_transport", "record_trace", "register_transport",
+    "SanitizedChannel", "SanitizerError", "Violation", "drain_violations",
 ]

@@ -54,6 +54,7 @@ import numpy as np
 from ..core.devices import AnyLink, Link, LinkTrace
 from ..core.scenarios import Scenario
 from . import transport as T
+from .sanitizer import maybe_sanitize, sanitize_enabled
 from .transport import (BATCH, CLOCK, ERROR, PROBE, RECONFIG, STATS, STOP,
                         WARMUP, Channel, HopMeter, HopSpec, TransferRecord,
                         TransportError, TransportTimeout, _Serializer,
@@ -263,12 +264,14 @@ class _ThreadEngine:
         r = pipe.replicas
         tr = get_transport("emulated", clock=pipe.clock)
         return [
-            tr.open_fan(HopSpec(index=i, link=link,
-                                framing=("pickle" if pipe.backends[i] == "rpc"
-                                         else "raw"),
-                                depth=pipe.queue_depth, seed=pipe.seed + i,
-                                codec=pipe.codecs[i]),
-                        max(r[i], r[i + 1]))
+            [maybe_sanitize(c) for c in
+             tr.open_fan(HopSpec(index=i, link=link,
+                                 framing=("pickle" if pipe.backends[i] == "rpc"
+                                          else "raw"),
+                                 depth=pipe.queue_depth, seed=pipe.seed + i,
+                                 codec=pipe.codecs[i],
+                                 sanitize=pipe.sanitize),
+                         max(r[i], r[i + 1]))]
             for i, link in enumerate(pipe.links)]
 
     @property
@@ -348,6 +351,10 @@ class _ThreadEngine:
     def session_open(self) -> None:
         pipe = self.pipe
         k, r = pipe.n_stages, pipe.replicas
+        for group in self.chan_groups:        # channels outlive sessions:
+            for chan in group:                # STOP is terminal per stream
+                if hasattr(chan, "reset_stream"):
+                    chan.reset_stream()
         self._feed_lanes = [_QueueChan() for _ in range(r[0])]
         self._out_lanes = [_QueueChan() for _ in range(r[k - 1])]
         self._err: queue.Queue = queue.Queue()
@@ -413,8 +420,17 @@ class _ThreadEngine:
                     egress.send(obj, kind=RECONFIG)
                 elif kind == PROBE:
                     egress.send(None, kind=PROBE)  # emulates 0 bytes per hop
-                else:                         # STATS / CLOCK: pass-through
+                elif kind in (STATS, CLOCK):  # pass-through tokens
                     egress.send(obj, kind=kind)
+                else:
+                    # ERROR never originates upstream of a thread stage
+                    # (errors ride self._err), so any other kind is a
+                    # protocol break — fail loudly instead of silently
+                    # forwarding (pipecheck R1)
+                    raise TransportError(
+                        f"stage {i}.{m}: unexpected "
+                        f"{T._KIND_NAMES[kind] if 0 <= kind < 8 else kind} "
+                        f"token in session stream")
             except BaseException as e:        # noqa: BLE001 — reported
                 failed = True
                 # in-process: ship the exception object itself, so the
@@ -550,15 +566,19 @@ class _ProcessEngine:
                 # every hop whose receiver is a worker loop may hand out
                 # transport-owned views; the result drain hands arrays
                 # back to user code, so it pays the one defensive copy
-                zero_copy=(j != k))
-            group = [c.split() for c in trs[chan_names[j]].open_fan(spec,
-                                                                    n_lanes)]
+                zero_copy=(j != k),
+                sanitize=pipe.sanitize)
+            group = [maybe_sanitize(c).split()
+                     for c in trs[chan_names[j]].open_fan(spec, n_lanes)]
             self._groups.append(group)
             self._pairs.extend(group)
         g0, gk = self._groups[0], self._groups[k]
-        self._feed = (T.FanOutChannel([p[0] for p in g0])
+        # the fan dispatch/merge is itself sanitized (when enabled): the
+        # merge-level wrapper is what catches a broadcast token returned
+        # once per lane instead of once per group
+        self._feed = (maybe_sanitize(T.FanOutChannel([p[0] for p in g0]))
                       if len(g0) > 1 else g0[0][0])
-        self._result = (T.FanInChannel([p[1] for p in gk])
+        self._result = (maybe_sanitize(T.FanInChannel([p[1] for p in gk]))
                         if len(gk) > 1 else gk[0][1])
 
         params_np = jax.tree.map(np.asarray, pipe.params)
@@ -574,10 +594,12 @@ class _ProcessEngine:
                 # replica m owns lane m through a replicated region; a
                 # solo stage facing a wider group merges in / fans out
                 ingress = (ing[m][1] if r[i] > 1
-                           else T.FanInChannel([p[1] for p in ing])
+                           else maybe_sanitize(
+                               T.FanInChannel([p[1] for p in ing]))
                            if len(ing) > 1 else ing[0][1])
                 egress = (egr[m][0] if r[i] > 1
-                          else T.FanOutChannel([p[0] for p in egr])
+                          else maybe_sanitize(
+                              T.FanOutChannel([p[0] for p in egr]))
                           if len(egr) > 1 else egr[0][0])
                 spec = {"stage": i, "n_stages": k, "model": pipe.model,
                         "params": params_np, "bounds": pipe.bounds(),
@@ -712,12 +734,22 @@ class _ProcessEngine:
 
     # ------------------------------------------------------------------ #
     def warmup(self, x):
-        self._feed.send(np.asarray(x), kind=WARMUP)
+        self._warm_x = np.asarray(x)          # exemplar for migrate's fence
+        self._feed.send(self._warm_x, kind=WARMUP)
         return self._await(WARMUP)
 
     def migrate(self) -> None:
         self._feed.send(self.pipe.reconfig_payload(), kind=RECONFIG)
         self._await(RECONFIG)
+        # the migration protocol's recompile fence: a WARMUP must reach
+        # every (re)built stage before the next BATCH, so the quiescent
+        # path replays the last warmup exemplar in-band — exactly what
+        # Session.migrate does for the in-flight path.  Without one the
+        # first post-migrate batch pays the jit compile inside its
+        # latency (and trips the sanitizer's warmup-skipped rule).
+        if getattr(self, "_warm_x", None) is not None:
+            self._feed.send(self._warm_x, kind=WARMUP)
+            self._await(WARMUP)
 
     def probe(self) -> None:
         self._feed.send(kind=PROBE)
@@ -803,7 +835,8 @@ class EdgePipeline:
                  queue_depth: int = 2, clock: Callable[[], float] | None = None,
                  seed: int = 0, timeout_s: float = 180.0,
                  replicas: Sequence[int] | None = None,
-                 stage_pace_s: "float | Sequence[float] | None" = None):
+                 stage_pace_s: "float | Sequence[float] | None" = None,
+                 sanitize: bool | None = None):
         if p is not None:
             cuts = p
         if link is not None:
@@ -917,6 +950,9 @@ class EdgePipeline:
         self.queue_depth = queue_depth
         self.timeout_s = timeout_s
         self.seed = seed
+        # protocol sanitizer (runtime.sanitizer): explicit arg wins,
+        # REPRO_SANITIZE=1 turns it on fleet-wide (e.g. for a CI tier)
+        self.sanitize = sanitize_enabled(sanitize)
         self._t0 = time.perf_counter()
         self.epoch = self._t0
         self.clock = clock or (lambda: time.perf_counter() - self._t0)

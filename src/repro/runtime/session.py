@@ -507,8 +507,15 @@ class Session:
             return
         if kind == STATS:
             self._engine.harvest()
-        if kind in self._expect:
+        if kind in self._expect:            # PROBE/RECONFIG/STATS/WARMUP/CLOCK
             self._expect[kind] = max(self._expect[kind] - 1, 0)
+            return
+        # every kind the session protocol can produce is handled above;
+        # anything else reaching the result drain is a wire-level bug,
+        # not something to silently swallow (pipecheck R1)
+        self._failed = True
+        raise TransportError(
+            f"session: unexpected token kind {kind!r} at the result drain")
 
     def _flush_failed(self) -> None:
         """Best-effort flush after a failure.  A session aborted by a
@@ -541,6 +548,11 @@ class Session:
                 self._expect[STATS] = max(self._expect[STATS] - 1, 0)
             elif kind in self._expect:
                 self._expect[kind] = max(self._expect[kind] - 1, 0)
+            else:
+                # unowned BATCH (pending already empty) or a stray
+                # ERROR/STOP: the flush is best-effort by contract, but
+                # the drop is explicit, not an accidental fall-through
+                pass
 
     # lifecycle --------------------------------------------------------- #
     def close(self) -> None:

@@ -138,11 +138,26 @@ class HopSpec:
     # so receiver-measured records carry the modeled WAN cost on top of
     # true loopback/serialization cost — the duress-WAN study path
     pace_link: AnyLink | None = None
+    # wrap the opened channel in runtime.sanitizer.SanitizedChannel: the
+    # live protocol state machine (WARMUP-after-RECONFIG, STOP terminal,
+    # token dedup through fan-in, lease canaries) is checked per message
+    # and violations raise SanitizerError.  Engines set this from
+    # EdgePipeline(sanitize=...) / the REPRO_SANITIZE env var.
+    sanitize: bool = False
 
 
 # --------------------------------------------------------------------------- #
 # Wire framing
 # --------------------------------------------------------------------------- #
+# Wire-layout version: bump when _FHDR/_RREC change shape, and record
+# the new format strings in repro.analysis.manifest.WIRE_LAYOUTS —
+# tools/pipecheck.py (rule R5) fails the tree otherwise.  The version is
+# deliberately *not* framed per message: both ends of a hop come from
+# one checkout, the constant exists so layout edits are conscious.
+WIRE_LAYOUT_VERSION = 1
+
+
+
 class _Serializer:
     """RPC-style full serialize/deserialize round trip."""
 
@@ -1498,6 +1513,12 @@ def _sink_main(spec: dict) -> None:
                 ctrl.send([tuple(r) for r in chan.drain_records()])
             elif kind in (BATCH, WARMUP):
                 ctrl.send(0)                  # credit back to the sender
+            else:
+                # PROBE/RECONFIG/CLOCK/ERROR are not part of the
+                # microbench protocol; a stray one means the driver and
+                # sink disagree about the wire — fail loudly (R1)
+                raise TransportError(
+                    f"sink: unexpected {_KIND_NAMES[kind]} token")
     finally:
         chan.close()
         ctrl.close()
@@ -1508,7 +1529,8 @@ def measure_hop(transport: str, sizes: Sequence[int], n_per_size: int = 20,
                 framing: str = "raw", timeout_s: float = 60.0,
                 spin_us: float = 500.0, codec: str = "none",
                 pace_link: AnyLink | None = None,
-                full: bool = False, bell: str = "auto") -> dict[int, list]:
+                full: bool = False, bell: str = "auto",
+                sanitize: bool | None = None) -> dict[int, list]:
     """Stream float32 payloads of each size in ``sizes`` over one real
     hop to a spawned sink process → {nbytes: receiver-measured elapsed
     seconds per transfer}.  The sink credits each message back over a
@@ -1524,6 +1546,7 @@ def measure_hop(transport: str, sizes: Sequence[int], n_per_size: int = 20,
         # size before timing starts, or the timed window carries
         # hundreds of µs of page faults per cold slot
         warmup = depth + 3
+    from .sanitizer import maybe_sanitize, sanitize_enabled
     ctx = mp.get_context("spawn")
     chan = get_transport(transport).open(
         HopSpec(index=0, framing=framing, depth=depth,
@@ -1532,8 +1555,8 @@ def measure_hop(transport: str, sizes: Sequence[int], n_per_size: int = 20,
                 # it, or the per-hop number degenerates into a
                 # scheduler-wakeup benchmark (bimodal under load)
                 spin_us=spin_us, codec=codec, pace_link=pace_link,
-                bell=bell))
-    tx, rx = chan.split()
+                bell=bell, sanitize=sanitize_enabled(sanitize)))
+    tx, rx = maybe_sanitize(chan).split()
     parent_c, child_c = ctx.Pipe()
     proc = ctx.Process(target=_sink_main, args=({"chan": rx, "ctrl": child_c},),
                        daemon=True, name=f"hop-sink-{transport}")
@@ -1593,9 +1616,11 @@ def record_trace(source, *, name: str = "recorded", bucket_s: float = 0.5,
     ``source`` is a Channel/HopObservations (drained) or an iterable of
     ``(nbytes, elapsed_s, t_s)`` records.
     """
-    if isinstance(source, HopObservations):
+    # duck-typed: a SanitizedChannel wrapper delegates drain_records()
+    # and link without subclassing HopObservations
+    if isinstance(source, HopObservations) or hasattr(source, "drain_records"):
         records = source.drain_records()
-        if fallback is None and isinstance(source.link, Link):
+        if fallback is None and isinstance(getattr(source, "link", None), Link):
             fallback = source.link
     else:
         records = [TransferRecord(*r) for r in source]

@@ -1,0 +1,40 @@
+"""R1 fixture (clean): the same dispatch shape made compliant three
+ways — an else that raises, full 8-kind coverage, and a trailing
+default statement."""
+BATCH, WARMUP, PROBE, RECONFIG, STATS, STOP, ERROR, CLOCK = range(8)
+
+_TOKENS = (PROBE, RECONFIG, STATS, WARMUP, CLOCK)
+
+
+def pump_with_else(chan):
+    while True:
+        kind, obj = chan.recv()
+        if kind == STOP:
+            break
+        elif kind == BATCH:
+            chan.send(obj, kind=BATCH)
+        else:
+            raise RuntimeError(f"unexpected kind {kind}")
+
+
+def pump_covering_all(chan):
+    while True:
+        kind, obj = chan.recv()
+        if kind == STOP:
+            break
+        elif kind in (BATCH, WARMUP):
+            chan.send(obj, kind=kind)
+        elif kind in _TOKENS:
+            chan.send(obj, kind=kind)
+        elif kind == ERROR:
+            raise RuntimeError(str(obj))
+
+
+def pump_with_trailing_default(chan):
+    while True:
+        kind, obj = chan.recv()
+        if kind == STOP:
+            break
+        if kind == BATCH:
+            chan.send(obj, kind=BATCH)
+        chan.ack(kind)                        # every other kind lands here

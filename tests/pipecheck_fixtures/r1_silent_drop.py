@@ -1,0 +1,15 @@
+"""R1 fixture: a worker loop that dispatches on token kinds but
+silently drops everything it does not name (no else, no coverage of
+all 8 kinds, nothing after the ladder)."""
+BATCH, WARMUP, PROBE, RECONFIG, STATS, STOP, ERROR, CLOCK = range(8)
+
+
+def pump(chan):
+    while True:
+        kind, obj = chan.recv()
+        if kind == STOP:
+            break
+        elif kind == BATCH:
+            chan.send(obj, kind=BATCH)
+        elif kind == PROBE:
+            chan.send(None, kind=PROBE)

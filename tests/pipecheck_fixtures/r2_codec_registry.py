@@ -1,0 +1,87 @@
+"""R2 fixture: a codec registry that breaks the append-only contract
+three ways — a wire-code collision, a lossy codec inheriting the
+identity byte model, and a packed op with no kernels/ref.py oracle.
+Checked under the path ``src/repro/core/codecs.py``."""
+
+
+class Codec:
+    name: str = "none"
+    code: int = 0
+
+    def wire_bytes(self, n_elems, itemsize=4):
+        return n_elems * itemsize
+
+    def encode(self, host):
+        return host.tobytes()
+
+    def decode(self, buf, shape, dtype):
+        return buf
+
+
+class Int8Codec(Codec):
+    name = "int8"
+    code = 1
+
+    def wire_bytes(self, n_elems, itemsize=4):
+        return n_elems + 4
+
+    def encode(self, host):
+        return ops.int8_pack(host)
+
+    def decode(self, buf, shape, dtype):
+        return ops.int8_unpack(buf, shape, dtype)
+
+
+class Fp8Codec(Codec):
+    name = "fp8"
+    code = 2
+
+    def wire_bytes(self, n_elems, itemsize=4):
+        return n_elems
+
+    def encode(self, host):
+        return ops.fp8_pack(host)
+
+    def decode(self, buf, shape, dtype):
+        return ops.fp8_unpack(buf, shape, dtype)
+
+
+class TopKCodec(Codec):
+    name = "topk"
+    code = 3
+
+    def wire_bytes(self, n_elems, itemsize=4):
+        return n_elems // 10
+
+    def encode(self, host):
+        return ops.topk_select(host)
+
+    def decode(self, buf, shape, dtype):
+        return buf
+
+
+class WaveletCodec(Codec):
+    """Collides with topk's wire code."""
+
+    name = "wavelet"
+    code = 3
+
+    def wire_bytes(self, n_elems, itemsize=4):
+        return n_elems // 2
+
+    def encode(self, host):
+        return host
+
+    def decode(self, buf, shape, dtype):
+        return buf
+
+
+class GzipCodec(Codec):
+    """Unregistered wire code, inherits the identity encode/decode, and
+    calls a packed op with no kernels/ref.py oracle."""
+
+    name = "gzip"
+    code = 9
+
+    def wire_bytes(self, n_elems, itemsize=4):
+        return ops.gzip_pack(n_elems)

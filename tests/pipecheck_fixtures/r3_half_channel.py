@@ -1,0 +1,28 @@
+"""R3 fixture: a concrete Channel subclass missing half the surface
+(recv stays abstract, reap/set_codec never defined anywhere), plus a
+record() call that forgets raw_bytes.  Checked under a
+``src/repro/runtime/`` path."""
+from abc import ABC, abstractmethod
+
+
+class Channel(ABC):
+    @abstractmethod
+    def send(self, payload=None, kind=0):
+        ...
+
+    @abstractmethod
+    def recv(self, timeout=None):
+        ...
+
+    def close(self):
+        pass
+
+    def split(self):
+        return self, self
+
+
+class HalfChannel(Channel):
+    def send(self, payload=None, kind=0):
+        nbytes = 128
+        self.record(nbytes, 0.001, 0.0)       # no raw_bytes: R3
+        return None

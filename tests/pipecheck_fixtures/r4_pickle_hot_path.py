@@ -1,0 +1,17 @@
+"""R4 fixture: pickle on a runtime hot path outside the declared
+escape hatches.  Checked under a ``src/repro/runtime/`` path."""
+import pickle
+
+
+def frame_fast(payload):
+    return pickle.dumps(payload)              # hot path: R4
+
+
+class _Serializer:
+    """Same qualname as the real escape hatch, but in the wrong file —
+    the allowlist is (path, qualname) pairs, so this still fires when
+    the fixture is checked under a non-transport.py path."""
+
+    @staticmethod
+    def dumps(x):
+        return pickle.dumps(x)

@@ -1,0 +1,9 @@
+"""R5 fixture: the _FHDR frame header grew a field (8q -> 9q) without a
+WIRE_LAYOUT_VERSION bump.  Checked under the path
+``src/repro/runtime/transport.py``."""
+import struct
+
+WIRE_LAYOUT_VERSION = 1
+
+_FHDR = struct.Struct("!BBbBB I d Q 9q")      # drifted from the manifest
+_RREC = struct.Struct("<BBbBB i I I d Q 8q")

@@ -1,0 +1,191 @@
+"""PipeCheck static pass (tools/pipecheck.py, repro.analysis): the real
+tree is clean, every rule (R1-R5) fires on its fixture, and the CLI
+emits clickable ``file:line: RULE`` lines with a failing exit status.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import run_checks, scan_tree
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).parent / "pipecheck_fixtures"
+
+
+def _fx(name: str) -> str:
+    return (FIXTURES / name).read_text()
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# --------------------------------------------------------------------------- #
+# the real tree
+# --------------------------------------------------------------------------- #
+def test_real_tree_is_clean():
+    findings = scan_tree(REPO)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+# --------------------------------------------------------------------------- #
+# R1 — exhaustive token dispatch
+# --------------------------------------------------------------------------- #
+def test_r1_fires_on_silent_token_drop():
+    findings = run_checks(
+        {"src/repro/runtime/badloop.py": _fx("r1_silent_drop.py")})
+    assert _rules(findings) == {"R1"}
+    (f,) = findings
+    assert f.path == "src/repro/runtime/badloop.py" and f.line > 0
+    assert "WARMUP" in f.message and "RECONFIG" in f.message  # the dropped kinds
+
+
+def test_r1_accepts_explicit_defaults_and_full_coverage():
+    findings = run_checks(
+        {"src/repro/runtime/okloop.py": _fx("r1_explicit_default.py")})
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_r1_applies_everywhere_not_just_runtime():
+    findings = run_checks({"src/repro/core/x.py": _fx("r1_silent_drop.py")})
+    assert _rules(findings) == {"R1"}
+
+
+# --------------------------------------------------------------------------- #
+# R2 — codec registry
+# --------------------------------------------------------------------------- #
+def test_r2_fires_on_registry_violations():
+    findings = run_checks({
+        "src/repro/core/codecs.py": _fx("r2_codec_registry.py"),
+        "src/repro/kernels/ref.py": _fx("r2_ref_stub.py"),
+    })
+    msgs = [f.message for f in findings]
+    assert all(f.rule == "R2" for f in findings)
+    assert any("collides" in m for m in msgs)                 # code 3 reused
+    assert any("not recorded in" in m for m in msgs)          # code 9 unpinned
+    assert any("inherits `encode`" in m for m in msgs)        # identity model
+    assert any("gzip_pack" in m and "oracle" in m for m in msgs)
+
+
+def test_r2_fires_on_renamed_wire_code():
+    src = _fx("r2_codec_registry.py").replace(
+        'name = "int8"', 'name = "i8"')
+    findings = run_checks({
+        "src/repro/core/codecs.py": src,
+        "src/repro/kernels/ref.py": _fx("r2_ref_stub.py"),
+    })
+    assert any("pinned to codec 'int8'" in f.message for f in findings)
+
+
+def test_r2_real_registry_matches_manifest():
+    # the actual codecs.py against the actual ref.py, in isolation
+    findings = run_checks({
+        "src/repro/core/codecs.py":
+            (REPO / "src/repro/core/codecs.py").read_text(),
+        "src/repro/kernels/ref.py":
+            (REPO / "src/repro/kernels/ref.py").read_text(),
+    }, rules=("R2",))
+    assert findings == [], [f.render() for f in findings]
+
+
+# --------------------------------------------------------------------------- #
+# R3 — Channel surface + record() accounting
+# --------------------------------------------------------------------------- #
+def test_r3_fires_on_partial_channel_and_bare_record():
+    findings = run_checks(
+        {"src/repro/runtime/halfchan.py": _fx("r3_half_channel.py")})
+    assert all(f.rule == "R3" for f in findings)
+    missing = {m for f in findings for m in ("recv", "reap", "set_codec")
+               if f"`{m}`" in f.message}
+    assert missing == {"recv", "reap", "set_codec"}
+    assert any("raw_bytes" in f.message for f in findings)
+
+
+def test_r3_record_lint_is_runtime_scoped():
+    # the same source outside runtime/ carries no record() obligations
+    findings = run_checks(
+        {"src/repro/core/halfchan.py": _fx("r3_half_channel.py")})
+    assert not any("raw_bytes" in f.message for f in findings)
+
+
+# --------------------------------------------------------------------------- #
+# R4 — pickle escape hatches
+# --------------------------------------------------------------------------- #
+def test_r4_fires_on_hot_path_pickle():
+    findings = run_checks(
+        {"src/repro/runtime/fastpath.py": _fx("r4_pickle_hot_path.py")})
+    assert _rules(findings) == {"R4"}
+    assert len(findings) == 2                 # module fn + wrong-file class
+    assert any("frame_fast" in f.message for f in findings)
+
+
+def test_r4_allows_the_declared_hatches_and_non_runtime_code():
+    # same source, non-runtime path: out of R4 scope entirely
+    assert run_checks(
+        {"src/repro/tools_helper.py": _fx("r4_pickle_hot_path.py")}) == []
+    # the real transport.py keeps its declared hatches without findings
+    findings = run_checks(
+        {"src/repro/runtime/transport.py":
+            (REPO / "src/repro/runtime/transport.py").read_text()},
+        rules=("R4",))
+    assert findings == [], [f.render() for f in findings]
+
+
+# --------------------------------------------------------------------------- #
+# R5 — struct layout version
+# --------------------------------------------------------------------------- #
+def test_r5_fires_on_layout_drift():
+    findings = run_checks(
+        {"src/repro/runtime/transport.py": _fx("r5_layout_drift.py")})
+    assert _rules(findings) == {"R5"}
+    (f,) = findings
+    assert "_FHDR" in f.message and "bump" in f.message.lower()
+
+
+def test_r5_fires_on_missing_version():
+    src = _fx("r5_layout_drift.py").replace("WIRE_LAYOUT_VERSION = 1", "")
+    findings = run_checks({"src/repro/runtime/transport.py": src})
+    assert any("no WIRE_LAYOUT_VERSION" in f.message for f in findings)
+
+
+def test_r5_fires_on_unknown_version():
+    src = _fx("r5_layout_drift.py").replace(
+        "WIRE_LAYOUT_VERSION = 1", "WIRE_LAYOUT_VERSION = 99")
+    findings = run_checks({"src/repro/runtime/transport.py": src})
+    assert any("no entry" in f.message for f in findings)
+
+
+# --------------------------------------------------------------------------- #
+# the CLI
+# --------------------------------------------------------------------------- #
+def test_cli_clean_tree_exits_zero():
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "pipecheck.py")],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "clean" in out.stdout
+
+
+def test_cli_fix_report_emits_clickable_lines(tmp_path):
+    bad = tmp_path / "src" / "repro" / "runtime"
+    bad.mkdir(parents=True)
+    (bad / "badloop.py").write_text(_fx("r1_silent_drop.py"))
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "pipecheck.py"),
+         "--root", str(tmp_path), "--fix-report"],
+        capture_output=True, text=True)
+    assert out.returncode == 1
+    line = out.stdout.strip().splitlines()[0]
+    # file:line: RULE message — clickable in editors and CI logs
+    path, lineno, rest = line.split(":", 2)
+    assert path == "src/repro/runtime/badloop.py"
+    assert lineno.isdigit()
+    assert rest.strip().startswith("R1")
+
+
+def test_cli_rejects_unknown_rules():
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "pipecheck.py"),
+         "--rules", "R9"],
+        capture_output=True, text=True)
+    assert out.returncode == 2

@@ -421,10 +421,13 @@ def test_process_replica_matrix(tiny, r1_reference, transport, r):
     results, bit-equal to the r=1 reference — both policies share one
     pipeline standup to keep the matrix affordable."""
     from repro.runtime.edge import EdgePipeline
+    from repro.runtime.sanitizer import drain_violations
     m, params = tiny
     xs, refs = r1_reference
+    drain_violations()                        # shed any stale reports
     with EdgePipeline(m, params, (2, 3), [LAN_PI_GPU, LAN_PI_GPU],
-                      transport=transport, replicas=(1, r, 1)) as pipe:
+                      transport=transport, replicas=(1, r, 1),
+                      sanitize=True) as pipe:
         pipe.warmup(xs[0])
         for policy in ("drain", "drop"):
             with pipe.session(inflight=4, policy=policy) as s:
@@ -440,14 +443,19 @@ def test_process_replica_matrix(tiny, r1_reference, transport, r):
                 assert np.allclose(ref, np.asarray(y), atol=1e-5), \
                     f"batch {i} wrong under {transport}/r={r}/{policy}"
             pipe.migrate((2, 3))              # restore for the next policy
+    bad = drain_violations()
+    assert bad == [], "\n".join(v.render() for v in bad)
 
 
 def _replica_matrix_case(tiny, r1_reference, transport, r, policy):
     from repro.runtime.edge import EdgePipeline
+    from repro.runtime.sanitizer import drain_violations
     m, params = tiny
     xs, refs = r1_reference
+    drain_violations()                        # shed any stale reports
     with EdgePipeline(m, params, (2, 3), [LAN_PI_GPU, LAN_PI_GPU],
-                      transport=transport, replicas=(1, r, 1)) as pipe:
+                      transport=transport, replicas=(1, r, 1),
+                      sanitize=True) as pipe:
         pipe.warmup(xs[0])
         with pipe.session(inflight=4, policy=policy) as s:
             for x in xs[:4]:
@@ -460,6 +468,8 @@ def _replica_matrix_case(tiny, r1_reference, transport, r, policy):
     for i, (ref, y) in enumerate(zip(refs, got)):
         assert np.allclose(ref, np.asarray(y), atol=1e-5), \
             f"batch {i} wrong under {transport}/r={r}/{policy}"
+    bad = drain_violations()
+    assert bad == [], "\n".join(v.render() for v in bad)
 
 
 def test_replicated_pipeline_is_bit_equal_without_migration(tiny,

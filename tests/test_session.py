@@ -134,12 +134,16 @@ def test_migration_mid_stream_loses_nothing(tiny, transport, policy):
     """The acceptance matrix: migrate() firing with batches in flight
     must lose, duplicate, and reorder nothing, on modeled threads and
     real worker processes alike, under both the flush-first and the
-    in-band-token policy."""
+    in-band-token policy.  The whole matrix runs with the protocol
+    sanitizer armed — a violation here means the runtime broke the
+    token contract even if the outputs happen to come back right."""
+    from repro.runtime import drain_violations
     m, params = tiny
     xs = _batches(10)
     refs = [np.asarray(m.apply(params, x)) for x in xs]
+    drain_violations()                        # shed any stale reports
     with EdgePipeline(m, params, 2, [LAN_PI_GPU],
-                      transport=transport) as pipe:
+                      transport=transport, sanitize=True) as pipe:
         pipe.warmup(xs[0])
         with pipe.session(inflight=4, policy=policy) as s:
             for x in xs[:4]:
@@ -154,6 +158,8 @@ def test_migration_mid_stream_loses_nothing(tiny, transport, policy):
     for i, (ref, y) in enumerate(zip(refs, got)):
         assert np.allclose(ref, y, atol=1e-5), \
             f"batch {i} wrong under {transport}/{policy} (reordered?)"
+    bad = drain_violations()
+    assert bad == [], "\n".join(v.render() for v in bad)
 
 
 @pytest.mark.parametrize("transport", ["socket", "shmem"])

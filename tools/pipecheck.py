@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""PipeCheck CLI — static protocol invariants over src/.
+
+Usage:
+    python tools/pipecheck.py                 # grouped human report
+    python tools/pipecheck.py --fix-report    # file:line: RULE ... lines
+    python tools/pipecheck.py --rules R1,R4   # subset of rules
+    python tools/pipecheck.py --root PATH     # check another checkout
+
+Exit status is 1 when any finding is reported, 0 on a clean tree.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_REPO / "src"))
+
+from repro.analysis.pipecheck import RULE_DOCS, RULES, scan_tree  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=str(_REPO),
+                    help="repo root to check (default: this checkout)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated subset of rules, e.g. R1,R4")
+    ap.add_argument("--fix-report", action="store_true",
+                    help="emit one clickable `file:line: RULE message` "
+                         "line per finding")
+    args = ap.parse_args(argv)
+
+    rules = None
+    if args.rules:
+        rules = tuple(r.strip().upper() for r in args.rules.split(",") if r)
+        unknown = sorted(set(rules) - set(RULES))
+        if unknown:
+            ap.error(f"unknown rules {unknown}; known: {', '.join(RULES)}")
+
+    t0 = time.perf_counter()
+    findings = scan_tree(args.root, rules)
+    dt_ms = (time.perf_counter() - t0) * 1e3
+
+    if args.fix_report:
+        for f in findings:
+            print(f.render())
+    else:
+        if not findings:
+            checked = ", ".join(rules or RULES)
+            print(f"pipecheck: clean ({checked}) in {dt_ms:.0f} ms")
+        for rule in sorted({f.rule for f in findings}):
+            doc = RULE_DOCS.get(rule, "")
+            group = [f for f in findings if f.rule == rule]
+            print(f"\n{rule} — {doc}  [{len(group)} finding(s)]")
+            for f in group:
+                print(f"  {f.path}:{f.line}: {f.message}")
+        if findings:
+            print(f"\npipecheck: {len(findings)} finding(s) in {dt_ms:.0f} ms")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
