@@ -44,19 +44,30 @@
 #                          invariants: r=2 holds >= 1.5x over r=1 and
 #                          r=3 does not regress vs r=2, on both
 #                          transports (the make-fast gate)
+#   make bench-fault     — fault-tolerance drills: worker-kill restart
+#                          (detection / restart / replay timings, parity)
+#                          per transport + r=2 lane failover at degraded
+#                          capacity (writes BENCH_fault.json, < 90 s)
+#   make bench-fault-check
+#                        — fresh smoke run gated on recovery health:
+#                          detection < 3 s, restart+replay < 30 s, exact
+#                          parity, failover capacity 0.5 (the make-fast
+#                          gate)
+#   make test-faults     — the fault matrix alone ({socket,shmem} x
+#                          {drain,drop} x fault kinds, sanitized)
 #   make demo            — k-stage adaptive loop demo under a WAN ramp
 
 PY      ?= python
 PYTEST  ?= $(PY) -m pytest
 ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check fast test test-fast bench bench-quick bench-smoke \
+.PHONY: check fast test test-fast test-faults bench bench-quick bench-smoke \
         bench-transport bench-transport-check bench-stream \
         bench-stream-check bench-codec bench-codec-check bench-replica \
-        bench-replica-check demo
+        bench-replica-check bench-fault bench-fault-check demo
 
 fast: check test-fast bench-smoke bench-transport-check bench-stream-check \
-      bench-codec-check bench-replica-check
+      bench-codec-check bench-replica-check bench-fault-check
 
 # Static gates (<30 s). PipeCheck is self-contained (stdlib ast only)
 # and always runs; ruff/mypy are dev extras — skipped with a notice
@@ -75,6 +86,9 @@ test:
 
 test-fast:
 	$(ENV) $(PYTEST) -q -m "not slow"
+
+test-faults:
+	$(ENV) REPRO_SANITIZE=1 $(PYTEST) -q tests/test_faults.py
 
 bench:
 	$(ENV) $(PY) -m benchmarks.run
@@ -108,6 +122,12 @@ bench-replica:
 
 bench-replica-check:
 	$(ENV) $(PY) -m benchmarks.replica_bench --check
+
+bench-fault:
+	$(ENV) $(PY) -m benchmarks.fault_bench --smoke
+
+bench-fault-check:
+	$(ENV) $(PY) -m benchmarks.fault_bench --check
 
 demo:
 	$(ENV) $(PY) examples/kway_adaptive.py

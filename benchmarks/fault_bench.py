@@ -1,0 +1,230 @@
+"""Fault-tolerance drills: detection latency, restart+replay cost,
+degraded-capacity failover, and post-recovery parity.
+
+The study behind ``BENCH_fault.json``: a supervised 2-stage pipeline
+streams batches while a scripted :class:`FaultPlan` SIGKILLs a worker
+mid-stream.  Two drills:
+
+* ``restart`` (per transport) — the killed stage has no spare replica:
+  the supervisor tears the stage down, respawns it, replays the WARMUP
+  fence and the Session's unacked in-flight window.  Reported: failure
+  detection latency, restart time, replay time, batches replayed, and
+  bit-parity of the recovered stream against single-process references.
+* ``failover`` (shmem) — the killed worker is one lane of an r=2
+  replicated stage: the pipeline sheds the lane and continues degraded
+  at r-1 (capacity fraction 0.5) until the background restaff returns
+  it to full strength.  Reported: the degraded capacity fraction and
+  the whole-run throughput fraction vs an undisturbed run.
+
+    PYTHONPATH=src python -m benchmarks.fault_bench [--smoke] [--check]
+
+``--smoke`` shrinks the stream (< 90 s, the Makefile ``bench-fault``
+target) and still writes the JSON.  ``--check`` runs a fresh smoke
+measurement and gates recovery-health invariants — detection under
+``CHECK_MAX_DETECT_S``, restart+replay under ``CHECK_MAX_RECOVER_S``,
+exact parity, and the r=2 failover running the degraded window at
+exactly half capacity — the ``make bench-fault-check`` / ``make fast``
+regression gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+BENCH_JSON = Path("BENCH_fault.json")
+
+TRANSPORTS = ("socket", "shmem")
+
+# --check gates: generous under ambient load, tight enough that a
+# supervisor that polls lazily (detection) or re-warms from scratch
+# per batch (replay) fails loudly
+CHECK_MAX_DETECT_S = 3.0
+CHECK_MAX_RECOVER_S = 30.0           # restart (respawn + jit + fence) + replay
+CHECK_FAILOVER_CAPACITY = 0.5        # r=2 minus one lane
+
+
+def _tiny_model():
+    from repro.models.cnn.layers import (Conv2D, Flatten, Linear, Pool,
+                                         ReLU, Sequential)
+    from repro.models.cnn.zoo import CNNModel
+    blocks = [
+        ("conv0", Sequential([Conv2D(3, 8, 3, 1, 1), ReLU()])),
+        ("conv1", Sequential([Conv2D(8, 8, 3, 1, 1), ReLU()])),
+        ("pool", Pool("max", 2, 2)),
+        ("conv2", Sequential([Conv2D(8, 16, 3, 1, 1), ReLU()])),
+        ("head", Sequential([Flatten(), Linear(16 * 16 * 16, 10)])),
+    ]
+    return CNNModel("tinycnn", blocks, input_hw=32)
+
+
+def _stream(model, params, xs, transport, plan=None, replicas=None):
+    """Run the stream; return (outputs, elapsed_s, recovery records)."""
+    import numpy as np
+
+    from repro.core.devices import LAN_PI_GPU
+    from repro.runtime.edge import EdgePipeline
+    from repro.runtime.faults import drain_recoveries
+
+    drain_recoveries()
+    pipe = EdgePipeline(model, params, 2, [LAN_PI_GPU], transport=transport,
+                        replicas=replicas, fault_plan=plan,
+                        supervise=True, stall_timeout_s=2.0, timeout_s=120)
+    with pipe:
+        pipe.warmup(xs[0])
+        with pipe.session() as s:
+            t0 = time.perf_counter()
+            for x in xs:
+                s.submit(x)
+            outs = s.drain()
+            elapsed = time.perf_counter() - t0
+    return ([np.asarray(y) for y in outs], float(elapsed),
+            drain_recoveries())
+
+
+def _parity(outs, refs) -> bool:
+    import numpy as np
+    return (len(outs) == len(refs)
+            and all(np.allclose(r, y, atol=1e-5)
+                    for r, y in zip(refs, outs)))
+
+
+def _measure(smoke: bool) -> tuple[list[str], dict]:
+    import jax
+    import numpy as np
+
+    from repro.runtime.faults import FaultPlan
+
+    model = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    n = 8 if smoke else 24
+    xs = [np.asarray(jax.random.normal(jax.random.PRNGKey(100 + i),
+                                       (2, 32, 32, 3))) for i in range(n)]
+    refs = [np.asarray(model.apply(params, x)) for x in xs]
+    kill_at = min(3, n - 1)
+
+    rows: list[str] = []
+    results: dict = {"model": model.name, "batch": 2, "n_batches": n,
+                     "kill_at_seq": kill_at, "restart": {}, "failover": {}}
+
+    print(f"== recovery drills ({n} batches, kill at seq {kill_at}) ==")
+    for transport in TRANSPORTS:
+        plan = FaultPlan().kill_worker(stage=1, at_seq=kill_at)
+        outs, elapsed, recs = _stream(model, params, xs, transport,
+                                      plan=plan)
+        rec = next((r for r in recs if r.kind == "restart"), None)
+        assert rec is not None, f"{transport}: no restart recovery recorded"
+        m = {
+            "transport": transport,
+            "detect_s": rec.detect_s,
+            "restart_s": rec.restart_s,
+            "replay_s": rec.replay_s,
+            "recover_s": rec.restart_s + rec.replay_s,
+            "batches_replayed": rec.batches_replayed,
+            "parity": _parity(outs, refs),
+            "elapsed_s": elapsed,
+        }
+        results["restart"][transport] = m
+        print(f"  restart/{transport:>6}: detect {m['detect_s'] * 1e3:6.0f} ms, "
+              f"restart {m['restart_s'] * 1e3:6.0f} ms, "
+              f"replay {m['replay_s'] * 1e3:6.0f} ms "
+              f"({m['batches_replayed']} batches), parity={m['parity']}")
+        rows.append(f"fault/restart_{transport},{m['recover_s']:.3f},"
+                    f"detect_s={m['detect_s']:.3f}")
+
+    # failover drill: one lane of an r=2 stage dies; the run continues
+    # degraded and restaffs in the background
+    baseline_outs, baseline_s, _ = _stream(model, params, xs, "shmem",
+                                           replicas=(1, 2))
+    plan = FaultPlan().kill_worker(stage=1, at_seq=kill_at, lane=1)
+    outs, elapsed, recs = _stream(model, params, xs, "shmem", plan=plan,
+                                  replicas=(1, 2))
+    fo = next((r for r in recs if r.kind == "failover"), None)
+    m = {
+        "transport": "shmem",
+        "replicas": [1, 2],
+        "recovered": fo is not None,
+        "degraded_capacity": fo.degraded_capacity if fo else None,
+        "detect_s": fo.detect_s if fo else None,
+        "restaffed": any(r.kind == "restaff" for r in recs),
+        "parity": _parity(outs, baseline_outs) and _parity(outs, refs),
+        "throughput_fraction": baseline_s / elapsed if elapsed else 0.0,
+        "elapsed_s": elapsed,
+        "baseline_s": baseline_s,
+    }
+    results["failover"]["shmem"] = m
+    print(f"  failover/shmem: capacity {m['degraded_capacity']}, "
+          f"restaffed={m['restaffed']}, parity={m['parity']}, "
+          f"throughput fraction {m['throughput_fraction']:.2f}")
+    rows.append(f"fault/failover_shmem,{m['throughput_fraction']:.3f},"
+                f"capacity={m['degraded_capacity']}")
+    return rows, results
+
+
+def run(smoke: bool = False, out_path: Path = BENCH_JSON) -> list[str]:
+    rows, results = _measure(smoke)
+    out_path.write_text(json.dumps(results, indent=1))
+    print(f"[wrote {out_path}]")
+    return rows
+
+
+def check() -> int:
+    """Fresh smoke run gated on recovery-health invariants.  Retries:
+    one unlucky scheduling window is not a regression."""
+    for attempt in (1, 2, 3):
+        _, fresh = _measure(smoke=True)
+        bad: list[str] = []
+        for transport, m in fresh["restart"].items():
+            if not m["parity"]:
+                bad.append(f"restart/{transport}: recovered stream is not "
+                           "bit-identical to the references")
+            if m["detect_s"] > CHECK_MAX_DETECT_S:
+                bad.append(f"restart/{transport}: detection took "
+                           f"{m['detect_s']:.2f}s > {CHECK_MAX_DETECT_S}s")
+            if m["recover_s"] > CHECK_MAX_RECOVER_S:
+                bad.append(f"restart/{transport}: restart+replay took "
+                           f"{m['recover_s']:.2f}s > {CHECK_MAX_RECOVER_S}s")
+            if m["batches_replayed"] < 1:
+                bad.append(f"restart/{transport}: no in-flight batches "
+                           "replayed — the resubmit buffer is dead")
+        fo = fresh["failover"]["shmem"]
+        if not fo["recovered"]:
+            bad.append("failover/shmem: lane death did not take the "
+                       "failover path")
+        elif fo["degraded_capacity"] != CHECK_FAILOVER_CAPACITY:
+            bad.append(f"failover/shmem: degraded capacity "
+                       f"{fo['degraded_capacity']} != "
+                       f"{CHECK_FAILOVER_CAPACITY}")
+        if not fo["parity"]:
+            bad.append("failover/shmem: degraded stream lost exactness")
+        if not bad:
+            print("[check] OK — recovery is prompt, bounded, and exact")
+            return 0
+        print(f"[check] attempt {attempt}: {len(bad)} problem(s)")
+        for b in bad:
+            print(f"    {b}")
+    print("[check] FAIL — fault recovery regressed")
+    return 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small run (< 90 s) that still writes "
+                         "BENCH_fault.json")
+    ap.add_argument("--check", action="store_true",
+                    help="fresh smoke run gated on detection/recovery "
+                         "bounds and parity (no overwrite)")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check())
+    rows = run(smoke=args.smoke)
+    print("\nname,value,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

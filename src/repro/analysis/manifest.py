@@ -29,11 +29,18 @@ CODEC_WIRE_CODES: dict[int, str] = {
 # Struct layouts per WIRE_LAYOUT_VERSION, whitespace-normalised.  An
 # edit to _FHDR/_RREC in runtime/transport.py must bump
 # WIRE_LAYOUT_VERSION there and append the new shapes here (R5).
-WIRE_LAYOUT_VERSION: int = 1
+WIRE_LAYOUT_VERSION: int = 2
 WIRE_LAYOUTS: dict[int, dict[str, str]] = {
     1: {
         "_FHDR": "!BBbBBIdQ8q",
         "_RREC": "<BBbBBiIIdQ8q",
+    },
+    # v2: a per-frame wire sequence number (Q) after the payload length,
+    # stamped by every sender so receivers can drop already-delivered
+    # BATCH frames (chaos duplicates, recovery replays)
+    2: {
+        "_FHDR": "!BBbBBIdQQ8q",
+        "_RREC": "<BBbBBiIIdQQ8q",
     },
 }
 

@@ -22,6 +22,12 @@ catch dynamically:
   R5  ``_FHDR``/``_RREC`` struct layouts match the manifest entry for
       the declared ``WIRE_LAYOUT_VERSION`` — field edits must bump the
       version and append the new shape to the manifest.
+  R6  every blocking channel op in ``runtime/`` is timeout-guarded: a
+      bare ``recv()`` (no timeout argument) needs a ``poll(...)``
+      liveness loop on the same object in the same function, and any
+      raw socket ``sendmsg``/``sendall`` needs a ``settimeout``/
+      ``setblocking`` in the same function — an unguarded blocking op
+      is where a dead peer hangs the pipeline forever.
 
 The pass runs over a ``{relative path: source}`` mapping so the test
 suite can pin each rule with fixture files; ``scan_tree`` builds that
@@ -36,7 +42,7 @@ from typing import Iterable, Mapping, Optional
 
 from . import manifest
 
-RULES: tuple[str, ...] = ("R1", "R2", "R3", "R4", "R5")
+RULES: tuple[str, ...] = ("R1", "R2", "R3", "R4", "R5", "R6")
 
 RULE_DOCS: dict[str, str] = {
     "R1": "token dispatch must be exhaustive or explicitly defaulted",
@@ -44,6 +50,7 @@ RULE_DOCS: dict[str, str] = {
     "R3": "concrete Channels implement the full surface; record() carries raw_bytes",
     "R4": "no pickle on runtime hot paths outside declared escape hatches",
     "R5": "_FHDR/_RREC edits must bump WIRE_LAYOUT_VERSION (+ manifest)",
+    "R6": "blocking channel ops in runtime/ must be timeout- or liveness-guarded",
 }
 
 
@@ -618,6 +625,68 @@ def _check_r5(rel: str, tree: ast.Module) -> list[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# R6 — timeout-guarded blocking channel ops
+# ---------------------------------------------------------------------------
+
+def _own_nodes(fn: ast.AST) -> Iterable[ast.AST]:
+    """Walk a function body without descending into nested ``def``s
+    (each nested function is audited as its own scope)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _check_r6(rel: str, tree: ast.Module) -> list[Finding]:
+    if "runtime/" not in rel:
+        return []
+    findings: list[Finding] = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        bare_recvs: list[tuple[int, str]] = []   # (line, dumped base expr)
+        polled: set[str] = set()
+        raw_sends: list[tuple[int, str]] = []    # sendmsg/sendall sites
+        has_timeout_ctl = False
+        for node in _own_nodes(fn):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)):
+                continue
+            attr = node.func.attr
+            base = ast.dump(node.func.value)
+            if attr == "recv" and not node.args and not node.keywords:
+                bare_recvs.append((node.lineno, base))
+            elif attr == "poll":
+                polled.add(base)
+            elif attr in ("sendmsg", "sendall"):
+                raw_sends.append((node.lineno, attr))
+            elif attr in ("settimeout", "setblocking"):
+                has_timeout_ctl = True
+        for line, base in bare_recvs:
+            if base not in polled:
+                findings.append(Finding(
+                    "R6", rel, line,
+                    f"bare blocking recv() in {fn.name} with no timeout and "
+                    "no poll(...) liveness loop on the same object — a dead "
+                    "peer hangs this call forever; pass a timeout or guard "
+                    "with poll()",
+                ))
+        if raw_sends and not has_timeout_ctl:
+            line, attr = raw_sends[0]
+            findings.append(Finding(
+                "R6", rel, line,
+                f"raw socket {attr}() in {fn.name} without settimeout()/"
+                "setblocking() in the same function — a non-draining peer "
+                "blocks the send forever; bound it (TransportTimeout "
+                "semantics)",
+            ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
 # drivers
 # ---------------------------------------------------------------------------
 
@@ -650,6 +719,8 @@ def run_checks(
             findings.extend(_check_r4(rel, tree))
         if "R5" in active and rel.endswith("runtime/transport.py"):
             findings.extend(_check_r5(rel, tree))
+        if "R6" in active:
+            findings.extend(_check_r6(rel, tree))
     if "R3" in active:
         findings.extend(_check_r3(trees))
     findings.sort(key=lambda f: (f.path, f.line, f.rule))

@@ -22,9 +22,18 @@ Public API:
     Violation, drain_violations       — the live protocol sanitizer
                                         (``HopSpec(sanitize=True)`` /
                                         ``REPRO_SANITIZE=1``)
+    FaultPlan, FaultEvent,
+    ChaosChannel, BackoffPolicy,
+    RecoveryRecord, drain_recoveries,
+    drain_injections                  — deterministic fault injection
+                                        (``EdgePipeline(fault_plan=...)``)
+                                        and the supervised-recovery
+                                        records it produces
 """
 from .adaptive import AdaptiveRuntime
 from .edge import EdgePipeline, PipelineResult, StageStats, Worker
+from .faults import (BackoffPolicy, ChaosChannel, FaultEvent, FaultPlan,
+                     RecoveryRecord, drain_injections, drain_recoveries)
 from .sanitizer import (SanitizedChannel, SanitizerError, Violation,
                         drain_violations)
 from .session import (AdaptiveController, Controller, LoopRecord,
@@ -41,4 +50,6 @@ __all__ = [
     "Channel", "HopSpec", "TransferRecord", "Transport", "TransportError",
     "TransportTimeout", "get_transport", "record_trace", "register_transport",
     "SanitizedChannel", "SanitizerError", "Violation", "drain_violations",
+    "FaultPlan", "FaultEvent", "ChaosChannel", "BackoffPolicy",
+    "RecoveryRecord", "drain_recoveries", "drain_injections",
 ]

@@ -324,7 +324,7 @@ class _ThreadEngine:
         for group in self.chan_groups:
             for chan in group:
                 chan.send(kind=PROBE)         # records the RTT sample …
-                chan.recv()                   # … and consumes the token
+                chan.recv(timeout=5.0)        # … and consumes the token
                                               # (no session thread to)
 
     def stage_stats(self) -> list[StageStats]:
@@ -391,7 +391,12 @@ class _ThreadEngine:
         last = i == pipe.n_stages - 1
         failed = False
         while True:
-            kind, obj = ingress.recv()
+            try:
+                # bounded wait (pipecheck R6): a wedged upstream must not
+                # park this thread beyond the doorbell cadence
+                kind, obj = ingress.recv(timeout=1.0)
+            except TransportTimeout:
+                continue
             if kind == STOP:
                 egress.send(None, kind=STOP)
                 return
@@ -502,6 +507,12 @@ class _ThreadEngine:
         pass
 
 
+# how long a blocked orchestrator feed send waits before resurfacing as
+# TransportTimeout so the engine can re-check worker liveness — the
+# cadence of the supervisor's heartbeat on the submit path
+_FEED_SEND_CHUNK_S = 0.5
+
+
 class _ProcessEngine:
     results_persist = True      # the worker loop outlives any session
     """Stages as spawned OS processes (``WorkerHost``s), hops as real
@@ -512,6 +523,7 @@ class _ProcessEngine:
 
     def __init__(self, pipe: "EdgePipeline"):
         import multiprocessing as mp
+        from .faults import BackoffPolicy
         self.pipe = pipe
         self._ctx = mp.get_context("spawn")
         self._stop = self._ctx.Event()
@@ -521,10 +533,26 @@ class _ProcessEngine:
         self._procs: list = []
         self._ctrls: list = []
         self._ctrl_stage: list[int] = []      # worker w -> its logical stage
+        self._proc_slot: list[tuple[int, int]] = []   # worker w -> (stage, lane)
         self._pairs: list = []                # flat (tx, rx) per lane
         self._groups: list[list] = []         # pairs grouped per channel j
         self._feed = None                     # Channel or FanOutChannel
         self._result = None                   # Channel or FanInChannel
+        self._closed = False
+        # -- supervisor state (active when pipe.supervise) -------------- #
+        self.supervised = bool(getattr(pipe, "supervise", False))
+        self._backoff = BackoffPolicy()
+        self._down: dict[int, int] = {}       # stage -> evicted lane count
+        self._restaff_needed = False
+        self._device_loss: list[tuple[int, int]] = []  # undrained (stage, lane)
+        self._replay_cb: Callable[[], int] | None = None
+        self._recovering = False
+        self._recover_count = 0
+        self._batch_seq = 0                   # global batches fed (kills key)
+        plan = getattr(pipe, "fault_plan", None)
+        self._kills = plan.kill_events() if plan is not None else {}
+        self._chaos_fired: set = set()        # events already executed
+        self._last_alive = time.perf_counter()
         try:
             self._start(k)
         except BaseException:
@@ -534,9 +562,16 @@ class _ProcessEngine:
             self.close()
             raise
 
+    def _r_eff(self) -> tuple[int, ...]:
+        """Replica counts net of supervisor-evicted lanes (never < 1):
+        the staffing the next (re)build runs at until ``restaff``."""
+        return tuple(max(r - self._down.get(i, 0), 1)
+                     for i, r in enumerate(self.pipe.replicas))
+
     def _start(self, k: int) -> None:
+        from .faults import maybe_chaos
         pipe = self.pipe
-        r = pipe.replicas
+        r = self._r_eff()
         # channel j carries stage j-1 -> stage j; j=0 is the orchestrator
         # feed, j=k the result drain (neither is a scenario hop).  A
         # channel touching a replicated stage becomes a lane *group*:
@@ -561,14 +596,24 @@ class _ProcessEngine:
                 depth=(pipe.queue_depth if internal
                        else max(pipe.queue_depth * k, 1)),
                 seed=pipe.seed + j, epoch=pipe.epoch,
-                scenario_hop=internal, send_timeout_s=pipe.timeout_s,
+                scenario_hop=internal,
+                # the feed send's bound doubles as the orchestrator's
+                # liveness cadence: a blocked submit resurfaces every
+                # chunk so the engine can poll worker health instead of
+                # wedging on a dead peer (the old edge.py liveness hole)
+                send_timeout_s=(_FEED_SEND_CHUNK_S if j == 0
+                                else pipe.timeout_s),
                 codec=pipe.codecs[j - 1] if internal else "none",
                 # every hop whose receiver is a worker loop may hand out
                 # transport-owned views; the result drain hands arrays
                 # back to user code, so it pays the one defensive copy
                 zero_copy=(j != k),
-                sanitize=pipe.sanitize)
-            group = [maybe_sanitize(c).split()
+                sanitize=pipe.sanitize,
+                faults=getattr(pipe, "fault_plan", None))
+            # chaos wraps *outside* the sanitizer: honest traffic stays
+            # ledgered while injected wire damage enters below the
+            # observation point (see runtime.faults.ChaosChannel)
+            group = [maybe_chaos(maybe_sanitize(c), self._chaos_fired).split()
                      for c in trs[chan_names[j]].open_fan(spec, n_lanes)]
             self._groups.append(group)
             self._pairs.extend(group)
@@ -588,6 +633,7 @@ class _ProcessEngine:
                 parent_c, child_c = self._ctx.Pipe()
                 self._ctrls.append(parent_c)
                 self._ctrl_stage.append(i)
+                self._proc_slot.append((i, m))
                 child_ctrls.append(child_c)
                 ing = self._groups[i]
                 egr = self._groups[i + 1]
@@ -635,11 +681,20 @@ class _ProcessEngine:
     def nets(self):
         return self._meters
 
+    def _dead_workers(self) -> list[int]:
+        dead = [w for w, p in enumerate(self._procs) if not p.is_alive()]
+        if not dead:
+            self._last_alive = time.perf_counter()
+        return dead
+
+    def _raise_dead(self, w: int) -> None:
+        raise TransportError(
+            f"worker process {w} died (exitcode {self._procs[w].exitcode})")
+
     def _check_alive(self) -> None:
-        for i, p in enumerate(self._procs):
-            if not p.is_alive():
-                raise TransportError(
-                    f"worker process {i} died (exitcode {p.exitcode})")
+        dead = self._dead_workers()
+        if dead:
+            self._raise_dead(dead[0])
 
     def _ctrl_recv(self, i: int, timeout: float | None = None):
         deadline = time.perf_counter() + (timeout or self.pipe.timeout_s)
@@ -707,20 +762,118 @@ class _ProcessEngine:
         pass
 
     def submit(self, x) -> None:
-        self._feed.send(np.asarray(x), kind=BATCH)
+        seq = self._batch_seq
+        self._batch_seq += 1
+        self._send(np.asarray(x), kind=BATCH)
+        # scripted worker-kill faults fire the moment their trigger batch
+        # has been fed (pop: each fires exactly once — replays go through
+        # _feed.send directly and never re-trigger)
+        for ev in self._kills.pop(seq, ()):
+            self._inject_kill(ev)
+
+    def _inject_kill(self, ev) -> None:
+        for w, (stage, lane) in enumerate(self._proc_slot):
+            if (stage, lane) == (ev.stage, ev.lane) and self._procs[w].is_alive():
+                self._procs[w].kill()         # SIGKILL: no cleanup runs
+                return
 
     def submit_token(self, kind: int, obj=None) -> None:
-        self._feed.send(obj, kind=kind)
+        self._send(obj, kind=kind)
+
+    def _send(self, payload, kind: int) -> None:
+        """Feed send with the liveness loop the seed lacked: a blocked
+        send resurfaces every ``_FEED_SEND_CHUNK_S`` as TransportTimeout
+        (nothing committed — retryable), the engine checks worker health,
+        and — when supervised — recovers instead of raising."""
+        deadline = time.perf_counter() + self.pipe.timeout_s
+        rev = self._recover_count
+        attempts = 0
+        while True:
+            if (self.supervised and kind == BATCH
+                    and self._recover_count != rev):
+                # a recovery replayed the session's whole pending window,
+                # this batch included — re-sending would duplicate it
+                return
+            err = None
+            try:
+                self._feed.send(payload, kind=kind)
+                return
+            except TransportTimeout:
+                pass
+            except TransportError as e:
+                if not self.supervised:
+                    raise
+                err = e
+            dead = self._dead_workers()
+            if not self.supervised:
+                if dead:
+                    self._raise_dead(dead[0])
+                if time.perf_counter() > deadline:
+                    raise TransportError(
+                        f"feed send blocked for {self.pipe.timeout_s:.0f}s "
+                        f"with all workers alive (pipeline wedged)")
+                continue
+            if dead or err is not None:
+                if attempts >= self._backoff.retries:
+                    raise err or TransportError(
+                        "feed send: recovery retries exhausted")
+                time.sleep(self._backoff.delay(attempts))
+                attempts += 1
+                self._recover(dead, reason="worker-death" if dead
+                              else "feed-break")
+                continue
+            if time.perf_counter() > deadline:
+                raise TransportError(
+                    f"feed send blocked for {self.pipe.timeout_s:.0f}s "
+                    f"with all workers alive (pipeline wedged)")
 
     def poll(self, timeout: float):
         deadline = time.perf_counter() + timeout
+        if not self.supervised:
+            while True:
+                try:
+                    return self._result.recv(timeout=0.25)
+                except TransportTimeout:
+                    self._check_alive()
+                    if time.perf_counter() > deadline:
+                        raise
+        # supervised: worker death, a worker-reported ERROR, or a stream
+        # stalled past the stall window all trigger recovery (bounded by
+        # the backoff policy's retry cap) instead of failing the session
+        stall = self._stall_window()
+        quiet0 = time.perf_counter()
+        attempts = 0
         while True:
+            failure = None
             try:
-                return self._result.recv(timeout=0.25)
+                kind, obj = self._result.recv(timeout=0.25)
+                if kind != ERROR:
+                    return kind, obj
+                failure = TransportError(str(obj))
             except TransportTimeout:
-                self._check_alive()
-                if time.perf_counter() > deadline:
-                    raise
+                pass
+            except TransportError as e:
+                failure = e
+            dead = self._dead_workers()
+            now = time.perf_counter()
+            if dead or failure is not None or now - quiet0 >= stall:
+                if attempts >= self._backoff.retries:
+                    raise failure or TransportError(
+                        f"stream stalled past {stall:.1f}s and recovery "
+                        f"retries are exhausted")
+                time.sleep(self._backoff.delay(attempts))
+                attempts += 1
+                self._recover(dead,
+                              reason=("worker-death" if dead else
+                                      "worker-error" if failure else "stall"))
+                quiet0 = time.perf_counter()
+                continue
+            if now > deadline:
+                raise TransportTimeout("session: no result arrived")
+
+    def _stall_window(self) -> float:
+        w = getattr(self.pipe, "stall_timeout_s", None)
+        return w if w is not None else min(self.pipe.timeout_s / 3.0, 10.0)
 
     def max_inflight(self) -> int | None:
         # the feed channel's depth is what the orchestrator can always
@@ -731,6 +884,87 @@ class _ProcessEngine:
 
     def session_close(self, failed: bool = False) -> None:
         pass
+
+    # -- supervised recovery -------------------------------------------- #
+    def _recover(self, dead: list[int], reason: str = "worker-death") -> None:
+        """Stage restart / replica failover: tear the worker tier down,
+        rebuild it (at r−1 on the failed stage when survivors exist),
+        replay the WARMUP fence, then let the Session replay its unacked
+        in-flight batches.  Emits one RecoveryRecord per recovery."""
+        from .faults import RecoveryRecord, note_recovery
+        if self._recovering:
+            raise TransportError(
+                f"recovery failed while already recovering ({reason})")
+        if self._stop.is_set() or self._closed:
+            raise TransportError(f"engine closing; {reason} not recovered")
+        detect_s = time.perf_counter() - self._last_alive
+        self._recovering = True
+        try:
+            kind, stage, lane = "restart", -1, -1
+            if len(dead) == 1:
+                stage, lane = self._proc_slot[dead[0]]
+                if (self.pipe.replicas[stage]
+                        - self._down.get(stage, 0)) > 1:
+                    # a replicated stage lost one lane: continue degraded
+                    # at r−1, restaff in the background, and tell the
+                    # controller a device is gone
+                    kind = "failover"
+                    self._down[stage] = self._down.get(stage, 0) + 1
+                    self._restaff_needed = True
+                    self._device_loss.append((stage, lane))
+            t0 = time.perf_counter()
+            self._teardown_workers()
+            self._start(self.pipe.n_stages)
+            if getattr(self, "_warm_x", None) is not None:
+                self._feed.send(self._warm_x, kind=WARMUP)
+                self._await(WARMUP)
+            restart_s = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            replayed = self._replay_cb() if self._replay_cb is not None else 0
+            replay_s = time.perf_counter() - t1
+        finally:
+            self._recovering = False
+        self._recover_count += 1
+        self._last_alive = time.perf_counter()
+        eff = self._r_eff()
+        note_recovery(RecoveryRecord(
+            kind=kind, stage=stage, lane=lane, reason=reason,
+            detect_s=detect_s, restart_s=restart_s, replay_s=replay_s,
+            batches_replayed=replayed,
+            degraded_capacity=min(e / r for e, r
+                                  in zip(eff, self.pipe.replicas))))
+
+    def restaff(self) -> None:
+        """Return a degraded pipeline to full replica strength — called
+        by the Session at a quiescent point (no batches or tokens in
+        flight), so the rebuild needs no replay."""
+        from .faults import RecoveryRecord, note_recovery
+        if not self._restaff_needed or self._recovering or self._closed:
+            return
+        self._restaff_needed = False
+        self._down.clear()
+        t0 = time.perf_counter()
+        self._recovering = True
+        try:
+            self._teardown_workers()
+            self._start(self.pipe.n_stages)
+            if getattr(self, "_warm_x", None) is not None:
+                self._feed.send(self._warm_x, kind=WARMUP)
+                self._await(WARMUP)
+        finally:
+            self._recovering = False
+        self._recover_count += 1
+        self._last_alive = time.perf_counter()
+        note_recovery(RecoveryRecord(
+            kind="restaff", stage=-1, lane=-1, reason="restaff",
+            detect_s=0.0, restart_s=time.perf_counter() - t0,
+            replay_s=0.0, batches_replayed=0, degraded_capacity=1.0))
+
+    def drain_device_loss(self) -> list[tuple[int, int]]:
+        """(stage, lane) pairs evicted since the last drain — the
+        Session forwards them to the controller as device-loss events."""
+        out, self._device_loss = self._device_loss, []
+        return out
 
     # ------------------------------------------------------------------ #
     def warmup(self, x):
@@ -772,19 +1006,21 @@ class _ProcessEngine:
         import psutil
         return psutil.Process().memory_percent()
 
-    def close(self) -> None:
-        self._stop.set()
-        if self._feed is not None:
-            try:
-                self._feed.send(kind=STOP)
-            except Exception:
-                pass
+    def _teardown_workers(self) -> None:
+        """Tear the whole worker tier down — processes, channel pairs,
+        shmem segments, control pipes — leaving the engine ready for a
+        fresh ``_start``.  Every step is exception-safe and the state
+        lists are cleared, so calling it twice (failed recovery, then
+        close) is harmless."""
+        for p in self._procs:
+            if p.is_alive():
+                p.terminate()
         deadline = time.perf_counter() + 3.0
         for p in self._procs:
             p.join(max(deadline - time.perf_counter(), 0.1))
         for p in self._procs:
-            if p.is_alive():
-                p.terminate()
+            if p.is_alive():                  # terminate ignored: escalate
+                p.kill()
                 p.join(1.0)
         for pair in self._pairs:              # idempotent; includes feed
             for end in pair:                  # and result ends
@@ -792,7 +1028,7 @@ class _ProcessEngine:
                     end.close()
                 except Exception:
                     pass
-        for pair in self._pairs:              # workers are joined: reclaim
+        for pair in self._pairs:              # workers are gone: reclaim
             try:                              # segments a killed worker
                 pair[0].reap()                # never cleaned up
             except Exception:
@@ -802,6 +1038,25 @@ class _ProcessEngine:
                 c.close()
             except Exception:
                 pass
+        self._procs, self._ctrls = [], []
+        self._ctrl_stage, self._proc_slot = [], []
+        self._pairs, self._groups = [], []
+        self._feed = self._result = None
+
+    def close(self) -> None:
+        if getattr(self, "_closed", False):   # idempotent: double close,
+            return                            # close after failed recovery
+        self._closed = True
+        self._stop.set()
+        if self._feed is not None:
+            try:
+                self._feed.send(kind=STOP)
+            except Exception:
+                pass
+            deadline = time.perf_counter() + 3.0
+            for p in self._procs:             # graceful drain first
+                p.join(max(deadline - time.perf_counter(), 0.1))
+        self._teardown_workers()
 
 
 # --------------------------------------------------------------------------- #
@@ -836,7 +1091,9 @@ class EdgePipeline:
                  seed: int = 0, timeout_s: float = 180.0,
                  replicas: Sequence[int] | None = None,
                  stage_pace_s: "float | Sequence[float] | None" = None,
-                 sanitize: bool | None = None):
+                 sanitize: bool | None = None,
+                 fault_plan=None, supervise: bool | None = None,
+                 stall_timeout_s: float | None = None):
         if p is not None:
             cuts = p
         if link is not None:
@@ -953,6 +1210,20 @@ class EdgePipeline:
         # protocol sanitizer (runtime.sanitizer): explicit arg wins,
         # REPRO_SANITIZE=1 turns it on fleet-wide (e.g. for a CI tier)
         self.sanitize = sanitize_enabled(sanitize)
+        # fault tolerance (runtime.faults): a FaultPlan scripts injected
+        # failures; supervise turns on the _ProcessEngine supervisor
+        # (liveness heartbeats, bounded-backoff retry, stage restart,
+        # replica failover) — on by default whenever a plan is given
+        self.fault_plan = fault_plan
+        self.supervise = (bool(supervise) if supervise is not None
+                          else fault_plan is not None)
+        self.stall_timeout_s = stall_timeout_s
+        if ((self.fault_plan is not None or self.supervise)
+                and not any(process_based.values())):
+            raise ValueError(
+                "fault injection / supervised recovery need a process "
+                "transport (socket or shmem) — the emulated transport "
+                "has no worker processes to kill or restart")
         self._t0 = time.perf_counter()
         self.epoch = self._t0
         self.clock = clock or (lambda: time.perf_counter() - self._t0)

@@ -38,6 +38,13 @@ empties the report; matrix tests assert it stays empty.
 Enable per hop with ``HopSpec(sanitize=True)``, per pipeline with
 ``EdgePipeline(..., sanitize=True)``, or globally with
 ``REPRO_SANITIZE=1`` in the environment.
+
+Layering with fault injection: :class:`~repro.runtime.faults.ChaosChannel`
+wraps *outside* this sanitizer (``maybe_chaos(maybe_sanitize(chan))``)
+and injects wire damage through the raw transport *below* it, so the
+chaos layer doubles as the sanitizer's adversarial test harness — a
+supervised pipeline that recovers from an injected fault must still
+drain zero violations.
 """
 from __future__ import annotations
 

@@ -144,6 +144,11 @@ class HopSpec:
     # and violations raise SanitizerError.  Engines set this from
     # EdgePipeline(sanitize=...) / the REPRO_SANITIZE env var.
     sanitize: bool = False
+    # deterministic fault script for this pipeline (runtime.faults
+    # .FaultPlan); engines wrap send ends whose hop has frame-level
+    # events in runtime.faults.ChaosChannel and execute worker-kill
+    # events from the supervisor.  None = no fault injection.
+    faults: object | None = None
 
 
 # --------------------------------------------------------------------------- #
@@ -154,7 +159,7 @@ class HopSpec:
 # tools/pipecheck.py (rule R5) fails the tree otherwise.  The version is
 # deliberately *not* framed per message: both ends of a hop come from
 # one checkout, the constant exists so layout edits are conscious.
-WIRE_LAYOUT_VERSION = 1
+WIRE_LAYOUT_VERSION = 2   # v2: per-frame wire seq for duplicate suppression
 
 
 
@@ -527,10 +532,13 @@ class EmulatedChannel(Channel):
 
 
 # packed socket frame: ftype, kind, dtype code, ndim, codec code,
-# meta_len, t_send, payload_len, shape[8] — everything the common tensor
-# case needs in one fixed-size read, no pickled metadata on the wire
-# (mlen = 0); codec code 0 = uncoded payload bytes
-_FHDR = struct.Struct("!BBbBB I d Q 8q")
+# meta_len, t_send, payload_len, wire seq, shape[8] — everything the
+# common tensor case needs in one fixed-size read, no pickled metadata
+# on the wire (mlen = 0); codec code 0 = uncoded payload bytes.  The
+# wire seq (layout v2) stamps every frame from a per-end counter so the
+# receiver can drop an already-delivered BATCH — duplicate suppression
+# for chaos-duplicated and recovery-replayed frames.
+_FHDR = struct.Struct("!BBbBB I d Q Q 8q")
 
 
 class SocketChannel(Channel):
@@ -563,6 +571,8 @@ class SocketChannel(Channel):
         for s in {self._tx, self._rx} - {None}:
             s.setsockopt(socketlib.IPPROTO_TCP, socketlib.TCP_NODELAY, 1)
         self._init_bufs()
+        self._tx_seq = 0                      # frames sent from this end
+        self._rx_seen = -1                    # highest wire seq delivered
 
     def _init_bufs(self) -> None:
         self._hbuf = bytearray(_FHDR.size)
@@ -583,30 +593,61 @@ class SocketChannel(Channel):
         rx = SocketChannel(self.hop, _pair=(None, self._rx))
         return tx, rx
 
-    def send(self, payload=None, kind: int = BATCH):
+    def send(self, payload=None, kind: int = BATCH, _dup: bool = False):
         if self._tx is None:
             raise TransportError(f"hop {self.hop.index}: receive-only end")
         t0 = time.perf_counter()              # serialization counts
         ftype, code, shape, data, meta, ccode = _frame(
             payload, self.hop.framing, self._send_codec(kind))
+        if _dup:                              # chaos re-send: same wire seq
+            seq = self._tx_seq - 1
+        else:
+            seq = self._tx_seq
+            self._tx_seq += 1
         hdr = _FHDR.pack(ftype, kind, code, len(shape), ccode, len(meta),
-                         t0, len(data), *shape, *((0,) * (8 - len(shape))))
+                         t0, len(data), seq, *shape,
+                         *((0,) * (8 - len(shape))))
         self._pace(len(data) + len(meta), kind)
         bufs = [memoryview(hdr)]
         if meta:
             bufs.append(memoryview(meta))
         if len(data):
             bufs.append(memoryview(data))
+        # The bounded send is the liveness half of the wire protocol: a
+        # peer that stops draining surfaces as TransportTimeout once zero
+        # bytes of this frame moved for send_timeout_s (nothing committed
+        # — retryable, mirroring recv's first-byte rule), and as
+        # TransportError if the stall hits mid-frame.
+        sent_any = False
+        self._tx.settimeout(self.hop.send_timeout_s)
         try:
             while bufs:
-                n = self._tx.sendmsg(bufs)    # vectored: no concat copy
+                try:
+                    n = self._tx.sendmsg(bufs)  # vectored: no concat copy
+                except socketlib.timeout:
+                    if not sent_any:
+                        raise TransportTimeout(
+                            f"hop {self.hop.index}: send timed out after "
+                            f"{self.hop.send_timeout_s:.0f}s "
+                            f"(peer not draining)") from None
+                    raise TransportError(
+                        f"hop {self.hop.index}: send stalled mid-frame for "
+                        f"{self.hop.send_timeout_s:.0f}s") from None
+                except OSError as e:
+                    raise TransportError(
+                        f"hop {self.hop.index}: peer gone ({e})") from e
+                if n:
+                    sent_any = True
                 while bufs and n >= len(bufs[0]):
                     n -= len(bufs.pop(0))
                 if bufs and n:
                     bufs[0] = bufs[0][n:]
-        except OSError as e:
-            raise TransportError(
-                f"hop {self.hop.index}: peer gone ({e})") from e
+        finally:
+            if self._tx is not None:
+                try:
+                    self._tx.settimeout(None)
+                except OSError:
+                    pass
         return None
 
     def _read_into(self, view: memoryview, timeout: float | None) -> None:
@@ -634,18 +675,31 @@ class SocketChannel(Channel):
     def recv(self, timeout: float | None = None):
         if self._rx is None:
             raise TransportError(f"hop {self.hop.index}: send-only end")
-        self._read_into(memoryview(self._hbuf), timeout)
-        (ftype, kind, code, ndim, ccode, mlen, t0, plen,
-         *shape) = _FHDR.unpack(self._hbuf)
-        meta = b""
-        if mlen:
-            meta = bytearray(mlen)
-            self._read_into(memoryview(meta), None)
-        if plen > len(self._rbuf):
-            self._rbuf = bytearray(_next_pow2(plen))
-        view = memoryview(self._rbuf)[:plen]
-        if plen:
-            self._read_into(view, None)
+        while True:
+            self._read_into(memoryview(self._hbuf), timeout)
+            (ftype, kind, code, ndim, ccode, mlen, t0, plen, seq,
+             *shape) = _FHDR.unpack(self._hbuf)
+            meta = b""
+            if mlen:
+                meta = bytearray(mlen)
+                self._read_into(memoryview(meta), None)
+            if plen > len(self._rbuf):
+                self._rbuf = bytearray(_next_pow2(plen))
+            view = memoryview(self._rbuf)[:plen]
+            if plen:
+                self._read_into(view, None)
+            if kind == BATCH and seq <= self._rx_seen:
+                continue                      # duplicate frame: drop it
+            if seq > self._rx_seen + 1:
+                raise TransportError(
+                    f"hop {self.hop.index}: wire gap — frame(s) lost "
+                    f"(seq {seq} after {self._rx_seen})")
+            if not 0 <= kind <= CLOCK:
+                raise TransportError(
+                    f"hop {self.hop.index}: corrupt frame header "
+                    f"(kind=0x{kind:02x})")
+            self._rx_seen = seq
+            break
         payload = _unframe(ftype, code, tuple(shape[:ndim]), view, meta,
                            ccode)
         if (ftype == _F_RAW and not ccode and not self.hop.zero_copy
@@ -782,9 +836,11 @@ def _bell_pair(flavor: str):
 # shmem control ring: fixed-stride metadata records packed directly into
 # the shared control segment — ftype, kind, dtype code, ndim, codec
 # code, slot index (-1 = inline/none), meta_len, inline_len, t_send,
-# nbytes, shape[8]; the rest of the stride is the inline area (pickled
-# meta + small payloads ride in the record itself, no slot round trip)
-_RREC = struct.Struct("<BBbBB i I I d Q 8q")
+# nbytes, wire seq, shape[8]; the rest of the stride is the inline area
+# (pickled meta + small payloads ride in the record itself, no slot
+# round trip).  The wire seq (layout v2) mirrors the socket header's:
+# per-end send counter, receiver-side BATCH dedup.
+_RREC = struct.Struct("<BBbBB i I I d Q Q 8q")
 _STRIDE = 256
 _INLINE = _STRIDE - _RREC.size
 _BELL_CHUNK_S = 0.05    # re-check cadence while parked on the doorbell
@@ -869,6 +925,8 @@ class ShmemChannel(Channel):
         self._attached: dict = {}             # receiver: idx -> (name, shm)
         self._lease: int | None = None        # slot behind the last recv view
         self._role = "both"
+        self._tx_seq = 0                      # frames sent from this end
+        self._rx_seen = -1                    # highest wire seq delivered
         for i in range(self._n_slots):        # all slots start free (no
             self._push_free(i, ring=False)    # segment until first use)
 
@@ -936,7 +994,7 @@ class ShmemChannel(Channel):
             return 0 < avail <= self._n_slots  # clamp guards a torn read
         self._wait(ready, self._bell_fr, self.hop.send_timeout_s,
                    f"no free shmem slot for {self.hop.send_timeout_s:.0f}s "
-                   f"(receiver gone?)", err=TransportError)
+                   f"(receiver not draining)", err=TransportTimeout)
         ft = self._ld(self._FT)
         idx = struct.unpack_from(
             "<Q", self._ctl.buf, self._free_off + (ft % self._fcap) * 8)[0]
@@ -1031,7 +1089,7 @@ class ShmemChannel(Channel):
         return tx, rx
 
     # -- hot path --------------------------------------------------------- #
-    def send(self, payload=None, kind: int = BATCH):
+    def send(self, payload=None, kind: int = BATCH, _dup: bool = False):
         t0 = time.perf_counter()              # serialization + copy count
         ftype, code, shape, data, meta, ccode = _frame(
             payload, self.hop.framing, self._send_codec(kind))
@@ -1041,6 +1099,18 @@ class ShmemChannel(Channel):
             raise TransportError(
                 f"hop {self.hop.index}: {mlen} B of pickled metadata "
                 f"exceeds the {_INLINE} B inline area")
+        # Reserve ring space *before* claiming a payload slot, so a
+        # TransportTimeout here (the retryable liveness signal — receiver
+        # not draining) leaves no sender state mutated and the caller can
+        # simply re-send.  Space never shrinks once seen: the receiver
+        # only consumes records.  0 <= used: a torn read of the receiver-
+        # written tail counter must block the publish, never overwrite an
+        # unconsumed record.
+        self._wait(lambda: 0 <= self._ld(self._DH) - self._ld(self._DT)
+                   < self._cap,
+                   self._bell_fr, self.hop.send_timeout_s,
+                   f"control ring full for {self.hop.send_timeout_s:.0f}s "
+                   f"(receiver not draining)", err=TransportTimeout)
         slot, ilen = -1, 0
         if nbytes:
             if mlen + nbytes <= _INLINE:
@@ -1048,17 +1118,15 @@ class ShmemChannel(Channel):
             else:
                 slot, buf = self._get_slot(nbytes)
                 buf[:nbytes] = memoryview(data)
-        # 0 <= used: a torn read of the receiver-written tail counter
-        # must block the publish, never overwrite an unconsumed record
-        self._wait(lambda: 0 <= self._ld(self._DH) - self._ld(self._DT)
-                   < self._cap,
-                   self._bell_fr, self.hop.send_timeout_s,
-                   f"control ring full for {self.hop.send_timeout_s:.0f}s "
-                   f"(receiver gone?)", err=TransportError)
+        if _dup:                              # chaos re-send: same wire seq
+            seq = self._tx_seq - 1
+        else:
+            seq = self._tx_seq
+            self._tx_seq += 1
         head = self._ld(self._DH)
         base = self._rec_off + (head % self._cap) * _STRIDE
         _RREC.pack_into(self._ctl.buf, base, ftype, kind, code, len(shape),
-                        ccode, slot, mlen, ilen, t0, nbytes,
+                        ccode, slot, mlen, ilen, t0, nbytes, seq,
                         *shape, *((0,) * (8 - len(shape))))
         inl = base + _RREC.size
         if mlen:
@@ -1077,11 +1145,31 @@ class ShmemChannel(Channel):
         def ready():
             avail = self._ld(self._DH) - self._ld(self._DT)
             return 0 < avail <= self._cap     # clamp guards a torn read
-        self._wait(ready, self._bell_dr, timeout, "recv timed out")
-        tail = self._ld(self._DT)
-        base = self._rec_off + (tail % self._cap) * _STRIDE
-        (ftype, kind, code, ndim, ccode, slot, mlen, ilen, t0, nbytes,
-         *shape) = _RREC.unpack_from(self._ctl.buf, base)
+        while True:
+            self._wait(ready, self._bell_dr, timeout, "recv timed out")
+            tail = self._ld(self._DT)
+            base = self._rec_off + (tail % self._cap) * _STRIDE
+            (ftype, kind, code, ndim, ccode, slot, mlen, ilen, t0, nbytes,
+             seq, *shape) = _RREC.unpack_from(self._ctl.buf, base)
+            if kind == BATCH and seq <= self._rx_seen:
+                # duplicate frame: recycle its slot, consume the record
+                if slot >= 0:
+                    self._push_free(slot)
+                was_full = self._ld(self._DH) - tail >= self._cap
+                self._st(self._DT, tail + 1)
+                if was_full:
+                    self._ring(self._bell_fs)
+                continue
+            if seq > self._rx_seen + 1:
+                raise TransportError(
+                    f"hop {self.hop.index}: wire gap — frame(s) lost "
+                    f"(seq {seq} after {self._rx_seen})")
+            if not 0 <= kind <= CLOCK:
+                raise TransportError(
+                    f"hop {self.hop.index}: corrupt frame header "
+                    f"(kind=0x{kind:02x})")
+            break
+        self._rx_seen = seq
         inl = base + _RREC.size
         meta = bytes(self._ctl.buf[inl:inl + mlen]) if mlen else b""
         if slot >= 0:
@@ -1268,6 +1356,19 @@ class FanOutChannel(_FanBase):
             rec = ch.send(payload, kind)
         return rec
 
+    def evict_lane(self, m: int) -> None:
+        """Drop a dead lane from the stripe map; later batches stripe
+        round-robin over the survivors, restarting at lane 0.  Only
+        valid at quiescence (no data in flight on the group) and must be
+        mirrored by ``FanInChannel.evict_lane`` on the same lane so both
+        cursors stay aligned."""
+        if len(self.lanes) <= 1:
+            raise ValueError("cannot evict the last lane of a replica fan")
+        if not 0 <= m < len(self.lanes):
+            raise IndexError(f"lane {m} of {len(self.lanes)}")
+        del self.lanes[m]
+        self._seq = 0
+
 
 class FanInChannel(_FanBase):
     """Merge end of a replica lane group: data is consumed strictly in
@@ -1311,6 +1412,19 @@ class FanInChannel(_FanBase):
             self._owed.pop(0)
         self._tok = None                      # _next unchanged: the stripe
         return kind, payload                  # resumes where it left off
+
+    def evict_lane(self, m: int) -> None:
+        """Drop a dead lane from the merge, mirroring
+        ``FanOutChannel.evict_lane``: the stripe cursor restarts at lane
+        0 and any pending-token bookkeeping forgets the evicted lane.
+        Only valid at quiescence on the group."""
+        if len(self.lanes) <= 1:
+            raise ValueError("cannot evict the last lane of a replica fan")
+        if not 0 <= m < len(self.lanes):
+            raise IndexError(f"lane {m} of {len(self.lanes)}")
+        del self.lanes[m]
+        self._owed = [x - 1 if x > m else x for x in self._owed if x != m]
+        self._next = 0
 
 
 # --------------------------------------------------------------------------- #

@@ -8,7 +8,7 @@ _TOKENS = (PROBE, RECONFIG, STATS, WARMUP, CLOCK)
 
 def pump_with_else(chan):
     while True:
-        kind, obj = chan.recv()
+        kind, obj = chan.recv(timeout=0.25)
         if kind == STOP:
             break
         elif kind == BATCH:
@@ -19,7 +19,7 @@ def pump_with_else(chan):
 
 def pump_covering_all(chan):
     while True:
-        kind, obj = chan.recv()
+        kind, obj = chan.recv(timeout=0.25)
         if kind == STOP:
             break
         elif kind in (BATCH, WARMUP):
@@ -32,7 +32,7 @@ def pump_covering_all(chan):
 
 def pump_with_trailing_default(chan):
     while True:
-        kind, obj = chan.recv()
+        kind, obj = chan.recv(timeout=0.25)
         if kind == STOP:
             break
         if kind == BATCH:

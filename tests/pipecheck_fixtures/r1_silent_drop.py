@@ -6,7 +6,7 @@ BATCH, WARMUP, PROBE, RECONFIG, STATS, STOP, ERROR, CLOCK = range(8)
 
 def pump(chan):
     while True:
-        kind, obj = chan.recv()
+        kind, obj = chan.recv(timeout=0.25)
         if kind == STOP:
             break
         elif kind == BATCH:

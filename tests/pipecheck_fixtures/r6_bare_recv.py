@@ -1,0 +1,28 @@
+"""R6 fixture: unguarded blocking channel ops a dead peer hangs forever.
+
+``drain_one`` calls a bare ``recv()`` with neither a timeout argument
+nor a ``poll(...)`` liveness loop on the same object, and
+``push_frame`` drives a raw socket ``sendmsg`` without bounding it via
+``settimeout``/``setblocking``.  ``drain_guarded`` shows the compliant
+shape (poll-then-recv) and must NOT fire.
+"""
+
+
+def drain_one(ctrl):
+    msg = ctrl.recv()                         # R6: bare blocking recv
+    return msg
+
+
+def drain_guarded(ctrl, deadline):
+    while True:
+        if ctrl.poll(0.05):
+            return ctrl.recv()                # guarded: poll on same object
+        if deadline():
+            raise TimeoutError
+
+
+def push_frame(sock, bufs):
+    sent = 0
+    while bufs:
+        sent += sock.sendmsg(bufs)            # R6: unbounded raw send
+    return sent

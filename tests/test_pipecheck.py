@@ -1,5 +1,5 @@
 """PipeCheck static pass (tools/pipecheck.py, repro.analysis): the real
-tree is clean, every rule (R1-R5) fires on its fixture, and the CLI
+tree is clean, every rule (R1-R6) fires on its fixture, and the CLI
 emits clickable ``file:line: RULE`` lines with a failing exit status.
 """
 import subprocess
@@ -153,6 +153,35 @@ def test_r5_fires_on_unknown_version():
         "WIRE_LAYOUT_VERSION = 1", "WIRE_LAYOUT_VERSION = 99")
     findings = run_checks({"src/repro/runtime/transport.py": src})
     assert any("no entry" in f.message for f in findings)
+
+
+# --------------------------------------------------------------------------- #
+# R6 — timeout-guarded blocking channel ops
+# --------------------------------------------------------------------------- #
+def test_r6_fires_on_unguarded_blocking_ops():
+    findings = run_checks(
+        {"src/repro/runtime/r6loop.py": _fx("r6_bare_recv.py")})
+    assert _rules(findings) == {"R6"}
+    msgs = [f.message for f in findings]
+    assert any("bare blocking recv()" in m for m in msgs)
+    assert any("sendmsg" in m for m in msgs)
+    # the poll-then-recv shape is compliant and must not fire
+    assert not any("drain_guarded" in m for m in msgs)
+
+
+def test_r6_is_runtime_scoped():
+    assert run_checks(
+        {"src/repro/core/r6loop.py": _fx("r6_bare_recv.py")}) == []
+
+
+def test_r6_real_runtime_is_guarded():
+    # every blocking channel op in the live runtime carries a timeout or
+    # a poll() liveness loop (the edge.py hole this rule was written for)
+    findings = run_checks(
+        {f"src/repro/runtime/{p.name}": p.read_text()
+         for p in (REPO / "src/repro/runtime").glob("*.py")},
+        rules=("R6",))
+    assert findings == [], [f.render() for f in findings]
 
 
 # --------------------------------------------------------------------------- #

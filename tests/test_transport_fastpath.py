@@ -180,6 +180,25 @@ def test_shmem_teardown_unlinks_all_segments():
     assert set(os.listdir("/dev/shm")) - before == set()
 
 
+def test_shmem_fan_teardown_reaps_every_lane():
+    """open_fan lanes pack into one control segment: close() on every
+    lane end plus one reap() must unlink the shared segment and all
+    per-lane payload slots — the supervisor's rebuild path after a
+    SIGKILL'd replica depends on this not leaking."""
+    if not os.path.isdir("/dev/shm"):
+        pytest.skip("no /dev/shm on this platform")
+    before = set(os.listdir("/dev/shm"))
+    lanes = get_transport("shmem").open_fan(HopSpec(index=0, depth=3), 2)
+    for m, lane in enumerate(lanes):          # slot traffic on every lane
+        lane.send(np.full(1 << 16, m, dtype=np.uint8), kind=BATCH)
+        lane.recv(timeout=5.0)
+    assert len(set(os.listdir("/dev/shm")) - before) >= 1   # live segments
+    for lane in lanes:
+        lane.close()
+    lanes[0].reap()                           # idempotent vs close()
+    assert set(os.listdir("/dev/shm")) - before == set()
+
+
 def test_socket_vectored_send_large_payload():
     """8 MiB through sendmsg: the partial-write loop must hold up well
     past the kernel socket buffers (needs a concurrent reader)."""
