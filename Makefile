@@ -53,6 +53,15 @@
 #                          detection < 3 s, restart+replay < 30 s, exact
 #                          parity, failover capacity 0.5 (the make-fast
 #                          gate)
+#   make bench-serve     — multi-tenant serving-gateway bench: closed-loop
+#                          tenants, coalescing gain + p50/p99 tails +
+#                          micro-batch occupancy per tenant count
+#                          (writes BENCH_serve.json, <30 s smoke tier)
+#   make bench-serve-check
+#                        — fresh smoke run gated on the within-run
+#                          invariants: 8-tenant aggregate >= 3x solo and
+#                          8-tenant p99 <= 5x solo p50 (the make-fast
+#                          gate)
 #   make test-faults     — the fault matrix alone ({socket,shmem} x
 #                          {drain,drop} x fault kinds, sanitized)
 #   make demo            — k-stage adaptive loop demo under a WAN ramp
@@ -64,10 +73,12 @@ ENV      = PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 .PHONY: check fast test test-fast test-faults bench bench-quick bench-smoke \
         bench-transport bench-transport-check bench-stream \
         bench-stream-check bench-codec bench-codec-check bench-replica \
-        bench-replica-check bench-fault bench-fault-check demo
+        bench-replica-check bench-fault bench-fault-check bench-serve \
+        bench-serve-check demo
 
 fast: check test-fast bench-smoke bench-transport-check bench-stream-check \
-      bench-codec-check bench-replica-check bench-fault-check
+      bench-codec-check bench-replica-check bench-fault-check \
+      bench-serve-check
 
 # Static gates (<30 s). PipeCheck is self-contained (stdlib ast only)
 # and always runs; ruff/mypy are dev extras — skipped with a notice
@@ -128,6 +139,12 @@ bench-fault:
 
 bench-fault-check:
 	$(ENV) $(PY) -m benchmarks.fault_bench --check
+
+bench-serve:
+	$(ENV) $(PY) -m benchmarks.serve_bench --smoke
+
+bench-serve-check:
+	$(ENV) $(PY) -m benchmarks.serve_bench --check
 
 demo:
 	$(ENV) $(PY) examples/kway_adaptive.py

@@ -22,6 +22,7 @@ def main() -> None:
     from . import kway_runtime as K
     from . import paper_tables as P
     from . import replica_bench as R
+    from . import serve_bench as SG
     from . import stream_bench as S
     from . import tpu_pod_pareto as T
     from . import transport_bench as TR
@@ -43,10 +44,11 @@ def main() -> None:
         "stream_session": S.stream_throughput,
         "codec_overhead": C.codec_overhead,
         "replica_fanout": R.run,
+        "serve_gateway": SG.serve_throughput,
     }
     measured = {"fig2", "fig7", "kway_front", "kway_adaptive",
                 "transport_overhead", "stream_session", "codec_overhead",
-                "replica_fanout"}
+                "replica_fanout", "serve_gateway"}
     rows: list[str] = []
     for name, fn in benches.items():
         if args.only and args.only not in name:

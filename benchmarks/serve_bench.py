@@ -1,0 +1,236 @@
+"""ServeGate benchmark: multi-tenant coalescing gain and tail latency.
+
+Closed-loop tenants (each keeps exactly one request outstanding) served
+through the :class:`~repro.runtime.serve.Gateway`, written to
+``BENCH_serve.json``:
+
+  * **aggregate** — served requests/s per tenant count.  The gateway
+    pads every micro-batch to ``max_batch`` rows (the deterministic-
+    batching contract), so a solo tenant pays a full batch per request
+    while 8 tenants amortize the same batch across 8 requests — the
+    coalescing gain is structural, not a scheduling accident.
+  * **tail** — per-request p50/p99 (queue + service, the SLO quantity)
+    and mean micro-batch occupancy from the per-request QoS log.
+
+The acceptance gate is *within-run* (both sides of each ratio see the
+same host, so ambient load cancels):
+
+  * 8-tenant aggregate >= ``GATE_SPEEDUP`` x single-tenant aggregate;
+  * 8-tenant p99 latency <= ``GATE_TAIL`` x single-tenant p50.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [--check]
+
+``--smoke`` shrinks request counts and skips the process-transport
+row (< 30 s, the ``make bench-serve`` target).  ``--check`` runs a
+fresh smoke measurement and asserts the gates (retrying before
+failing) without overwriting the committed JSON — the ``make
+bench-serve-check`` / ``make fast`` gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.transport_bench import _tiny_model  # same reference model
+
+BENCH_JSON = Path("BENCH_serve.json")
+
+CUT = 2
+MAX_BATCH = 8
+# generous coalescing window: the closed-loop resubmit burst takes
+# microseconds, so every micro-batch gathers the full tenant fan-in
+# even on a preempted host
+BATCH_WINDOW_S = 0.02
+
+GATE_SPEEDUP = 3.0          # 8-tenant aggregate vs single-tenant
+GATE_TAIL = 5.0             # 8-tenant p99 vs single-tenant p50
+
+
+def _pipe(model, params, transport):
+    from repro.core.devices import LOOPBACK
+    from repro.runtime import EdgePipeline
+    return EdgePipeline(model, params, CUT, [LOOPBACK],
+                        transport=transport, timeout_s=120)
+
+
+def serve_closed_loop(model, params, x_row, n_tenants: int,
+                      reqs_per_tenant: int,
+                      transport: str = "emulated") -> dict:
+    """Closed loop: every tenant resubmits the moment its previous
+    request completes, so offered load scales with the tenant count and
+    each micro-batch coalesces up to ``n_tenants`` rows."""
+    from repro.core.scenarios import TenantSpec
+    from repro.runtime import Gateway
+
+    names = [f"t{i}" for i in range(n_tenants)]
+    # distinct rows per tenant so demux bugs would surface as wrong data
+    xs = {n: np.asarray(x_row) + np.float32(i * 1e-3)
+          for i, n in enumerate(names)}
+    left = {n: reqs_per_tenant for n in names}
+    total = n_tenants * reqs_per_tenant
+    with _pipe(model, params, transport) as pipe:
+        pipe.warmup(np.concatenate([np.asarray(x_row)] * MAX_BATCH, 0))
+        with Gateway(pipe, [TenantSpec(n, slo_s=30.0) for n in names],
+                     max_batch=MAX_BATCH,
+                     batch_window_s=BATCH_WINDOW_S, inflight=2) as gw:
+            done = 0
+            t0 = time.perf_counter()
+            for n in names:                   # prime: one in flight each
+                gw.submit(n, xs[n])
+                left[n] -= 1
+            while done < total:
+                served = gw.poll(block=True)
+                if not served and not gw.pending:
+                    raise RuntimeError("gateway went idle with "
+                                       f"{total - done} requests unserved")
+                for tenant, _req_id, _val in served:
+                    done += 1
+                    if left[tenant]:
+                        left[tenant] -= 1
+                        gw.submit(tenant, xs[tenant])
+            wall = time.perf_counter() - t0
+            qos = gw.drain_qos()
+    assert len(qos) == total, (len(qos), total)
+    lats = np.asarray([r.latency_s for r in qos])
+    return {
+        "transport": transport,
+        "n_tenants": n_tenants,
+        "reqs_per_tenant": reqs_per_tenant,
+        "aggregate_ips": total / wall,
+        "p50_s": float(np.percentile(lats, 50)),
+        "p99_s": float(np.percentile(lats, 99)),
+        "occupancy": float(np.mean([r.occupancy for r in qos])),
+        "coalesced": float(np.mean([r.coalesced for r in qos])),
+        "j_per_request": float(np.mean([r.energy_j for r in qos])),
+    }
+
+
+def _gates(results: dict) -> list[str]:
+    """The within-run acceptance gates over a measured tenant sweep."""
+    bad: list[str] = []
+    solo = results["tenants"].get("1")
+    octet = results["tenants"].get("8")
+    if not solo or not octet:
+        return ["missing the 1-tenant or 8-tenant measurement"]
+    speedup = octet["aggregate_ips"] / max(solo["aggregate_ips"], 1e-9)
+    if speedup < GATE_SPEEDUP:
+        bad.append(f"aggregate: 8-tenant {octet['aggregate_ips']:.1f} req/s "
+                   f"is only {speedup:.2f}x solo "
+                   f"{solo['aggregate_ips']:.1f} (need >= {GATE_SPEEDUP}x)")
+    tail = octet["p99_s"] / max(solo["p50_s"], 1e-9)
+    if tail > GATE_TAIL:
+        bad.append(f"tail: 8-tenant p99 {octet['p99_s'] * 1e3:.1f} ms is "
+                   f"{tail:.2f}x solo p50 {solo['p50_s'] * 1e3:.1f} ms "
+                   f"(need <= {GATE_TAIL}x)")
+    return bad
+
+
+def _measure(smoke: bool, write: bool = True,
+             out_path: Path = BENCH_JSON) -> tuple[list[str], dict]:
+    import jax
+    model = _tiny_model()
+    params = model.init(jax.random.PRNGKey(0))
+    x_row = np.asarray(jax.random.normal(jax.random.PRNGKey(1),
+                                         (1, 32, 32, 3)))
+    counts = (1, 8) if smoke else (1, 2, 4, 8)
+    reqs = 32 if smoke else 128
+
+    rows: list[str] = []
+    results = {"model": model.name, "cut": CUT, "max_batch": MAX_BATCH,
+               "reqs_per_tenant": reqs, "tenants": {}}
+
+    print("== closed-loop multi-tenant serving (emulated) ==")
+    for n in counts:
+        r = serve_closed_loop(model, params, x_row, n, reqs)
+        results["tenants"][str(n)] = r
+        print(f"  {n:>2} tenants  {r['aggregate_ips']:8.1f} req/s  "
+              f"p50 {r['p50_s'] * 1e3:6.1f} ms  p99 {r['p99_s'] * 1e3:6.1f} "
+              f"ms  occupancy {r['occupancy']:.2f}")
+        rows.append(f"serve/aggregate_{n}t,{r['aggregate_ips']:.3f},"
+                    f"p99_ms={r['p99_s'] * 1e3:.2f}")
+
+    solo = results["tenants"]["1"]
+    octet = results["tenants"]["8"]
+    results["speedup_8t"] = octet["aggregate_ips"] / solo["aggregate_ips"]
+    results["tail_8t_vs_solo_p50"] = octet["p99_s"] / solo["p50_s"]
+    print(f"  coalescing gain {results['speedup_8t']:.2f}x  "
+          f"tail {results['tail_8t_vs_solo_p50']:.2f}x solo p50")
+    rows.append(f"serve/speedup_8t,{results['speedup_8t']:.3f},"
+                f"gate>={GATE_SPEEDUP}")
+
+    if not smoke:
+        # informational: the same octet workload over a real transport
+        print("== 8 tenants over shmem (informational) ==")
+        r = serve_closed_loop(model, params, x_row, 8, reqs, "shmem")
+        results["shmem_8t"] = r
+        print(f"   8 tenants  {r['aggregate_ips']:8.1f} req/s  "
+              f"p99 {r['p99_s'] * 1e3:6.1f} ms")
+        rows.append(f"serve/aggregate_8t_shmem,{r['aggregate_ips']:.3f},"
+                    f"p99_ms={r['p99_s'] * 1e3:.2f}")
+
+    for b in _gates(results):
+        print(f"  [gate] {b}")
+    if write:
+        out_path.write_text(json.dumps(results, indent=1))
+        print(f"[wrote {out_path}]")
+    return rows, results
+
+
+def serve_throughput(smoke: bool = False) -> list[str]:
+    """Harness entrypoint (benchmarks.run): measure + write the JSON."""
+    rows, _ = _measure(smoke=smoke)
+    return rows
+
+
+def check(ref_path: Path = BENCH_JSON) -> int:
+    """Fresh smoke measurement; assert the within-run gates → exit
+    code.  No load normalization needed: both sides of each gate ratio
+    come from the same run on the same host."""
+    if not ref_path.exists():
+        print(f"[check] no committed {ref_path}; run the bench first")
+        return 2
+    ref = json.loads(ref_path.read_text())
+    if _gates(ref):
+        print(f"[check] committed {ref_path} fails its own gates; "
+              f"regenerate it with `make bench-serve`")
+        return 2
+    for attempt in (1, 2, 3):
+        _, fresh = _measure(smoke=True, write=False)
+        bad = _gates(fresh)
+        if not bad:
+            print(f"[check] OK — coalescing gain "
+                  f"{fresh['speedup_8t']:.2f}x (gate {GATE_SPEEDUP}x), "
+                  f"tail {fresh['tail_8t_vs_solo_p50']:.2f}x solo p50 "
+                  f"(gate {GATE_TAIL}x)")
+            return 0
+        print(f"[check] attempt {attempt}: {len(bad)} gate failure(s)")
+        for b in bad:
+            print(f"    {b}")
+    print(f"[check] FAIL — the serving gates did not pass on any attempt")
+    return 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run (< 30 s) that still writes "
+                         "BENCH_serve.json")
+    ap.add_argument("--check", action="store_true",
+                    help="fresh smoke measurement + within-run gates "
+                         "(no overwrite)")
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(check())
+    rows = serve_throughput(smoke=args.smoke)
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,10 +9,15 @@ fail `make check`, not a matrix test three PRs later.
 """
 from __future__ import annotations
 
-# The 8 in-band token kinds, in wire order.  `BATCH…CLOCK = range(8)`
-# in runtime/transport.py must enumerate exactly these names.
+# The in-band token kinds, in wire order (append-only: a kind byte,
+# once shipped in a frame header, is never reused or renamed).
+# `BATCH…CANCEL = range(9)` in runtime/transport.py must enumerate
+# exactly these names.  CANCEL (v10) is the flush fence: the gateway
+# submits it behind canceled in-flight batches; workers forward it and,
+# for flush-cancels, skip compute on every batch ahead of it.
 TOKEN_KINDS: tuple[str, ...] = (
     "BATCH", "WARMUP", "PROBE", "RECONFIG", "STATS", "STOP", "ERROR", "CLOCK",
+    "CANCEL",
 )
 
 # Codec wire codes are append-only: a code, once shipped in a frame

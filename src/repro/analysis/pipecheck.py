@@ -5,7 +5,7 @@ An AST pass (no imports of the checked code, no execution) that holds
 catch dynamically:
 
   R1  every ``kind ==`` / ``kind in`` dispatch ladder over transport
-      tokens is exhaustive for the 8 kinds or ends in an explicit
+      tokens is exhaustive for every manifest kind or ends in an explicit
       default (``else``) / falls through to further handling — silent
       token drops are how protocol bugs hide.
   R2  codec registry wire codes are append-only and collision-free
@@ -230,7 +230,7 @@ def _check_r1(rel: str, tree: ast.Module) -> list[Finding]:
                     "non-exhaustive token dispatch: handles "
                     f"{{{', '.join(sorted(covered))}}}, silently drops "
                     f"{{{', '.join(missing)}}}; add an else that raises "
-                    "TransportError or cover all 8 kinds",
+                    f"TransportError or cover all {len(all_kinds)} kinds",
                 ))
             i = max(j, i + 1)
     return findings

@@ -324,3 +324,92 @@ def get_fault_plan(name: str):
     except KeyError:
         raise KeyError(
             f"unknown fault plan {name!r}; have {sorted(FAULT_PLANS)}") from None
+
+
+# --------------------------------------------------------------------------- #
+# Named tenant mixes — multi-tenant workload specs for the serving
+# gateway (runtime/serve.py).  A mix is pure data, like a Scenario: who
+# the tenants are, their latency SLOs, and the arrival pattern the
+# fairness matrix / bench drive them with.
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant of the serving gateway: its latency SLO and the
+    workload shape it contributes to a mix."""
+
+    name: str
+    slo_s: float = 0.5              # per-request latency SLO (queue+service)
+    weight: float = 1.0             # relative admission share in the mix
+    burst: int = 1                  # requests dumped per arrival event
+
+    def __post_init__(self):
+        if self.slo_s <= 0:
+            raise ValueError(f"tenant {self.name}: need slo_s > 0")
+        if self.burst < 1:
+            raise ValueError(f"tenant {self.name}: need burst >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantMix:
+    """A named multi-tenant workload: the tenants plus how their
+    requests arrive ("uniform" = one request per tenant per round,
+    "bursty" = each tenant dumps its ``burst`` requests per round)."""
+
+    name: str
+    tenants: tuple[TenantSpec, ...]
+    arrival: str = "uniform"
+
+    def __post_init__(self):
+        if self.arrival not in ("uniform", "bursty"):
+            raise ValueError(f"unknown arrival pattern {self.arrival!r}")
+        names = [t.name for t in self.tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"mix {self.name}: duplicate tenant names")
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.tenants)
+
+    def spec(self, name: str) -> TenantSpec:
+        for t in self.tenants:
+            if t.name == name:
+                return t
+        raise KeyError(f"mix {self.name} has no tenant {name!r}")
+
+
+def _uniform_tenants(n: int, slo_s: float = 0.5) -> tuple[TenantSpec, ...]:
+    return tuple(TenantSpec(f"tenant{i}", slo_s=slo_s) for i in range(n))
+
+
+def _bursty_tenants(n: int, slo_s: float = 0.5,
+                    burst: int = 4) -> tuple[TenantSpec, ...]:
+    # alternate steady and bursty tenants so the mix actually mixes
+    return tuple(TenantSpec(f"tenant{i}", slo_s=slo_s,
+                            burst=burst if i % 2 else 1) for i in range(n))
+
+
+def _mixed_slo_tenants(n: int = 8) -> tuple[TenantSpec, ...]:
+    # SLOs spread over an order of magnitude: strict interactive
+    # tenants next to lax batch ones, the fleet controller's worst case
+    slos = (0.15, 0.3, 0.5, 0.75, 1.0, 1.25, 1.5, 2.0)
+    return tuple(TenantSpec(f"tenant{i}", slo_s=slos[i % len(slos)])
+                 for i in range(n))
+
+
+TENANT_MIXES: dict[str, "TenantMix"] = {
+    "duo_uniform": TenantMix("duo_uniform", _uniform_tenants(2)),
+    "duo_bursty": TenantMix("duo_bursty", _bursty_tenants(2),
+                            arrival="bursty"),
+    "octet_uniform": TenantMix("octet_uniform", _uniform_tenants(8)),
+    "octet_bursty": TenantMix("octet_bursty", _bursty_tenants(8),
+                              arrival="bursty"),
+    "octet_mixed_slo": TenantMix("octet_mixed_slo", _mixed_slo_tenants(8)),
+}
+
+
+def get_tenant_mix(name: str) -> TenantMix:
+    try:
+        return TENANT_MIXES[name]
+    except KeyError:
+        raise KeyError(f"unknown tenant mix {name!r}; "
+                       f"have {sorted(TENANT_MIXES)}") from None

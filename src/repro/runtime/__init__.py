@@ -29,6 +29,14 @@ Public API:
                                         (``EdgePipeline(fault_plan=...)``)
                                         and the supervised-recovery
                                         records it produces
+    Gateway, ClientSession,
+    QoSRecord, drain_qos,
+    FleetController, FleetObjectives,
+    CancelRecord                      — the multi-tenant serving gateway
+                                        (micro-batching, SLO-aware AIMD
+                                        admission, per-request QoS,
+                                        CANCEL-fence flush) and the
+                                        fleet-objective controller
 """
 from .adaptive import AdaptiveRuntime
 from .edge import EdgePipeline, PipelineResult, StageStats, Worker
@@ -36,8 +44,10 @@ from .faults import (BackoffPolicy, ChaosChannel, FaultEvent, FaultPlan,
                      RecoveryRecord, drain_injections, drain_recoveries)
 from .sanitizer import (SanitizedChannel, SanitizerError, Violation,
                         drain_violations)
-from .session import (AdaptiveController, Controller, LoopRecord,
-                      MigrationPolicy, PinnedController, Session)
+from .serve import (ClientSession, FleetController, FleetObjectives, Gateway,
+                    QoSRecord, drain_qos)
+from .session import (AdaptiveController, CancelRecord, Controller,
+                      LoopRecord, MigrationPolicy, PinnedController, Session)
 from .transport import (Channel, HopSpec, TransferRecord, Transport,
                         TransportError, TransportTimeout, get_transport,
                         record_trace, register_transport)
@@ -45,11 +55,13 @@ from .transport import (Channel, HopSpec, TransferRecord, Transport,
 __all__ = [
     "AdaptiveRuntime", "LoopRecord",
     "Session", "Controller", "PinnedController", "AdaptiveController",
-    "MigrationPolicy",
+    "MigrationPolicy", "CancelRecord",
     "EdgePipeline", "PipelineResult", "StageStats", "Worker",
     "Channel", "HopSpec", "TransferRecord", "Transport", "TransportError",
     "TransportTimeout", "get_transport", "record_trace", "register_transport",
     "SanitizedChannel", "SanitizerError", "Violation", "drain_violations",
     "FaultPlan", "FaultEvent", "ChaosChannel", "BackoffPolicy",
     "RecoveryRecord", "drain_recoveries", "drain_injections",
+    "Gateway", "ClientSession", "QoSRecord", "drain_qos",
+    "FleetController", "FleetObjectives",
 ]

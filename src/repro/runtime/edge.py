@@ -55,10 +55,10 @@ from ..core.devices import AnyLink, Link, LinkTrace
 from ..core.scenarios import Scenario
 from . import transport as T
 from .sanitizer import maybe_sanitize, sanitize_enabled
-from .transport import (BATCH, CLOCK, ERROR, PROBE, RECONFIG, STATS, STOP,
-                        WARMUP, Channel, HopMeter, HopSpec, TransferRecord,
-                        TransportError, TransportTimeout, _Serializer,
-                        get_transport)
+from .transport import (BATCH, CANCEL, CLOCK, ERROR, PROBE, RECONFIG, STATS,
+                        STOP, WARMUP, Channel, HopMeter, HopSpec,
+                        TransferRecord, TransportError, TransportTimeout,
+                        _Serializer, get_transport)
 
 Backend = Literal["lightweight", "rpc"]
 
@@ -364,6 +364,7 @@ class _ThreadEngine:
                       if len(self._feed_lanes) > 1 else self._feed_lanes[0])
         self._result = (T.FanInChannel(self._out_lanes)
                         if len(self._out_lanes) > 1 else self._out_lanes[0])
+        self._cancel_epoch = 0                # flush-cancels this session
         self._sthreads = []
         for i in range(k):
             for m in range(r[i]):
@@ -390,6 +391,13 @@ class _ThreadEngine:
         pipe = self.pipe
         last = i == pipe.n_stages - 1
         failed = False
+        # flush-cancel skip window: ``cancel_flush`` bumps the shared
+        # epoch out-of-band (a plain int read — GIL-atomic), so batches
+        # still queued ahead of the in-band CANCEL fence skip compute
+        # and travel on as empty None markers.  The fence (truthy
+        # payload) closes the window.  See transport._worker_main for
+        # the process-engine twin.
+        fence_seen = 0
         while True:
             try:
                 # bounded wait (pipecheck R6): a wedged upstream must not
@@ -404,7 +412,15 @@ class _ThreadEngine:
                 continue                      # blocks on a full queue
             try:
                 if kind == BATCH:
-                    egress.send(self.stage_workers[i][m].run(obj), kind=BATCH)
+                    if obj is None or fence_seen < self._cancel_epoch:
+                        egress.send(None, kind=BATCH)  # canceled: marker
+                    else:
+                        egress.send(self.stage_workers[i][m].run(obj),
+                                    kind=BATCH)
+                elif kind == CANCEL:
+                    if obj:
+                        fence_seen += 1
+                    egress.send(obj, kind=CANCEL)
                 elif kind == WARMUP:
                     egress.send(self.stage_workers[i][m].warmup(obj),
                                 kind=WARMUP)
@@ -434,7 +450,7 @@ class _ThreadEngine:
                     # forwarding (pipecheck R1)
                     raise TransportError(
                         f"stage {i}.{m}: unexpected "
-                        f"{T._KIND_NAMES[kind] if 0 <= kind < 8 else kind} "
+                        f"{T._KIND_NAMES[kind] if 0 <= kind < len(T._KIND_NAMES) else kind} "
                         f"token in session stream")
             except BaseException as e:        # noqa: BLE001 — reported
                 failed = True
@@ -449,6 +465,11 @@ class _ThreadEngine:
 
     def submit_token(self, kind: int, obj=None) -> None:
         self._feed.send(obj, kind=kind)
+
+    def cancel_flush(self) -> None:
+        """Open a skip window: batches already in flight short-circuit
+        compute until the next flush CANCEL fence passes each stage."""
+        self._cancel_epoch += 1
 
     def poll(self, timeout: float):
         deadline = time.perf_counter() + timeout
@@ -779,6 +800,19 @@ class _ProcessEngine:
 
     def submit_token(self, kind: int, obj=None) -> None:
         self._send(obj, kind=kind)
+
+    def cancel_flush(self) -> None:
+        """Out-of-band skip command: a ("cancel",) ctrl message to every
+        live worker opens its skip window (batches ahead of the next
+        flush CANCEL fence short-circuit compute and travel as empty
+        markers).  Best-effort — a worker that misses it just computes
+        results the session will drop anyway."""
+        for w, c in enumerate(self._ctrls):
+            try:
+                if self._procs[w].is_alive():
+                    c.send(("cancel",))
+            except (OSError, ValueError):
+                pass                          # dying worker: skip is moot
 
     def _send(self, payload, kind: int) -> None:
         """Feed send with the liveness loop the seed lacked: a blocked

@@ -55,7 +55,7 @@ __all__ = [
 # across cut placements.
 FEED_HOP = -1
 
-# Frame kind used by header corruption: outside the 0..7 token range, so a
+# Frame kind used by header corruption: outside the 0..8 token range, so a
 # sanitized receiver flags it (kind-range violation in the worker, which
 # the supervisor turns into a recovery) and an unsanitized worker's
 # dispatch ladder silently drops it (stall detection recovers instead).

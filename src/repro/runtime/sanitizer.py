@@ -62,7 +62,7 @@ from .transport import (
 
 __all__ = [
     "SanitizerError", "Violation", "SanitizedChannel",
-    "drain_violations", "maybe_sanitize", "sanitize_enabled",
+    "deep_enabled", "drain_violations", "maybe_sanitize", "sanitize_enabled",
 ]
 
 
@@ -122,7 +122,17 @@ def maybe_sanitize(chan):
 _SAMPLE = 16  # elements hashed from each end of a batch
 
 
+def deep_enabled() -> bool:
+    """``REPRO_SANITIZE_DEEP=1``: hash the *full* payload instead of a
+    head/tail sample.  Read per call so a test can flip it; the cost is
+    one crc32 pass over every batch on every sanitized hop, which is
+    why it is the slow-tier CI setting and not the default."""
+    return os.environ.get("REPRO_SANITIZE_DEEP", "") not in ("", "0")
+
+
 def _content_crc(arr: np.ndarray) -> int:
+    if deep_enabled():
+        return zlib.crc32(np.ascontiguousarray(arr).tobytes())
     flat = arr.ravel()  # view for contiguous payloads (the common case)
     return zlib.crc32(flat[:_SAMPLE].tobytes() + flat[-_SAMPLE:].tobytes())
 
@@ -190,7 +200,8 @@ class SanitizedChannel:
     def _check_kind(self, kind, seq: int) -> None:
         if not isinstance(kind, int) or not 0 <= kind < len(_KIND_NAMES):
             self._violate("kind-range", seq, -1,
-                          f"token kind {kind!r} outside the 8-kind protocol")
+                          f"token kind {kind!r} outside the "
+                          f"{len(_KIND_NAMES)}-kind protocol")
 
     def _content_checked(self) -> bool:
         # a coded hop rewrites payload bytes in flight; only structural

@@ -51,8 +51,8 @@ from typing import TYPE_CHECKING, Literal, Protocol, Sequence, runtime_checkable
 import numpy as np
 
 from ..core.autosplit import AdaptiveSplitter, LinkEstimator
-from .transport import (BATCH, CLOCK, ERROR, PROBE, RECONFIG, STATS, STOP,
-                        WARMUP, TransportError, TransportTimeout)
+from .transport import (BATCH, CANCEL, CLOCK, ERROR, PROBE, RECONFIG, STATS,
+                        STOP, WARMUP, TransportError, TransportTimeout)
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .edge import EdgePipeline
@@ -278,7 +278,23 @@ class AdaptiveController:
 
 
 # in-band tokens whose round trip a session tracks (kind -> outstanding)
-_TOKEN_KINDS = (PROBE, RECONFIG, STATS, WARMUP, CLOCK)
+_TOKEN_KINDS = (PROBE, RECONFIG, STATS, WARMUP, CLOCK, CANCEL)
+
+
+@dataclass
+class CancelRecord:
+    """One canceled in-flight batch: the resubmit-or-skip bookkeeping a
+    drop-policy gateway needs to account for flushed work.  Mutable —
+    ``flushed`` flips when the canceled batch's (discarded) arrival
+    drains, ``resubmitted_as`` is stamped when its payload re-enters
+    the queue as a fresh seq."""
+
+    seq: int
+    action: str                     # "skip" | "resubmit"
+    flush: bool                     # part of a flush (cancel-all) window
+    t_cancel_s: float
+    flushed: bool = False           # its arrival has been discarded
+    resubmitted_as: int = -1        # new seq when the payload was re-fed
 
 
 class Session:
@@ -335,6 +351,9 @@ class Session:
         self._next_emit = 0             # next id results() hands out
         self._arrivals: deque = deque(maxlen=max(window, 2))
         self._expect = {k: 0 for k in _TOKEN_KINDS}
+        self._canceled: set[int] = set()      # seqs results() must skip
+        self._cancel_live: dict[int, CancelRecord] = {}   # awaiting flush
+        self._cancel_log: list[CancelRecord] = []
         self._exemplar = None
         self._failed = False
         self._migrating = False
@@ -370,6 +389,14 @@ class Session:
     def outstanding(self) -> int:
         return len(self._pending)
 
+    @property
+    def backlog(self) -> int:
+        """Submitted batches whose emit slot has not been handed out
+        yet: in flight, ready-but-unemitted (a re-entrant controller
+        pump can park arrivals in the ready map with nothing left
+        pending), or canceled-awaiting-skip."""
+        return self._next_seq - self._next_emit
+
     # ------------------------------------------------------------------ #
     def submit(self, x) -> int:
         """Feed one batch; blocks (pumping results) while ``inflight``
@@ -385,7 +412,10 @@ class Session:
         self._exemplar = x
         shape = getattr(x, "shape", ())       # no host copy on the hot path
         bsz = int(shape[0]) if shape else 1
-        kept = np.asarray(x) if self._retain else None
+        # supervised engines need a host copy (replay outlives the
+        # device buffers); otherwise keep the caller's reference — free,
+        # and it is what cancel(resubmit=True) re-feeds
+        kept = np.asarray(x) if self._retain else x
         self._pending[seq] = (time.perf_counter(), self.pipe.cuts, bsz, kept)
         self._engine.submit(x)
         return seq
@@ -396,6 +426,9 @@ class Session:
         more while iterating extends it)."""
         while self._next_emit < self._next_seq:
             self._check_failed()
+            if self._next_emit in self._canceled:
+                self._next_emit += 1          # canceled: no value to yield
+                continue
             while self._next_emit not in self._ready:
                 self._pump()
             seq = self._next_emit
@@ -411,6 +444,102 @@ class Session:
 
     def latency_of(self, seq: int) -> float:
         return self._records[seq].latency_s if seq in self._records else 0.0
+
+    def set_inflight(self, n: int) -> int:
+        """Retune the admission window mid-stream (the serving
+        gateway's AIMD control plane).  Clamped to [1, engine cap];
+        returns the window actually applied.  Shrinking never evicts
+        in-flight batches — ``submit`` simply blocks until the window
+        drains below the new bound."""
+        n = max(int(n), 1)
+        cap = self._engine.max_inflight()
+        if cap is not None:
+            n = min(n, cap)
+        self.inflight = n
+        return n
+
+    # ------------------------------------------------------------------ #
+    def cancel(self, seqs: Sequence[int] | None = None, *,
+               resubmit: bool = False) -> list[int]:
+        """Cancel in-flight (or ready-but-unemitted) batches.
+
+        ``seqs=None`` cancels the whole in-flight window — a *flush*
+        cancel: the engine opens an out-of-band skip window (workers
+        short-circuit compute on batches already queued) and an in-band
+        ``CANCEL`` fence closes it behind them, so the flush confirms
+        without paying for the canceled compute.  Explicit ``seqs``
+        cancel selectively: those batches still compute, but their
+        arrivals are discarded.
+
+        Canceled seqs never reach ``results()`` or the controller; each
+        is logged as a :class:`CancelRecord` (see ``drain_cancels``).
+        With ``resubmit=True`` every canceled batch whose payload the
+        session still holds is immediately re-submitted at the back of
+        the queue (``resubmitted_as`` maps old seq to new).
+
+        Returns the seqs actually canceled (already-emitted or
+        already-canceled seqs are skipped silently)."""
+        if self.closed:
+            raise RuntimeError("session is closed")
+        self._check_failed()
+        flush = seqs is None
+        if flush:
+            targets = sorted(s for s in self._pending
+                             if s not in self._canceled)
+        else:
+            targets = []
+            for s in {int(s) for s in seqs}:
+                if s >= self._next_seq:
+                    raise ValueError(f"seq {s} was never submitted")
+                if (s in self._canceled or s < self._next_emit
+                        or (s not in self._pending
+                            and s not in self._ready)):
+                    continue
+                targets.append(s)
+            targets.sort()
+        if not targets:
+            return []
+        now = time.perf_counter()
+        action = "resubmit" if resubmit else "skip"
+        payloads = {}
+        made: dict[int, CancelRecord] = {}
+        for s in targets:
+            if s in self._pending:
+                payloads[s] = self._pending[s][3]
+            rec = CancelRecord(seq=s, action=action, flush=flush,
+                               t_cancel_s=now)
+            if s in self._ready:              # already arrived: flushed now
+                self._ready.pop(s)
+                rec.flushed = True
+            else:
+                self._cancel_live[s] = rec
+            self._canceled.add(s)
+            self._cancel_log.append(rec)
+            made[s] = rec
+        if flush:
+            cancel_flush = getattr(self._engine, "cancel_flush", None)
+            if cancel_flush is not None:
+                cancel_flush()                # out-of-band: skip compute
+        # the in-band fence: a truthy payload marks a flush fence (it
+        # closes the skip window at each stage); selective cancels send
+        # a non-flush fence purely as a flush-progress marker
+        self._engine.submit_token(CANCEL, 1 if flush else None)
+        self._expect[CANCEL] += 1
+        if resubmit:
+            # records are mutable and shared with the log, so stamp via
+            # the local reference — submit() pumps while the window is
+            # full, and the pump may pop _cancel_live[s] before we read
+            for s in targets:
+                if s in payloads and payloads[s] is not None:
+                    made[s].resubmitted_as = self.submit(payloads[s])
+        return targets
+
+    def drain_cancels(self) -> list[CancelRecord]:
+        """Return-and-clear the cancel log (records are shared with the
+        live flush tracker, so a record drained before its batch has
+        flushed will still flip ``flushed`` when it does)."""
+        out, self._cancel_log = self._cancel_log, []
+        return out
 
     # ------------------------------------------------------------------ #
     def checkpoint(self, probe: bool = True) -> None:
@@ -513,19 +642,28 @@ class Session:
         if kind == BATCH:
             seq = self._next_arrival
             self._next_arrival += 1
-            t_sub, cuts, bsz, _ = self._pending.pop(seq)
-            now = time.perf_counter()
-            self._arrivals.append((now, bsz))
-            self._ready[seq] = obj if self.keep_results else None
-            rec = self.controller.on_result(self, seq, now - t_sub, cuts)
-            if rec is not None:
-                self._records[seq] = rec
-                if self.record_cap:             # evict oldest beyond the cap
-                    while len(self._records) > self.record_cap:
-                        while self._rec_lo not in self._records:
+            if seq in self._canceled:
+                # a canceled batch flushing through: discard the arrival
+                # — no result, no controller callback, no throughput
+                # sample (skip markers complete unrealistically fast)
+                self._pending.pop(seq, None)
+                crec = self._cancel_live.pop(seq, None)
+                if crec is not None:
+                    crec.flushed = True
+            else:
+                t_sub, cuts, bsz, _ = self._pending.pop(seq)
+                now = time.perf_counter()
+                self._arrivals.append((now, bsz))
+                self._ready[seq] = obj if self.keep_results else None
+                rec = self.controller.on_result(self, seq, now - t_sub, cuts)
+                if rec is not None:
+                    self._records[seq] = rec
+                    if self.record_cap:         # evict oldest beyond the cap
+                        while len(self._records) > self.record_cap:
+                            while self._rec_lo not in self._records:
+                                self._rec_lo += 1
+                            del self._records[self._rec_lo]
                             self._rec_lo += 1
-                        del self._records[self._rec_lo]
-                        self._rec_lo += 1
             # a degraded pipeline restaffs to full replica strength at
             # the first quiescent point (nothing in flight to replay)
             if (getattr(self._engine, "_restaff_needed", False)

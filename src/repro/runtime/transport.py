@@ -60,11 +60,15 @@ import numpy as np
 from ..core.devices import (AnyLink, Link, LinkTrace, attribute_bandwidth,
                             fit_link_params)
 
-# message kinds (in-band, ordered with the batches around them)
-BATCH, WARMUP, PROBE, RECONFIG, STATS, STOP, ERROR, CLOCK = range(8)
+# message kinds (in-band, ordered with the batches around them).
+# CANCEL is the flush fence: submitted behind canceled in-flight
+# batches, forwarded stage to stage, and — when its payload is truthy
+# (a flush-cancel) — it closes the out-of-band skip window the engine
+# opened, so workers stop short-circuiting compute.
+BATCH, WARMUP, PROBE, RECONFIG, STATS, STOP, ERROR, CLOCK, CANCEL = range(9)
 
 _KIND_NAMES = ("BATCH", "WARMUP", "PROBE", "RECONFIG", "STATS", "STOP",
-               "ERROR", "CLOCK")
+               "ERROR", "CLOCK", "CANCEL")
 
 
 class TransportError(RuntimeError):
@@ -694,7 +698,7 @@ class SocketChannel(Channel):
                 raise TransportError(
                     f"hop {self.hop.index}: wire gap — frame(s) lost "
                     f"(seq {seq} after {self._rx_seen})")
-            if not 0 <= kind <= CLOCK:
+            if not 0 <= kind <= CANCEL:
                 raise TransportError(
                     f"hop {self.hop.index}: corrupt frame header "
                     f"(kind=0x{kind:02x})")
@@ -1164,7 +1168,7 @@ class ShmemChannel(Channel):
                 raise TransportError(
                     f"hop {self.hop.index}: wire gap — frame(s) lost "
                     f"(seq {seq} after {self._rx_seen})")
-            if not 0 <= kind <= CLOCK:
+            if not 0 <= kind <= CANCEL:
                 raise TransportError(
                     f"hop {self.hop.index}: corrupt frame header "
                     f"(kind=0x{kind:02x})")
@@ -1552,7 +1556,18 @@ def _worker_main(spec: dict) -> None:
     try:
         worker = build(bounds)
         ctrl.send(("ready", stage))
+        # flush-cancel skip window: the parent's out-of-band ("cancel",)
+        # ctrl message overtakes the in-band stream, so batches already
+        # queued ahead of the CANCEL fence skip compute and travel as
+        # empty None markers (preserving arrival accounting).  The fence
+        # itself (a truthy CANCEL payload) closes the window.  Purely an
+        # optimization: the session drops canceled arrivals either way.
+        cancel_target = fence_seen = 0
         while not stop.is_set():
+            while ctrl.poll(0):
+                msg = ctrl.recv()
+                if isinstance(msg, tuple) and msg and msg[0] == "cancel":
+                    cancel_target += 1
             try:
                 kind, obj = ingress.recv(timeout=0.25)
             except TransportTimeout:
@@ -1561,10 +1576,18 @@ def _worker_main(spec: dict) -> None:
                 egress.send(None, kind=STOP)
                 break
             elif kind == BATCH:
-                # as_jax: dlpack-alias the (possibly shmem-slot-backed)
-                # view straight into jax; run() blocks until ready, so
-                # the compute is done before the next recv releases it
-                egress.send(np.asarray(worker.run(as_jax(obj))), kind=BATCH)
+                if obj is None or fence_seen < cancel_target:
+                    egress.send(None, kind=BATCH)   # canceled: flush marker
+                else:
+                    # as_jax: dlpack-alias the (possibly shmem-slot-backed)
+                    # view straight into jax; run() blocks until ready, so
+                    # the compute is done before the next recv releases it
+                    egress.send(np.asarray(worker.run(as_jax(obj))),
+                                kind=BATCH)
+            elif kind == CANCEL:
+                if obj:
+                    fence_seen += 1
+                egress.send(obj, kind=CANCEL)
             elif kind == WARMUP:
                 egress.send(np.asarray(worker.warmup(as_jax(obj))),
                             kind=WARMUP)

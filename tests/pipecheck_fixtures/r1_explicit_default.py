@@ -1,9 +1,9 @@
 """R1 fixture (clean): the same dispatch shape made compliant three
-ways — an else that raises, full 8-kind coverage, and a trailing
+ways — an else that raises, full 9-kind coverage, and a trailing
 default statement."""
-BATCH, WARMUP, PROBE, RECONFIG, STATS, STOP, ERROR, CLOCK = range(8)
+BATCH, WARMUP, PROBE, RECONFIG, STATS, STOP, ERROR, CLOCK, CANCEL = range(9)
 
-_TOKENS = (PROBE, RECONFIG, STATS, WARMUP, CLOCK)
+_TOKENS = (PROBE, RECONFIG, STATS, WARMUP, CLOCK, CANCEL)
 
 
 def pump_with_else(chan):

@@ -1,6 +1,6 @@
 """R1 fixture: a worker loop that dispatches on token kinds but
 silently drops everything it does not name (no else, no coverage of
-all 8 kinds, nothing after the ladder)."""
+all manifest kinds, nothing after the ladder)."""
 BATCH, WARMUP, PROBE, RECONFIG, STATS, STOP, ERROR, CLOCK = range(8)
 
 

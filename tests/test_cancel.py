@@ -1,0 +1,178 @@
+"""CANCEL protocol: flush fences, selective cancels, resubmit-or-skip
+bookkeeping, and cancel-mid-flight over the process transports.
+
+CANCEL (token kind 8) is the ninth wire kind: a flush cancel opens an
+out-of-band skip window at every stage (workers short-circuit compute
+on batches already queued) and the in-band CANCEL fence closes it; a
+selective cancel still computes but its arrival is discarded by the
+session.  Either way the canceled seq never reaches ``results()`` and
+is logged as a :class:`CancelRecord`.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.devices import LAN_PI_GPU
+from repro.runtime import CancelRecord, EdgePipeline, drain_violations
+
+
+def _tiny_model():
+    from repro.models.cnn.layers import (Conv2D, Flatten, Linear, Pool,
+                                         ReLU, Sequential)
+    from repro.models.cnn.zoo import CNNModel
+    blocks = [
+        ("conv0", Sequential([Conv2D(3, 8, 3, 1, 1), ReLU()])),
+        ("conv1", Sequential([Conv2D(8, 8, 3, 1, 1), ReLU()])),
+        ("pool", Pool("max", 2, 2)),
+        ("conv2", Sequential([Conv2D(8, 16, 3, 1, 1), ReLU()])),
+        ("head", Sequential([Flatten(), Linear(16 * 16 * 16, 10)])),
+    ]
+    return CNNModel("tinycnn", blocks, input_hw=32)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    m = _tiny_model()
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _batches(n, batch=2, hw=32):
+    return [np.asarray(jax.random.normal(jax.random.PRNGKey(100 + i),
+                                         (batch, hw, hw, 3)))
+            for i in range(n)]
+
+
+# --------------------------------------------------------------------------- #
+# manifest: CANCEL is an append-only extension
+# --------------------------------------------------------------------------- #
+def test_cancel_kind_appended_to_manifest():
+    """CANCEL rides as kind 8 — appended after CLOCK, never renumbering
+    the existing kinds (old captures must replay against new code)."""
+    from repro.analysis.manifest import TOKEN_KINDS
+    from repro.runtime import transport as T
+    assert TOKEN_KINDS[-1] == "CANCEL"
+    assert TOKEN_KINDS.index("CANCEL") == T.CANCEL == 8
+    assert TOKEN_KINDS[:8] == ("BATCH", "WARMUP", "PROBE", "RECONFIG",
+                               "STATS", "STOP", "ERROR", "CLOCK")
+    assert len(T._KIND_NAMES) == len(TOKEN_KINDS)
+
+
+# --------------------------------------------------------------------------- #
+# thread engine (emulated): semantics
+# --------------------------------------------------------------------------- #
+def test_cancel_flush_and_selective_emulated(tiny):
+    m, params = tiny
+    xs = _batches(8)
+    refs = [np.asarray(m.apply(params, x)) for x in xs]
+    pipe = EdgePipeline(m, params, 2, [LAN_PI_GPU], sanitize=True)
+    pipe.warmup(xs[0])
+    with pipe.session(inflight=4) as s:
+        for i in range(4):
+            s.submit(xs[i])
+        canceled = s.cancel()                 # flush the whole window
+        assert canceled == [0, 1, 2, 3]
+        s4, s5 = s.submit(xs[4]), s.submit(xs[5])
+        sel = s.cancel([s5])                  # selective: still computes
+        assert sel == [s5]
+        # double-cancel and out-of-range seqs
+        assert s.cancel([s5]) == []           # already canceled: silent
+        with pytest.raises(ValueError, match="never submitted"):
+            s.cancel([99])
+        out = s.drain()
+        recs = s.drain_cancels()
+    # only the one surviving batch reaches results(), bit-exact
+    assert len(out) == 1
+    assert np.array_equal(np.asarray(out[0]), refs[4])
+    # five records, every flushed arrival accounted for
+    assert [r.seq for r in recs] == [0, 1, 2, 3, s5]
+    assert all(isinstance(r, CancelRecord) and r.flushed for r in recs)
+    assert all(r.flush for r in recs[:4]) and not recs[4].flush
+    assert all(r.action == "skip" and r.resubmitted_as == -1 for r in recs)
+    assert s.drain_cancels() == []            # return-and-clear
+    assert drain_violations() == []
+    pipe.close()
+
+
+def test_cancel_resubmit_redelivers_bit_identical(tiny):
+    m, params = tiny
+    xs = _batches(4)
+    refs = [np.asarray(m.apply(params, x)) for x in xs]
+    pipe = EdgePipeline(m, params, 2, [LAN_PI_GPU], sanitize=True)
+    pipe.warmup(xs[0])
+    with pipe.session(inflight=4) as s:
+        for x in xs:
+            s.submit(x)
+        canceled = s.cancel(resubmit=True)
+        assert canceled == [0, 1, 2, 3]
+        out = s.drain()
+        recs = s.drain_cancels()
+    # every payload re-fed at the back of the queue, in order, bit-exact
+    assert len(out) == 4
+    for ref, y in zip(refs, out):
+        assert np.array_equal(np.asarray(y), ref)
+    assert [r.resubmitted_as for r in recs] == [4, 5, 6, 7]
+    assert all(r.action == "resubmit" and r.flushed for r in recs)
+    assert drain_violations() == []
+    pipe.close()
+
+
+def test_cancel_skips_already_emitted(tiny):
+    m, params = tiny
+    xs = _batches(3)
+    pipe = EdgePipeline(m, params, 2, [LAN_PI_GPU], sanitize=True)
+    pipe.warmup(xs[0])
+    with pipe.session(inflight=3) as s:
+        for x in xs:
+            s.submit(x)
+        it = s.results()
+        next(it)                              # seq 0 emitted
+        assert s.cancel([0]) == []            # emitted: silently skipped
+        assert s.cancel([1]) == [1]
+        rest = list(it)
+    assert len(rest) == 1                     # seq 2 only
+    assert drain_violations() == []
+    pipe.close()
+
+
+def test_set_inflight_clamps_and_applies(tiny):
+    m, params = tiny
+    pipe = EdgePipeline(m, params, 2, [LAN_PI_GPU])
+    with pipe.session(inflight=4) as s:
+        assert s.set_inflight(2) == 2
+        assert s.inflight == 2
+        assert s.set_inflight(0) == 1         # floor
+        cap = pipe._engine.max_inflight()
+        if cap is not None:
+            assert s.set_inflight(10 ** 6) == cap
+    pipe.close()
+
+
+# --------------------------------------------------------------------------- #
+# process engines: cancel mid-flight over real transports
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("transport", ["socket", "shmem"])
+def test_cancel_mid_flight_process(tiny, transport):
+    """Flush-cancel while batches are genuinely in flight inside worker
+    processes: the ctrl-pipe skip window plus the in-band fence must
+    flush every pending batch, and the one uncanceled batch afterwards
+    must come back bit-identical — all under the live sanitizer."""
+    m, params = tiny
+    xs = _batches(6)
+    ref5 = np.asarray(m.apply(params, xs[5]))
+    pipe = EdgePipeline(m, params, 2, [LAN_PI_GPU], transport=transport,
+                        sanitize=True, timeout_s=120)
+    with pipe:
+        pipe.warmup(xs[0])
+        with pipe.session(inflight=4) as s:
+            for i in range(4):
+                s.submit(xs[i])
+            canceled = s.cancel()             # mid-flight flush
+            s4, s5 = s.submit(xs[4]), s.submit(xs[5])
+            sel = s.cancel([s4])
+            out = s.drain()
+            recs = s.drain_cancels()
+        assert canceled == [0, 1, 2, 3] and sel == [s4]
+        assert len(out) == 1
+        assert np.array_equal(np.asarray(out[0]), ref5)
+        assert all(r.flushed for r in recs)
+    assert drain_violations() == []

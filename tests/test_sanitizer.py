@@ -234,3 +234,43 @@ def test_sanitizer_overhead_is_small():
     m_sani = float(np.median(sani))
     assert m_sani <= m_base * 1.5 + 100e-6, \
         f"sanitizer overhead too high: {m_base*1e6:.1f}µs -> {m_sani*1e6:.1f}µs"
+
+
+# --------------------------------------------------------------------------- #
+# deep mode: full-payload fingerprints (REPRO_SANITIZE_DEEP=1)
+# --------------------------------------------------------------------------- #
+def test_shallow_sample_misses_interior_corruption(monkeypatch):
+    """The default fingerprint hashes a head/tail sample — corruption
+    strictly between the samples passes.  This is the documented gap
+    that deep mode exists to close (and the control for the test
+    below)."""
+    monkeypatch.delenv("REPRO_SANITIZE_DEEP", raising=False)
+    inner = _Loopback(_Hop())
+    ch = _wrap(inner)
+    x = np.arange(64, dtype=np.float32)
+    ch.send(x.copy(), kind=BATCH)
+    inner.q[0][1][32] = -1.0                  # flip one interior element
+    ch.recv()
+    assert drain_violations() == []
+
+
+def test_deep_sanitize_catches_interior_corruption(monkeypatch):
+    """``REPRO_SANITIZE_DEEP=1`` crc32s the whole payload, so the same
+    interior flip the sampled fingerprint missed above now raises."""
+    monkeypatch.setenv("REPRO_SANITIZE_DEEP", "1")
+    inner = _Loopback(_Hop())
+    ch = _wrap(inner)
+    x = np.arange(64, dtype=np.float32)
+    ch.send(x.copy(), kind=BATCH)
+    inner.q[0][1][32] = -1.0
+    _assert_raises_with_rule("seq-order", ch.recv)
+
+
+def test_deep_enabled_reads_env_per_call(monkeypatch):
+    from repro.runtime.sanitizer import deep_enabled
+    monkeypatch.delenv("REPRO_SANITIZE_DEEP", raising=False)
+    assert not deep_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE_DEEP", "0")
+    assert not deep_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE_DEEP", "1")
+    assert deep_enabled()
